@@ -1,0 +1,136 @@
+"""Roofline reporting: read experiments/dryrun/*.json and emit the
+§Roofline markdown table (per arch × shape × mesh: three terms in seconds,
+dominant bottleneck, MODEL_FLOPS/HLO_FLOPs usefulness ratio, and a one-line
+note on what would move the dominant term).
+
+    PYTHONPATH=src python -m benchmarks.roofline [--dir experiments/dryrun]
+                                                 [--out experiments/roofline.md]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+from repro.launch.dryrun import HBM_BW, ICI_BW, PEAK_FLOPS
+
+NOTES = {
+    "compute": ("compute-bound: raise MXU utilization (bf16 everywhere, "
+                "larger per-chip tiles, fewer remat recomputes)"),
+    "memory": ("memory-bound: cut HBM traffic (fuse elementwise chains, "
+               "smaller remat footprint, flash-attention tiles, bf16 "
+               "activations)"),
+    "collective": ("collective-bound: compress/overlap the exchange "
+                   "(DQGAN int8 two-phase, async collectives, reshard to "
+                   "cut all-gathers)"),
+}
+
+
+def load(dirpath, tag=""):
+    recs = []
+    for fn in sorted(os.listdir(dirpath)):
+        if not fn.endswith(".json"):
+            continue
+        with open(os.path.join(dirpath, fn)) as f:
+            r = json.load(f)
+        if r.get("tag", "") != tag:
+            continue
+        recs.append(r)
+    return recs
+
+
+def fmt(x, digits=4):
+    if x == 0:
+        return "0"
+    if x < 1e-3:
+        return f"{x:.2e}"
+    return f"{x:.{digits}f}"
+
+
+def table(recs):
+    lines = [
+        "| arch | shape | mesh | layout | compute_s | memory_s | "
+        "collective_s | bottleneck | MF/HLO | note |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    shape_order = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2,
+                   "long_500k": 3}
+    recs = sorted(recs, key=lambda r: (r["arch"],
+                                       shape_order.get(r["shape"], 9),
+                                       r["mesh"]))
+    for r in recs:
+        if r["status"] == "skip":
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | skip | "
+                f"skip | skip | — | — | {r['reason'][:60]} |")
+            continue
+        if r["status"] != "ok":
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                f"{r.get('layout','?')} | ERR | ERR | ERR | — | — | "
+                f"{r.get('error','')[:60]} |")
+            continue
+        rf = r["roofline"]
+        chips = r.get("chips", 256)
+        if "analytic_flops" in r:
+            # useful fraction: parameter-FLOPs share of all modeled compute
+            useful = r["mf"] / max(r["analytic_flops"], 1.0)
+        else:
+            useful = r["mf"] / chips / max(r["flops"], 1.0)
+        note = NOTES.get(r["bottleneck"], "")
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['layout']} | "
+            f"{fmt(rf['compute_s'])} | {fmt(rf['memory_s'])} | "
+            f"{fmt(rf['collective_s'])} | **{r['bottleneck']}** | "
+            f"{useful:.2f} | {note[:58]} |")
+    return "\n".join(lines)
+
+
+def pick_hillclimb_pairs(recs):
+    """The three §Perf pairs: worst roofline fraction (most wasteful),
+    most collective-bound, and the most technique-representative train run."""
+    ok = [r for r in recs if r["status"] == "ok"]
+
+    def waste(r):  # low useful-compute fraction = most wasteful
+        if "analytic_flops" in r:
+            # roofline fraction: compute term / total time proxy
+            rf = r["roofline"]
+            tot = max(sum(rf.values()), 1e-12)
+            return rf["compute_s"] / tot
+        chips = r.get("chips", 256)
+        return r["mf"] / chips / max(r["flops"], 1.0)
+
+    worst = min(ok, key=waste, default=None)
+    coll = max(ok, key=lambda r: r["roofline"]["collective_s"]
+               / max(sum(r["roofline"].values()), 1e-12), default=None)
+    train = [r for r in ok if r["shape"] == "train_4k"
+             and r.get("n_workers", 1) > 1]
+    rep = max(train, key=lambda r: r["params"], default=None)
+    return {"worst_fraction": worst, "most_collective_bound": coll,
+            "technique_representative": rep}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--out", default="experiments/roofline.md")
+    args = ap.parse_args(argv)
+    recs = load(args.dir, args.tag)
+    md = [f"# Roofline table ({len(recs)} combos, "
+          f"v5e: {PEAK_FLOPS/1e12:.0f} TF/s, {HBM_BW/1e9:.0f} GB/s HBM, "
+          f"{ICI_BW/1e9:.0f} GB/s ICI)", "", table(recs), ""]
+    picks = pick_hillclimb_pairs(recs)
+    md.append("## Hillclimb picks")
+    for why, r in picks.items():
+        if r:
+            md.append(f"- **{why}**: {r['arch']} × {r['shape']} × {r['mesh']}"
+                      f" (bottleneck: {r.get('bottleneck')})")
+    out = "\n".join(md)
+    with open(args.out, "w") as f:
+        f.write(out)
+    print(out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,32 @@
+"""Quickstart: the paper in one file.
+
+Trains a small GAN on a 2-D Gaussian mixture three ways —
+CPOAdam (full precision), CPOAdam-GQ (8-bit, NO error feedback), and
+DQGAN (8-bit + error feedback, the paper's method) — then prints
+mode coverage and the synthetic Fréchet distance for each.
+
+    PYTHONPATH=src:. python examples/quickstart.py [--steps 1500]
+"""
+import argparse
+import sys
+
+sys.path.insert(0, ".")
+
+from benchmarks.gan_common import train_mixture_gan  # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=1500)
+    args = ap.parse_args()
+    print(f"{'method':14s} {'modes':>6s} {'hq_frac':>8s} {'fid':>9s}")
+    for method in ("CPOAdam", "CPOAdam-GQ", "DQGAN"):
+        final, _, _ = train_mixture_gan(method, steps=args.steps)
+        print(f"{method:14s} {final['modes']:>5d}/8 {final['hq_frac']:>8.3f} "
+              f"{final['fid']:>9.4f}")
+    print("\nDQGAN (quantized + EF) should match CPOAdam's quality with "
+          "1/4 the gradient bytes; CPOAdam-GQ (no EF) degrades.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,27 @@
+"""Serve a small model with batched requests: batched prefill +
+autoregressive decode through the KV/state caches (exercises the same
+serve_step the decode_32k / long_500k dry-run shapes lower).
+
+    PYTHONPATH=src python examples/serve_lm.py --arch mamba2-1.3b
+"""
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.launch import serve
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mamba2-1.3b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--gen", type=int, default=24)
+    args = ap.parse_args()
+    serve.main(["--arch", args.arch, "--smoke", "--batch", str(args.batch),
+                "--prompt-len", "32", "--gen", str(args.gen),
+                "--temperature", "0.8"])
+
+
+if __name__ == "__main__":
+    main()

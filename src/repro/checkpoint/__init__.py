@@ -1,0 +1,84 @@
+"""Checkpointing: flatten any pytree (params / DQState) to a flat dict of
+numpy arrays in an .npz, with the treedef stored as a path index. Sharded
+arrays are gathered to host (process-0 save). Restores into the original
+structure, re-placing onto the provided shardings when given."""
+from __future__ import annotations
+
+import io
+import json
+import os
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _paths(tree):
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in flat:
+        keys = []
+        for p in path:
+            if hasattr(p, "key"):
+                keys.append(str(p.key))
+            elif hasattr(p, "idx"):
+                keys.append(str(p.idx))
+            elif hasattr(p, "name"):
+                keys.append(str(p.name))
+        out.append(("/".join(keys), leaf))
+    return out
+
+
+def save(path: str, tree: Any, step: Optional[int] = None) -> None:
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    named = _paths(tree)
+    arrays = {}
+    for name, leaf in named:
+        if leaf is None:
+            continue
+        arr = np.asarray(jax.device_get(leaf))
+        if arr.dtype == jnp.bfloat16:
+            arrays["__bf16__" + name] = arr.view(np.uint16)
+        else:
+            arrays[name] = arr
+    meta = {"step": step, "names": [n for n, _ in named]}
+    with open(path, "wb") as f:
+        np.savez(f, __meta__=json.dumps(meta), **arrays)
+
+
+def restore(path: str, like: Any, shardings: Any = None) -> Any:
+    """Restore into the structure of `like` (arrays or ShapeDtypeStructs)."""
+    with np.load(path, allow_pickle=False) as z:
+        data = {}
+        for k in z.files:
+            if k == "__meta__":
+                continue
+            if k.startswith("__bf16__"):
+                data[k[len("__bf16__"):]] = z[k].view(jnp.bfloat16)
+            else:
+                data[k] = z[k]
+    named = _paths(like)
+    shard_leaves = None
+    if shardings is not None:
+        shard_leaves = [s for _, s in _paths(shardings)]
+    out = []
+    for i, (name, leaf) in enumerate(named):
+        if leaf is None:
+            out.append(None)
+            continue
+        arr = data[name]
+        if shard_leaves is not None and shard_leaves[i] is not None:
+            out.append(jax.device_put(arr, shard_leaves[i]))
+        else:
+            out.append(jnp.asarray(arr))
+    treedef = jax.tree_util.tree_structure(like)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def latest_step(path: str) -> Optional[int]:
+    if not os.path.exists(path):
+        return None
+    with np.load(path, allow_pickle=False) as z:
+        meta = json.loads(str(z["__meta__"]))
+    return meta.get("step")

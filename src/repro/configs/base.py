@@ -1,0 +1,271 @@
+"""Configuration dataclasses for models, shapes, meshes and the DQGAN run.
+
+Everything is a frozen dataclass so configs are hashable and can be passed
+as static arguments to jit. Each assigned architecture gets one module in
+this package exporting ``CONFIG`` (the exact assigned spec) — use
+``repro.configs.get(name)`` or ``repro.configs.registry()``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    """Mixture-of-experts block settings (qwen3-moe, arctic)."""
+    num_experts: int
+    top_k: int
+    d_ff_expert: int
+    # Arctic runs a small dense FFN residually in parallel with the MoE FFN.
+    dense_residual_d_ff: int = 0
+    capacity_factor: float = 1.25
+    router_aux_coef: float = 1e-2
+    router_z_coef: float = 1e-3
+    # "global": one capacity pool over all tokens (one-hot cumsum across the
+    #   whole batch — simple but serializes across the data axis).
+    # "per_row": capacity per batch row; ranks/scatter stay local to each
+    #   row so the dispatch parallelizes over 'data' with no cross-device
+    #   cumsum (EXPERIMENTS.md §Perf hillclimb 1).
+    dispatch: str = "global"
+
+    @property
+    def has_dense_residual(self) -> bool:
+        return self.dense_residual_d_ff > 0
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    """Mamba2 / SSD settings."""
+    state_dim: int = 128          # N: per-head state size
+    head_dim: int = 64            # P: channels per SSD head
+    expand: int = 2               # d_inner = expand * d_model
+    conv_width: int = 4
+    chunk_size: int = 256         # SSD chunk length
+
+
+@dataclass(frozen=True)
+class RGLRUConfig:
+    """RecurrentGemma / Griffin recurrent-block settings."""
+    conv_width: int = 4
+    expand: int = 1               # rnn width = expand * d_model (RG uses ~1.0x lru_width=2560)
+    c_constant: float = 8.0       # the fixed `c` in a = exp(-c * softplus(Λ) * r)
+
+
+@dataclass(frozen=True)
+class EncDecConfig:
+    """Encoder-decoder (whisper) settings. The audio frontend is a stub:
+    inputs are precomputed frame embeddings of shape (B, enc_seq, d_model)."""
+    enc_layers: int = 4
+    enc_seq: int = 1500
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    arch_type: str                      # dense | moe | ssm | hybrid | vlm | audio
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0                   # 0 -> d_model // num_heads
+    # Layer pattern, cycled over the depth. Entries: 'attn' | 'rglru' | 'ssd'.
+    layer_pattern: Tuple[str, ...] = ("attn",)
+    activation: str = "silu"            # silu | geglu | gelu (geglu/silu are gated)
+    norm: str = "rmsnorm"               # rmsnorm | layernorm
+    use_rope: bool = True
+    rope_theta: float = 10_000.0
+    attention_window: int = 0           # 0 -> global attention; >0 -> sliding window
+    use_bias: bool = False
+    tie_embeddings: bool = False
+    logit_softcap: float = 0.0
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    rglru: Optional[RGLRUConfig] = None
+    encdec: Optional[EncDecConfig] = None
+    # Modality stub: inputs are precomputed embeddings, not token ids.
+    embedding_inputs: bool = False
+    source: str = ""                    # citation for the assigned spec
+    # dtype for activations/params at scale ("float32" for small CPU runs)
+    param_dtype: str = "float32"
+    # scan/remat policy (perf knobs, see EXPERIMENTS.md §Perf)
+    scan_layers: bool = True
+    remat: str = "full"                 # none | full | dots
+    # cross entropy computed in sequence chunks of this many tokens (0 = off)
+    xent_chunk: int = 0
+
+    def __post_init__(self):
+        if self.head_dim == 0:
+            object.__setattr__(self, "head_dim", self.d_model // self.num_heads)
+        assert self.num_heads % max(self.num_kv_heads, 1) == 0, self.name
+
+    # ------------------------------------------------------------------ #
+    @property
+    def supports_long_context(self) -> bool:
+        """True if decoding at 500k tokens is sub-quadratic / bounded-state."""
+        pattern_ok = all(p != "attn" for p in self.layer_pattern) or (
+            self.attention_window > 0
+        )
+        return pattern_ok
+
+    @property
+    def is_encdec(self) -> bool:
+        return self.encdec is not None
+
+    @property
+    def positional(self) -> str:
+        """rope | learned | none. SSM-only stacks need no positions; the
+        learned table is for absolute-position models (whisper)."""
+        if self.use_rope:
+            return "rope"
+        if self.is_encdec:
+            return "learned"
+        return "none"
+
+    def param_count(self) -> int:
+        """Analytic parameter count (used for roofline MODEL_FLOPS = 6ND)."""
+        d, v = self.d_model, self.vocab_size
+        total = v * d  # embedding
+        if not self.tie_embeddings:
+            total += v * d
+        hd = self.head_dim
+        per_layer = {}
+        per_layer["attn"] = (
+            d * self.num_heads * hd          # q
+            + 2 * d * self.num_kv_heads * hd  # k, v
+            + self.num_heads * hd * d         # o
+        )
+        if self.rglru is not None:
+            w = self.rglru.expand * d
+            per_layer["rglru"] = 2 * d * w + w * d + 2 * w * w // 1 + w * self.rglru.conv_width
+        if self.ssm is not None:
+            di = self.ssm.expand * d
+            nheads = di // self.ssm.head_dim
+            conv_ch = di + 2 * self.ssm.state_dim
+            per_layer["ssd"] = (
+                d * (2 * di + 2 * self.ssm.state_dim + nheads)  # z,x,B,C,dt
+                + conv_ch * (self.ssm.conv_width + 1)            # conv w+b
+                + di * d + di                                    # out + norm
+                + 3 * nheads                                     # A_log, D, dt_bias
+            )
+        n_norm = 2 * d
+        if self.moe is not None:
+            ff = 3 * d * self.moe.d_ff_expert * self.moe.num_experts + d * self.moe.num_experts
+            if self.moe.has_dense_residual:
+                ff += 3 * d * self.moe.dense_residual_d_ff
+        else:
+            mult = 3 if self.activation in ("silu", "geglu") else 2
+            ff = mult * d * self.d_ff
+        total_layers = 0
+        for i in range(self.num_layers):
+            kind = self.layer_pattern[i % len(self.layer_pattern)]
+            mixer = per_layer[kind]
+            block_ff = ff if (kind != "ssd" or self.d_ff > 0) else 0
+            total_layers += mixer + block_ff + n_norm
+        total += total_layers + d  # final norm
+        if self.encdec is not None:
+            # encoder layers: self-attn + ff; decoder adds cross-attn per layer
+            enc = self.encdec.enc_layers * (per_layer["attn"] + ff + n_norm)
+            cross = self.num_layers * (per_layer["attn"] + d)
+            total += enc + cross
+        return int(total)
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: only top_k experts count)."""
+        if self.moe is None:
+            return self.param_count()
+        full = self.param_count()
+        d = self.d_model
+        expert_p = 3 * d * self.moe.d_ff_expert
+        inactive = (self.moe.num_experts - self.moe.top_k) * expert_p * self.num_layers
+        return int(full - inactive)
+
+    # ------------------------------------------------------------------ #
+    def reduced(self) -> "ModelConfig":
+        """Small same-family variant for CPU smoke tests:
+        2 layers, d_model<=256, <=4 experts."""
+        d = min(self.d_model, 256)
+        heads = min(self.num_heads, 4)
+        kv = min(self.num_kv_heads, heads)
+        while heads % kv:
+            kv -= 1
+        changes = dict(
+            name=self.name + "-smoke",
+            num_layers=max(2, len(self.layer_pattern)) if len(self.layer_pattern) > 1 else 2,
+            d_model=d,
+            num_heads=heads,
+            num_kv_heads=kv,
+            head_dim=max(d // heads, 8),
+            d_ff=min(self.d_ff, 4 * d) if self.d_ff else 0,
+            vocab_size=min(self.vocab_size, 512),
+            param_dtype="float32",
+            xent_chunk=0,
+        )
+        if self.moe is not None:
+            changes["moe"] = dataclasses.replace(
+                self.moe,
+                num_experts=4,
+                top_k=min(self.moe.top_k, 2),
+                d_ff_expert=min(self.moe.d_ff_expert, 2 * d),
+                dense_residual_d_ff=(2 * d if self.moe.has_dense_residual else 0),
+                # ample capacity at smoke scale: keeps token dropping (a
+                # legitimate train-vs-decode divergence) out of unit tests
+                capacity_factor=8.0,
+            )
+        if self.ssm is not None:
+            changes["ssm"] = dataclasses.replace(
+                self.ssm, state_dim=16, head_dim=16, chunk_size=32
+            )
+        if self.encdec is not None:
+            changes["encdec"] = dataclasses.replace(
+                self.encdec, enc_layers=2, enc_seq=64
+            )
+        if self.attention_window:
+            changes["attention_window"] = min(self.attention_window, 32)
+        return dataclasses.replace(self, **changes)
+
+
+@dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+TRAIN_4K = InputShape("train_4k", 4_096, 256, "train")
+PREFILL_32K = InputShape("prefill_32k", 32_768, 32, "prefill")
+DECODE_32K = InputShape("decode_32k", 32_768, 128, "decode")
+LONG_500K = InputShape("long_500k", 524_288, 1, "decode")
+
+SHAPES = {s.name: s for s in (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)}
+
+
+@dataclass(frozen=True)
+class DQConfig:
+    """DQGAN distributed-training settings (the paper's technique)."""
+    compressor: str = "qsgd8_linf"   # key into core.compressors.REGISTRY
+    exchange: str = "sim"            # exact | sim | allgather | two_phase
+    error_feedback: bool = True      # False -> CPOAdam-GQ style baseline
+    message: str = "update"          # "update" (eta*g + e, paper) | "grad"
+    extrapolation: str = "local"     # "local" (paper) | "global" (FSDP-safe)
+    optimizer: str = "omd"           # omd | oadam | adam | sgd
+    lr: float = 1e-3
+    beta1: float = 0.9
+    beta2: float = 0.999
+    eps: float = 1e-8
+    ef_dtype: str = "float32"        # bf16 halves EF memory at 100B scale
+    # mesh axes acting as DQGAN "workers" (the paper's M machines).
+    worker_axes: Tuple[str, ...] = ("data",)
+    # per-top-level-group learning-rate multipliers, e.g. (("disc", 5.0),)
+    # — the TTUR/n_critic analogue, applied after Adam preconditioning
+    # (which would otherwise normalize a gradient-level boost away).
+    lr_mults: Tuple[Tuple[str, float], ...] = ()
+    # SPMD style: "shard_map" (manual worker collectives; int8 on the wire)
+    # or "vmap" (workers as a vmapped leading axis, pure auto-sharding —
+    # sidesteps an XLA partitioner CHECK with manual-pod + FSDP-auto inside;
+    # paper semantics exact, wire format compiler-chosen). See DESIGN.md §2.
+    spmd: str = "shard_map"

@@ -1,0 +1,13 @@
+"""dcgan32: the paper's own experimental architecture — a DCGAN-style
+generator/discriminator pair for 32x32 images (CIFAR10-shaped), trained
+with the WGAN loss of Eq. (3). Config lives in models/gan.py; this module
+re-exports it for the registry. [arXiv:1511.06434 / the DQGAN paper §4]"""
+from repro.models.gan import GANConfig
+
+CONFIG = GANConfig(
+    name="dcgan32",
+    image_size=32,
+    channels=3,
+    latent_dim=128,
+    base_width=64,
+)

@@ -1,0 +1,8 @@
+"""gemma-2b-swa [dense, beyond-paper variant]: gemma-2b with a 4096-token
+sliding attention window so the dense family can serve long_500k
+sub-quadratically (rolling KV cache). See DESIGN.md §long_500k."""
+import dataclasses
+
+from .gemma_2b import CONFIG as _BASE
+
+CONFIG = dataclasses.replace(_BASE, name="gemma-2b-swa", attention_window=4096)

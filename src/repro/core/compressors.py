@@ -1,0 +1,267 @@
+"""δ-approximate gradient compressors (paper §2.4, §3.2, Theorems 1–2).
+
+A compressor ``Q`` is δ-approximate for δ ∈ (0,1] if
+
+    ||Q(v) - v||² ≤ (1 - δ) ||v||²      for all v            (Definition 1)
+
+Every compressor here is a frozen, hashable dataclass (safe as a jit static
+argument) with the interface:
+
+    payload = c.compress(v, key)      # pytree of arrays (codes, scales, ...)
+    v_hat   = c.decompress(payload, shape, dtype)
+    c.wire_bytes(shape, n_workers)    # modeled PS-uplink bytes per worker
+    c.delta(d)                        # analytic δ lower bound (or None)
+
+``payload`` is designed so that its arrays can be moved by collectives
+directly (int8 codes + small f32 scales) — that is what makes the
+``allgather``/``two_phase`` exchange strategies in collectives.py produce
+int8 wire traffic in the compiled HLO.
+
+All stochastic compressors take an explicit PRNG key (JAX-functional);
+deterministic ones ignore it.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+_EPS = 1e-20
+
+
+# --------------------------------------------------------------------------- #
+# helpers
+# --------------------------------------------------------------------------- #
+def _flat(v):
+    return jnp.reshape(v, (-1,))
+
+
+@dataclass(frozen=True)
+class Compressor:
+    name: str = "identity"
+
+    # -- interface ---------------------------------------------------------- #
+    def compress(self, v, key):
+        del key
+        return {"values": v}
+
+    def decompress(self, payload, shape, dtype):
+        return payload["values"].astype(dtype)
+
+    def wire_bytes(self, shape, n_workers: int = 1) -> int:
+        del n_workers
+        return 4 * math.prod(shape)
+
+    def delta(self, d: int) -> Optional[float]:
+        return 1.0
+
+    @property
+    def unbiased(self) -> bool:
+        return True
+
+    # -- convenience -------------------------------------------------------- #
+    def roundtrip(self, v, key):
+        return self.decompress(self.compress(v, key), v.shape, v.dtype)
+
+
+@dataclass(frozen=True)
+class TopK(Compressor):
+    """Keep the k = ceil(frac*d) largest-magnitude entries (Thm 1: δ = k/d).
+
+    Biased; REQUIRES error feedback for convergence (paper §3, [41]).
+    Payload: int32 indices + f32/bf16 values (wire = 8 bytes per kept entry).
+    """
+    name: str = "topk"
+    frac: float = 0.01
+
+    def _k(self, d):
+        return max(1, int(math.ceil(self.frac * d)))
+
+    def compress(self, v, key):
+        del key
+        f = _flat(v)
+        k = self._k(f.shape[0])
+        vals, idx = jax.lax.top_k(jnp.abs(f), k)
+        del vals
+        return {"indices": idx.astype(jnp.int32), "values": jnp.take(f, idx)}
+
+    def decompress(self, payload, shape, dtype):
+        d = math.prod(shape)
+        out = jnp.zeros((d,), dtype=payload["values"].dtype)
+        out = out.at[payload["indices"]].set(payload["values"])
+        return jnp.reshape(out, shape).astype(dtype)
+
+    def wire_bytes(self, shape, n_workers: int = 1) -> int:
+        return 8 * self._k(math.prod(shape))
+
+    def delta(self, d):
+        return self._k(d) / d
+
+    @property
+    def unbiased(self):
+        return False
+
+
+@dataclass(frozen=True)
+class RandK(Compressor):
+    """Keep k uniformly random coordinates (unscaled rand-k contraction:
+    E||v - Q(v)||² = (1 - k/d)||v||², i.e. δ = k/d in expectation)."""
+    name: str = "randk"
+    frac: float = 0.01
+
+    def _k(self, d):
+        return max(1, int(math.ceil(self.frac * d)))
+
+    def compress(self, v, key):
+        f = _flat(v)
+        d = f.shape[0]
+        idx = jax.random.choice(key, d, (self._k(d),), replace=False)
+        return {"indices": idx.astype(jnp.int32), "values": jnp.take(f, idx)}
+
+    decompress = TopK.decompress
+
+    def wire_bytes(self, shape, n_workers: int = 1) -> int:
+        return 8 * self._k(math.prod(shape))
+
+    def delta(self, d):
+        return self._k(d) / d
+
+    @property
+    def unbiased(self):
+        return False  # unbiased only with (d/k) rescaling; we use contraction form
+
+
+@dataclass(frozen=True)
+class SignMean(Compressor):
+    """Q(v) = sign(v) * mean(|v|)  (1-bit + one scale; EF-signSGD [14]).
+
+    δ = ||v||₁² / (d ||v||₂²) ∈ (0, 1], data-dependent (≥ 1/d)."""
+    name: str = "sign"
+
+    def compress(self, v, key):
+        del key
+        f = _flat(v)
+        scale = jnp.mean(jnp.abs(f))
+        bits = (f >= 0).astype(jnp.int8)  # one byte in payload; 1 bit on wire
+        return {"codes": bits, "scale": scale.astype(jnp.float32)}
+
+    def decompress(self, payload, shape, dtype):
+        signs = payload["codes"].astype(jnp.float32) * 2.0 - 1.0
+        return jnp.reshape(signs * payload["scale"], shape).astype(dtype)
+
+    def wire_bytes(self, shape, n_workers: int = 1) -> int:
+        return math.prod(shape) // 8 + 4
+
+    def delta(self, d):
+        return None  # data dependent
+
+    @property
+    def unbiased(self):
+        return False
+
+
+@dataclass(frozen=True)
+class StochasticQuant(Compressor):
+    """m-bit stochastic uniform quantization (QSGD [1] / Hou et al. [12]).
+
+    Q(v_i) = s * sign(v_i) * q(v_i, s) with q rounding |v_i|/s stochastically
+    to one of 2^{bits-1}-1 uniform levels; s = ||v||₂ or ||v||∞.
+    Unbiased (Thm 2) and δ-approximate. Codes are signed integer levels in
+    int8 (bits ≤ 8); wire bytes = d * bits / 8 + 4.
+
+    ``per_block > 0`` quantizes in blocks of that many elements with one
+    scale each (beyond-paper accuracy knob; tighter scales → larger δ).
+    """
+    name: str = "qsgd"
+    bits: int = 8
+    norm: str = "linf"  # "l2" | "linf"
+    per_block: int = 0
+
+    def __post_init__(self):
+        assert 2 <= self.bits <= 8, "codes are carried as int8"
+        assert self.norm in ("l2", "linf")
+
+    @property
+    def levels(self) -> int:
+        return 2 ** (self.bits - 1) - 1
+
+    def _scale(self, f):
+        if self.norm == "l2":
+            return jnp.linalg.norm(f, axis=-1, keepdims=True)
+        return jnp.max(jnp.abs(f), axis=-1, keepdims=True)
+
+    def _blocked(self, f):
+        d = f.shape[0]
+        if self.per_block <= 0:
+            return f[None, :], d
+        b = self.per_block
+        pad = (-d) % b
+        f = jnp.pad(f, (0, pad))
+        return f.reshape(-1, b), d
+
+    def compress(self, v, key):
+        f = _flat(v).astype(jnp.float32)
+        fb, _ = self._blocked(f)
+        s = self._scale(fb) + _EPS
+        lv = jnp.abs(fb) / s * self.levels          # in [0, levels]
+        low = jnp.floor(lv)
+        p_up = lv - low
+        up = jax.random.uniform(key, fb.shape) < p_up
+        q = low + up.astype(lv.dtype)               # stochastic level
+        codes = (jnp.sign(fb) * q).astype(jnp.int8)
+        return {"codes": codes, "scale": s.astype(jnp.float32)}
+
+    def decompress(self, payload, shape, dtype):
+        d = math.prod(shape)
+        deq = payload["codes"].astype(jnp.float32) * (payload["scale"] / self.levels)
+        return jnp.reshape(deq.reshape(-1)[:d], shape).astype(dtype)
+
+    def wire_bytes(self, shape, n_workers: int = 1) -> int:
+        d = math.prod(shape)
+        n_scales = 1 if self.per_block <= 0 else -(-d // self.per_block)
+        return d * self.bits // 8 + 4 * n_scales
+
+    def delta(self, d):
+        # linf: per-element error ≤ (s/levels)²/4 stochastically;
+        # worst-case analytic bound is loose — report None (measured in tests).
+        return None
+
+    @property
+    def unbiased(self):
+        return True
+
+
+# --------------------------------------------------------------------------- #
+# registry — names usable in DQConfig.compressor
+# --------------------------------------------------------------------------- #
+REGISTRY = {
+    "identity": Compressor(),
+    "topk1": TopK(frac=0.01),
+    "topk10": TopK(name="topk10", frac=0.10),
+    "randk1": RandK(frac=0.01),
+    "sign": SignMean(),
+    # NOTE: l2-scaled stochastic quantization is only a contraction with
+    # bucketing (QSGD [1] buckets at d=512): globally, E||Q(v)-v||^2 ~
+    # (sqrt(d)/levels)||v||^2 which EXCEEDS ||v||^2 for d >~ 16k — the zero-bin
+    # case the paper's Thm 2 proof skips (r=0 breaks its Eq. 38/39 step).
+    # Measured in benchmarks/run.py and discussed in EXPERIMENTS.md §Repro.
+    "qsgd8_l2": StochasticQuant(name="qsgd8_l2", bits=8, norm="l2",
+                                per_block=512),
+    "qsgd8_l2_global": StochasticQuant(name="qsgd8_l2_global", bits=8,
+                                       norm="l2"),
+    "qsgd8_linf": StochasticQuant(name="qsgd8_linf", bits=8, norm="linf"),
+    "qsgd4_linf": StochasticQuant(name="qsgd4_linf", bits=4, norm="linf"),
+    "qsgd8_block256": StochasticQuant(
+        name="qsgd8_block256", bits=8, norm="linf", per_block=256
+    ),
+}
+
+
+def get(name: str) -> Compressor:
+    try:
+        return REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown compressor {name!r}; have {sorted(REGISTRY)}")

@@ -1,0 +1,601 @@
+"""DQGAN (paper Algorithm 2) as a composable distributed train-step builder.
+
+The builder turns any "field" function F (gradient oracle — for GANs the
+concatenated field [∇θ L_G, ∇φ L_D], for plain minimization just grad(loss))
+into a jit-compilable SPMD step:
+
+    worker m:  w_{t-1/2}^m = w_{t-1} - [η F(w_{t-3/2}^m; ξ_{t-1}^m) + e_{t-1}^m]
+               g_t^m       = F(w_{t-1/2}^m; ξ_t^m)
+               p_t^m       = η g_t^m + e_{t-1}^m
+               p̂_t^m      = Q(p_t^m);   e_t^m = p_t^m - p̂_t^m
+    server:    q̂_t = (1/M) Σ_m p̂_t^m          (core.exchange strategies)
+    workers:   w_t = w_{t-1} - q̂_t
+
+SPMD mapping: one `jax.shard_map`, manual over DQConfig.worker_axes (the
+paper's M machines), auto over everything else ('model' tensor parallelism,
+and — when worker_axes == ('pod',) — FSDP over 'data' inside each pod).
+Per-worker state (prev grad, EF residuals) is carried with a leading
+worker axis sharded over the worker mesh axes.
+
+Baselines from the paper fall out as configurations:
+    CPOAdam      = optimizer='oadam', compressor='identity'
+    CPOAdam-GQ   = optimizer='oadam', compressor=..., error_feedback=False
+    DQGAN        = optimizer='omd',   compressor=..., error_feedback=True
+
+`extrapolation='global'` replaces the paper's per-worker lookahead
+η F(w^m_prev) + e^m with the previous *applied* update q̂_{t-1} (identical
+across workers, hence FSDP-safe at 100B scale) — a deliberate beyond-paper
+variant, see DESIGN.md §2.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import DQConfig
+from . import compressors as C
+from . import exchange as X
+
+
+class DQState(NamedTuple):
+    """Full optimizer state. Per-worker leaves have a leading axis of size
+    M (the worker count) sharded over the worker mesh axes; replicated
+    leaves (params, moments) have no worker axis."""
+    step: jax.Array
+    params: Any
+    prev_grad: Any       # per-worker F(w^m_{t-3/2}; ξ_{t-1}) (omd/local) | None
+    prev_update: Any     # q̂_{t-1} (global extrapolation) or Adam prev dir | None
+    ef: Any              # per-worker exchange EF state dicts | None
+    m: Any               # Adam first moment | None
+    v: Any               # Adam second moment | None
+
+
+class StepOutput(NamedTuple):
+    state: DQState
+    metrics: Any
+
+
+def _tree_zeros(tree, dtype=None):
+    return jax.tree.map(lambda x: jnp.zeros(x.shape, dtype or x.dtype), tree)
+
+
+def _is_plan(x):
+    return isinstance(x, dict) and "strategy" in x
+
+
+@dataclasses.dataclass(frozen=True)
+class DQGAN:
+    """Builder. Construct once per (model, mesh, DQConfig); then use
+    `.init(params)` and `.step` (jit the latter)."""
+
+    field_fn: Callable  # (params, batch, rng) -> (grad_tree, metrics_dict)
+    dq: DQConfig
+    mesh: Any = None                      # jax.sharding.Mesh | None (single proc)
+    param_specs: Any = None               # pytree of PartitionSpec (model axes only)
+    batch_spec: Any = None                # PartitionSpec for batch leaves
+
+    # ------------------------------------------------------------------ #
+    @property
+    def n_workers(self) -> int:
+        if not self.dq.worker_axes or self.mesh is None:
+            return 1
+        return math.prod(self.mesh.shape[a] for a in self.dq.worker_axes)
+
+    @property
+    def compressor(self) -> C.Compressor:
+        return C.get(self.dq.compressor)
+
+    @property
+    def uses_adam(self) -> bool:
+        return self.dq.optimizer in ("adam", "oadam")
+
+    def _plans(self, params):
+        shapes = jax.tree.map(lambda x: tuple(x.shape), params)
+        specs = self.param_specs
+        if specs is None:
+            specs = jax.tree.map(lambda x: P(), params)
+        return jax.tree.map(
+            lambda sh, sp: X.plan_leaf(self.dq.exchange, sh, sp, self.n_workers),
+            shapes, specs,
+            is_leaf=lambda x: isinstance(x, tuple)
+            and all(isinstance(i, int) for i in x),
+        )
+
+    def _scale_groups(self, tree):
+        """Apply DQConfig.lr_mults by top-level pytree key (TTUR)."""
+        if not self.dq.lr_mults:
+            return tree
+        mults = dict(self.dq.lr_mults)
+
+        def one(path, leaf):
+            key = getattr(path[0], "key", None) if path else None
+            return leaf * mults.get(str(key), 1.0)
+
+        return jax.tree_util.tree_map_with_path(one, tree)
+
+    # ------------------------------------------------------------------ #
+    # state construction
+    # ------------------------------------------------------------------ #
+    def init(self, params) -> DQState:
+        """Concrete zero state (small-scale runs/tests)."""
+        return jax.tree.map(
+            lambda s: jnp.zeros(s.shape, s.dtype) if hasattr(s, "shape") else s,
+            self.init_abstract(params),
+            is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct),
+        )._replace(params=params, step=jnp.zeros((), jnp.int32))
+
+    def init_abstract(self, params) -> DQState:
+        """ShapeDtypeStruct state with correct shardings (dry-run path)."""
+        W = self.n_workers
+        dq = self.dq
+        plans = self._plans(params)
+        ef_dtype = jnp.dtype(dq.ef_dtype)
+
+        def sds(shape, dtype, spec):
+            sharding = (
+                NamedSharding(self.mesh, spec) if self.mesh is not None else None
+            )
+            return jax.ShapeDtypeStruct(shape, dtype, sharding=sharding)
+
+        def pspec(x):
+            # params' own sharding if it is an array/SDS with sharding
+            sh = getattr(x, "sharding", None)
+            if isinstance(sh, NamedSharding):
+                return sh.spec
+            return P()
+
+        def worker_spec(spec):
+            return P(dq.worker_axes, *spec)
+
+        def param_like(x):
+            return sds(x.shape, x.dtype, pspec(x))
+
+        def per_worker_like(x, dtype=None):
+            return sds((W,) + tuple(x.shape), dtype or x.dtype,
+                       worker_spec(pspec(x)))
+
+        params_s = jax.tree.map(param_like, params)
+
+        prev_grad = None
+        if dq.optimizer == "omd" and dq.extrapolation == "local":
+            prev_grad = jax.tree.map(per_worker_like, params)
+
+        prev_update = None
+        if (dq.optimizer == "omd" and dq.extrapolation == "global") or (
+            dq.optimizer == "oadam"
+        ):
+            prev_update = jax.tree.map(param_like, params)
+
+        def ef_leaf(x, plan):
+            st = {}
+            if dq.error_feedback:
+                st["e1"] = sds((W,) + tuple(x.shape), ef_dtype,
+                               worker_spec(pspec(x)))
+            if plan["strategy"] == "two_phase":
+                ax = plan["chunk_axis"]
+                cs = list(x.shape)
+                cs[ax] //= W
+                spec = pspec(x)
+                st["e2"] = sds((W,) + tuple(cs), ef_dtype, worker_spec(spec))
+            return st if st else None
+
+        ef = jax.tree.map(ef_leaf, params, plans)
+
+        m = v = None
+        if self.uses_adam:
+            m = jax.tree.map(param_like, params)
+            v = jax.tree.map(param_like, params)
+
+        return DQState(
+            step=jax.ShapeDtypeStruct((), jnp.int32),
+            params=params_s,
+            prev_grad=prev_grad,
+            prev_update=prev_update,
+            ef=ef,
+            m=m,
+            v=v,
+        )
+
+    def state_specs(self, params) -> DQState:
+        """PartitionSpec tree matching init_abstract (for jit in_shardings)."""
+        abstract = self.init_abstract(params)
+
+        def spec_of(x):
+            sh = getattr(x, "sharding", None)
+            if isinstance(sh, NamedSharding):
+                return sh.spec
+            return P()
+
+        return jax.tree.map(spec_of, abstract,
+                            is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+    # ------------------------------------------------------------------ #
+    # the step
+    # ------------------------------------------------------------------ #
+    def step(self, state: DQState, batch, key) -> StepOutput:
+        """One Algorithm-2 iteration. jit me (donate state for in-place)."""
+        dq = self.dq
+        plans = self._plans(state.params)
+        axes = tuple(dq.worker_axes)
+        W = self.n_workers
+
+        if not axes or self.mesh is None or W == 1:
+            # single worker: per-worker leaves still carry their leading
+            # worker axis (of size 1), so squeeze stays on.
+            return self._worker_body(
+                state, batch, key, plans, axes=(), squeeze=True
+            )
+
+        if dq.spmd == "vmap":
+            return self._step_vmap(state, batch, key, W)
+
+        body = partial(self._worker_body, plans=plans, axes=axes, squeeze=True)
+
+        # ---- build shard_map specs (manual axes only) -------------------- #
+        rep = P()
+        wlead = P(axes)
+
+        def st_spec(name):
+            sub = getattr(state, name)
+            if sub is None:
+                return None
+            lead = wlead if name in ("prev_grad", "ef") else rep
+            return jax.tree.map(lambda _: lead, sub)
+
+        state_specs = DQState(
+            step=rep,
+            params=jax.tree.map(lambda _: rep, state.params),
+            prev_grad=st_spec("prev_grad"),
+            prev_update=st_spec("prev_update"),
+            ef=st_spec("ef"),
+            m=st_spec("m"),
+            v=st_spec("v"),
+        )
+        bspec = self.batch_spec
+        if bspec is None:
+            bspec = P(axes)
+        batch_specs = jax.tree.map(lambda _: bspec, batch)
+
+        out_specs = StepOutput(
+            state=state_specs,
+            metrics={"loss": rep, "grad_norm": rep, "error_norm": rep},
+        )
+        fn = jax.shard_map(
+            body,
+            mesh=self.mesh,
+            in_specs=(state_specs, batch_specs, rep),
+            out_specs=out_specs,
+            axis_names=set(axes),
+            check_vma=False,
+        )
+        return fn(state, batch, key)
+
+    # ------------------------------------------------------------------ #
+    def _step_vmap(self, state, batch, key, W):
+        """Workers as a vmapped leading axis (paper semantics of Algorithm 2,
+        exchange = mean over the worker axis, compression via per-worker
+        roundtrip — the 'sim' strategy). Pure auto-sharding: the worker axis
+        is sharded over dq.worker_axes, everything inside (FSDP 'data',
+        tensor 'model') is compiler-managed. Used for the 100B-scale FSDP
+        layout where shard_map-over-pod hits an XLA partitioner CHECK."""
+        from .error_feedback import compress_with_ef
+
+        dq = self.dq
+        comp = self.compressor
+        eta = dq.lr
+
+        batch_w = jax.tree.map(
+            lambda x: x.reshape((W, x.shape[0] // W) + x.shape[1:]), batch
+        )
+        widx = jnp.arange(W)
+
+        def worker(prev_g, ef, b, i):
+            kw = jax.random.fold_in(jax.random.fold_in(key, i), state.step)
+            kf, kq = jax.random.split(kw)
+            if dq.optimizer == "omd" and dq.extrapolation == "local":
+                def extrap(w, g_prev, e):
+                    upd = eta * g_prev
+                    if e is not None:
+                        upd = upd + e["e1"].astype(upd.dtype)
+                    return w - upd.astype(w.dtype)
+                if dq.error_feedback:
+                    w_half = jax.tree.map(extrap, state.params, prev_g, ef)
+                else:
+                    w_half = jax.tree.map(lambda w, g: extrap(w, g, None),
+                                          state.params, prev_g)
+            elif dq.optimizer == "omd":
+                w_half = jax.tree.map(lambda w, u: w - u.astype(w.dtype),
+                                      state.params, state.prev_update)
+            else:
+                w_half = state.params
+            grads, metrics = self.field_fn(w_half, b, kf)
+            if dq.message == "update" and dq.optimizer == "omd":
+                msg = jax.tree.map(lambda g: (eta * g).astype(jnp.float32),
+                                   grads)
+            else:
+                msg = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+
+            leaves, treedef = jax.tree.flatten(msg)
+            ef_leaves = (treedef.flatten_up_to(ef) if ef is not None
+                         else [None] * len(leaves))
+            phats, enews = [], []
+            for j, (m, e) in enumerate(zip(leaves, ef_leaves)):
+                e1 = (e["e1"] if e else jnp.zeros_like(m)).astype(jnp.float32)
+                _, p_hat, e_new = compress_with_ef(
+                    comp, m, e1, jax.random.fold_in(kq, j),
+                    use_ef=dq.error_feedback)
+                phats.append(p_hat)
+                enews.append({"e1": e_new.astype(jnp.dtype(dq.ef_dtype))}
+                             if dq.error_feedback else None)
+            phat = jax.tree.unflatten(treedef, phats)
+            enew = (jax.tree.unflatten(treedef, enews)
+                    if dq.error_feedback else None)
+            return phat, enew, grads, metrics.get("loss", jnp.zeros(()))
+
+        prev_g = state.prev_grad
+        ef = state.ef if dq.error_feedback else None
+        phat_w, ef_w, grads_w, loss_w = jax.vmap(
+            worker, in_axes=(0, 0 if ef is not None else None, 0, 0)
+        )(prev_g, ef, batch_w, widx)
+
+        qhat = jax.tree.map(lambda x: jnp.mean(x, axis=0), phat_w)
+
+        new_m, new_v, new_prev_update = state.m, state.v, state.prev_update
+        params = state.params
+        if dq.optimizer == "omd":
+            update = qhat if dq.message == "update" else jax.tree.map(
+                lambda q: eta * q, qhat)
+            new_params = jax.tree.map(lambda w, u: w - u.astype(w.dtype),
+                                      params, update)
+            if dq.extrapolation == "global":
+                new_prev_update = update
+        else:
+            t = state.step.astype(jnp.float32) + 1.0
+            b1, b2 = dq.beta1, dq.beta2
+            new_m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g,
+                                 state.m, qhat)
+            new_v = jax.tree.map(
+                lambda v, g: b2 * v + (1 - b2) * jnp.square(g), state.v, qhat)
+            direction = self._scale_groups(jax.tree.map(
+                lambda m, v: (m / (1 - b1**t))
+                / (jnp.sqrt(v / (1 - b2**t)) + dq.eps), new_m, new_v))
+            if dq.optimizer == "oadam":
+                new_params = jax.tree.map(
+                    lambda w, d, dp: w - (eta * (2.0 * d - dp)).astype(w.dtype),
+                    params, direction, state.prev_update)
+                new_prev_update = direction
+            else:
+                new_params = jax.tree.map(
+                    lambda w, d: w - (eta * d).astype(w.dtype),
+                    params, direction)
+
+        new_prev_grad = state.prev_grad
+        if state.prev_grad is not None:
+            new_prev_grad = jax.tree.map(lambda o, g: g.astype(o.dtype),
+                                         state.prev_grad, grads_w)
+        new_ef = state.ef
+        if dq.error_feedback and ef_w is not None:
+            new_ef = jax.tree.map(
+                lambda o, n: n.astype(o.dtype), state.ef, ef_w)
+
+        new_state = DQState(
+            step=state.step + 1, params=new_params, prev_grad=new_prev_grad,
+            prev_update=new_prev_update, ef=new_ef, m=new_m, v=new_v)
+        gn = _global_norm(grads_w)
+        en = _global_norm(new_ef) if new_ef is not None else jnp.zeros(())
+        return StepOutput(state=new_state,
+                          metrics={"loss": jnp.mean(loss_w),
+                                   "grad_norm": gn, "error_norm": en})
+
+    # ------------------------------------------------------------------ #
+    def _worker_body(self, state, batch, key, plans, axes, squeeze):
+        """Per-worker computation. When `squeeze`, per-worker leaves arrive
+        with a leading axis of local size 1 (their worker shard)."""
+        dq = self.dq
+        comp = self.compressor
+        W = self.n_workers
+        eta = dq.lr
+
+        def takew(tree):
+            if tree is None or not squeeze:
+                return tree
+            return jax.tree.map(lambda x: x[0], tree)
+
+        def putw(tree):
+            if tree is None or not squeeze:
+                return tree
+            return jax.tree.map(lambda x: x[None], tree)
+
+        if axes:
+            widx = jax.lax.axis_index(axes)
+            key = jax.random.fold_in(key, widx)
+        kfield, kq = jax.random.split(jax.random.fold_in(key, state.step))
+
+        params = state.params
+        prev_grad = takew(state.prev_grad)
+        ef = takew(state.ef)
+
+        # ---------- extrapolation to w_{t-1/2} ---------------------------- #
+        if dq.optimizer == "omd":
+            if dq.extrapolation == "local":
+                e_term = ef if dq.error_feedback else None
+
+                def extrap(w, g_prev, e_leaf):
+                    upd = eta * g_prev
+                    if e_leaf is not None and "e1" in e_leaf:
+                        upd = upd + e_leaf["e1"].astype(w.dtype)
+                    return w - upd.astype(w.dtype)
+
+                if e_term is not None:
+                    w_half = jax.tree.map(
+                        extrap, params, prev_grad, e_term,
+                        is_leaf=lambda x: _is_ef_leaf(x),
+                    )
+                else:
+                    w_half = jax.tree.map(
+                        lambda w, g: w - (eta * g).astype(w.dtype),
+                        params, prev_grad,
+                    )
+            else:  # global: lookahead with the previously applied update
+                w_half = jax.tree.map(
+                    lambda w, u: w - u.astype(w.dtype),
+                    params, state.prev_update,
+                )
+        else:
+            w_half = params  # adam/oadam/sgd evaluate at current params
+
+        # ---------- local stochastic field -------------------------------- #
+        grads, metrics = self.field_fn(w_half, batch, kfield)
+
+        # ---------- message + exchange ------------------------------------ #
+        if dq.message == "update" and dq.optimizer == "omd":
+            message = jax.tree.map(lambda g: (eta * g).astype(jnp.float32), grads)
+        else:
+            message = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+
+        qhat, new_ef = self._exchange_tree(message, ef, plans, kq, axes)
+
+        # ---------- server-side update ------------------------------------ #
+        new_m, new_v, new_prev_update = state.m, state.v, state.prev_update
+        if dq.optimizer == "omd":
+            if dq.message == "update":
+                update = qhat
+            else:
+                update = jax.tree.map(lambda q: eta * q, qhat)
+            new_params = jax.tree.map(
+                lambda w, u: w - u.astype(w.dtype), params, update
+            )
+            if dq.extrapolation == "global":
+                new_prev_update = update
+        elif dq.optimizer in ("adam", "oadam"):
+            t = state.step.astype(jnp.float32) + 1.0
+            b1, b2 = dq.beta1, dq.beta2
+            new_m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state.m, qhat)
+            new_v = jax.tree.map(
+                lambda v, g: b2 * v + (1 - b2) * jnp.square(g), state.v, qhat
+            )
+            bc1 = 1.0 - b1**t
+            bc2 = 1.0 - b2**t
+            direction = jax.tree.map(
+                lambda m, v: (m / bc1) / (jnp.sqrt(v / bc2) + dq.eps),
+                new_m, new_v,
+            )
+            direction = self._scale_groups(direction)
+            if dq.optimizer == "oadam":
+                # optimistic Adam: w ← w − η (2 d_t − d_{t−1})
+                new_params = jax.tree.map(
+                    lambda w, d, dp: w
+                    - (eta * (2.0 * d - dp)).astype(w.dtype),
+                    params, direction, state.prev_update,
+                )
+                new_prev_update = direction
+            else:
+                new_params = jax.tree.map(
+                    lambda w, d: w - (eta * d).astype(w.dtype), params, direction
+                )
+        elif dq.optimizer == "sgd":
+            new_params = jax.tree.map(
+                lambda w, q: w - (eta * q).astype(w.dtype), params, qhat
+            )
+        else:
+            raise ValueError(dq.optimizer)
+
+        new_prev_grad = None
+        if state.prev_grad is not None:
+            new_prev_grad = jax.tree.map(
+                lambda o, g: g.astype(o.dtype), prev_grad, grads
+            )
+
+        # ---------- metrics ------------------------------------------------ #
+        gn = _global_norm(grads)
+        en = _global_norm(new_ef) if new_ef is not None else jnp.zeros(())
+        loss = metrics.get("loss", jnp.zeros(()))
+        if axes:
+            loss = jax.lax.pmean(loss, axes)
+            gn = jax.lax.pmean(gn, axes)
+            en = jax.lax.pmean(en, axes)
+
+        new_state = DQState(
+            step=state.step + 1,
+            params=new_params,
+            prev_grad=putw(new_prev_grad),
+            prev_update=new_prev_update,
+            ef=putw(new_ef),
+            m=new_m,
+            v=new_v,
+        )
+        return StepOutput(
+            state=new_state,
+            metrics={"loss": loss, "grad_norm": gn, "error_norm": en},
+        )
+
+    # ------------------------------------------------------------------ #
+    def _exchange_tree(self, message, ef, plans, key, axes):
+        dq = self.dq
+        comp = self.compressor
+        W = self.n_workers
+        leaves, treedef = jax.tree.flatten(message)
+        plan_leaves = treedef.flatten_up_to(plans)
+        if ef is None:
+            ef_leaves = [
+                X.ef_state_zeros(pl, l.shape, jnp.dtype(dq.ef_dtype), W, False)
+                for pl, l in zip(plan_leaves, leaves)
+            ]
+        else:
+            ef_leaves = treedef.flatten_up_to(ef)
+            ef_leaves = [e if e is not None else {} for e in ef_leaves]
+
+        out, new_ef = [], []
+        for i, (p, pl, e) in enumerate(zip(leaves, plan_leaves, ef_leaves)):
+            k = jax.random.fold_in(key, i)
+            if not axes:  # single worker: exchange degenerates to (EF-)compress
+                q, ne = self._single_worker_leaf(comp, pl, p, e, k)
+            else:
+                q, ne = X.exchange_leaf(
+                    comp, pl, p, e, k, axes, W, dq.error_feedback
+                )
+            out.append(q)
+            new_ef.append(ne if ne else None)
+        qhat = jax.tree.unflatten(treedef, out)
+        if ef is None and not dq.error_feedback and dq.exchange != "two_phase":
+            return qhat, None
+        return qhat, jax.tree.unflatten(treedef, new_ef)
+
+    def _single_worker_leaf(self, comp, plan, p, e, key):
+        from .error_feedback import compress_with_ef
+
+        if plan["strategy"] == "exact" or self.dq.compressor == "identity":
+            return p, dict(e)
+        e1 = e.get("e1", jnp.zeros_like(p))
+        _, p_hat, e_new = compress_with_ef(
+            comp, p, e1, key, use_ef=self.dq.error_feedback
+        )
+        ne = dict(e)
+        if self.dq.error_feedback:
+            ne["e1"] = e_new
+        return p_hat, ne
+
+
+def _is_ef_leaf(x):
+    return isinstance(x, dict) and ("e1" in x or "e2" in x)
+
+
+def _never(x):
+    return False
+
+
+def _global_norm(tree):
+    leaves = [
+        l for l in jax.tree.leaves(tree) if hasattr(l, "dtype")
+    ]
+    if not leaves:
+        return jnp.zeros(())
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves)
+    )

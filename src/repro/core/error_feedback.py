@@ -1,0 +1,54 @@
+"""Error feedback (paper Algorithm 2, lines 6–8; Lemma 1).
+
+The EF contract: the worker sends Q(m) where m = message + e_prev, and keeps
+e_new = m - Q(m). Lemma 1 guarantees E||e||² ≤ 8η²(1-δ)(G²+σ²/B)/δ² so the
+residual never accumulates unboundedly (validated in tests/test_error_feedback.py).
+
+These helpers are per-leaf; `core.exchange` composes them with the
+collective strategies, and `core.dqgan` lifts them over parameter pytrees.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import compressors as C
+
+
+def ef_zeros_like(v, dtype=None):
+    return jnp.zeros(v.shape, dtype or v.dtype)
+
+
+def compress_with_ef(
+    compressor: C.Compressor,
+    message,
+    e_prev,
+    key,
+    *,
+    use_ef: bool = True,
+):
+    """Compress (message + e_prev); return (payload, local dequant, e_new).
+
+    With use_ef=False this is the CPOAdam-GQ baseline: the compression error
+    is simply dropped (and, for biased compressors, convergence degrades —
+    exactly the failure mode the paper's EF repairs).
+    """
+    m = message + e_prev.astype(message.dtype) if use_ef else message
+    payload = compressor.compress(m, key)
+    m_hat = compressor.decompress(payload, m.shape, m.dtype)
+    if use_ef:
+        e_new = (m - m_hat).astype(e_prev.dtype)
+    else:
+        e_new = e_prev  # stays zero
+    return payload, m_hat, e_new
+
+
+def lemma1_bound(eta, delta, G, sigma, B):
+    """RHS of Lemma 1: 8η²(1-δ)(G² + σ²/B)/δ²."""
+    return 8.0 * eta**2 * (1.0 - delta) * (G**2 + sigma**2 / B) / delta**2
+
+
+def global_error_norm(e_tree):
+    """||(1/M)Σ e^m||² proxy for a single worker's pytree: Σ_leaf ||e||²."""
+    leaves = jax.tree.leaves(e_tree)
+    return sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves)

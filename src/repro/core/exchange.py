@@ -1,0 +1,202 @@
+"""Gradient-exchange strategies: the parameter-server averaging of Algorithm 2
+mapped onto TPU collectives (DESIGN.md §2).
+
+All functions here run INSIDE a `jax.shard_map` that is manual over the
+DQGAN worker axes (the paper's M machines) and auto over the tensor-model
+axis. `p` is the per-worker message (η·g + e in the paper), and the return
+value is (q̂, new_ef_state) where q̂ = (1/M) Σ_m Q(p^m) — exactly the
+server-side average.
+
+Strategies
+----------
+exact      : q̂ = pmean(p). No compression (CPOAdam baseline).
+sim        : q̂ = pmean(Q(p)). Bit-exact paper semantics; float on the wire.
+allgather  : int8 codes + scales all-gathered, dequantized, averaged.
+             PS-uplink-faithful wire format; receive cost grows with M.
+two_phase  : compressed "reduce-scatter + all-gather": quantize → all-to-all
+             (int8) → chunk owner dequantizes + averages → re-quantize with
+             owner-side EF → all-gather (int8). O(d·bits/8) per worker in
+             BOTH phases — the TPU-native scalable scheme (beyond paper).
+
+two_phase needs an axis of the tensor that is (a) divisible by the worker
+count and (b) not sharded over a mesh axis (so the reshape is local). We
+pick it statically from the tensor shape + PartitionSpec; tensors with no
+such axis fall back to `sim` (recorded by `plan_for_tree`).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from . import compressors as C
+from .error_feedback import compress_with_ef
+
+STRATEGIES = ("exact", "sim", "allgather", "two_phase")
+
+
+# --------------------------------------------------------------------------- #
+# static planning
+# --------------------------------------------------------------------------- #
+def pick_chunk_axis(shape, spec: Optional[P], n_workers: int) -> Optional[int]:
+    """Largest axis divisible by n_workers whose PartitionSpec entry is None."""
+    best = None
+    for ax, size in enumerate(shape):
+        sharded = spec is not None and ax < len(spec) and spec[ax] is not None
+        if sharded or size % n_workers:
+            continue
+        if best is None or size > shape[best]:
+            best = ax
+    return best
+
+
+def plan_leaf(strategy: str, shape, spec, n_workers: int) -> dict:
+    """Resolve the effective strategy + chunk axis for one tensor."""
+    if strategy == "two_phase":
+        ax = pick_chunk_axis(shape, spec, n_workers)
+        if ax is None:
+            return {"strategy": "sim", "chunk_axis": None, "fallback": True}
+        return {"strategy": "two_phase", "chunk_axis": ax, "fallback": False}
+    return {"strategy": strategy, "chunk_axis": None, "fallback": False}
+
+
+def plan_for_tree(strategy, shapes_tree, specs_tree, n_workers):
+    return jax.tree.map(
+        lambda sh, sp: plan_leaf(strategy, sh, sp, n_workers),
+        shapes_tree,
+        specs_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(isinstance(i, int) for i in x),
+    )
+
+
+# --------------------------------------------------------------------------- #
+# EF state
+# --------------------------------------------------------------------------- #
+def ef_state_zeros(plan: dict, shape, dtype, n_workers: int, use_ef: bool):
+    """Per-leaf EF state. e1 = worker-side error (full shape); e2 = chunk-owner
+    error for two_phase (1/W of the tensor, sharded over workers naturally)."""
+    state = {}
+    if use_ef:
+        state["e1"] = jnp.zeros(shape, dtype)
+    if plan["strategy"] == "two_phase":
+        ax = plan["chunk_axis"]
+        chunk_shape = list(shape)
+        chunk_shape[ax] //= n_workers
+        state["e2"] = jnp.zeros(tuple(chunk_shape), dtype)
+    return state
+
+
+# --------------------------------------------------------------------------- #
+# per-leaf exchange (inside shard_map)
+# --------------------------------------------------------------------------- #
+def _mean_axes(x, axes):
+    return jax.lax.pmean(x, axes)
+
+
+def exchange_leaf(
+    compressor: C.Compressor,
+    plan: dict,
+    p,
+    ef_state: dict,
+    key,
+    axes: Tuple[str, ...],
+    n_workers: int,
+    use_ef: bool,
+):
+    """Return (q̂, new_ef_state) for one tensor. Runs under shard_map(axes)."""
+    strategy = plan["strategy"]
+    new_state = dict(ef_state)
+
+    if strategy == "exact":
+        return _mean_axes(p, axes), new_state
+
+    if strategy == "sim":
+        e1 = ef_state.get("e1", jnp.zeros_like(p))
+        payload, p_hat, e_new = compress_with_ef(compressor, p, e1, key, use_ef=use_ef)
+        del payload
+        if use_ef:
+            new_state["e1"] = e_new
+        return _mean_axes(p_hat, axes), new_state
+
+    if strategy == "allgather":
+        e1 = ef_state.get("e1", jnp.zeros_like(p))
+        payload, p_hat, e_new = compress_with_ef(compressor, p, e1, key, use_ef=use_ef)
+        if use_ef:
+            new_state["e1"] = e_new
+        gathered = jax.tree.map(lambda x: jax.lax.all_gather(x, axes), payload)
+        deq = jax.vmap(
+            lambda pl: compressor.decompress(pl, p.shape, jnp.float32)
+        )(gathered)
+        return jnp.mean(deq, axis=0).astype(p.dtype), new_state
+
+    if strategy == "two_phase":
+        return _two_phase(compressor, plan, p, ef_state, new_state, key, axes,
+                          n_workers, use_ef)
+
+    raise ValueError(f"unknown strategy {strategy!r}")
+
+
+def _two_phase(compressor, plan, p, ef_state, new_state, key, axes, W, use_ef):
+    ax = plan["chunk_axis"]
+    orig_shape = p.shape
+    # ---- phase 1: worker-side compress + all-to-all ------------------------ #
+    e1 = ef_state.get("e1", jnp.zeros_like(p))
+    m = p + e1.astype(p.dtype) if use_ef else p
+    # split the chunk axis: (..., ax, ...) -> (W, ..., ax/W, ...)
+    x = jnp.moveaxis(m, ax, 0).reshape((W, orig_shape[ax] // W) + _rest(orig_shape, ax))
+    keys = jax.random.split(key, W + 1)
+    payload = jax.vmap(compressor.compress)(x, keys[:W])
+    x_hat = jax.vmap(lambda pl: compressor.decompress(pl, x.shape[1:], x.dtype))(payload)
+    if use_ef:
+        e_new = (x - x_hat).reshape((orig_shape[ax],) + _rest(orig_shape, ax))
+        new_state["e1"] = jnp.moveaxis(e_new, 0, ax).astype(e1.dtype)
+    # all-to-all: leading dim becomes the source-worker index, int8 on the wire
+    moved = jax.tree.map(
+        lambda c: jax.lax.all_to_all(c, axes, split_axis=0, concat_axis=0,
+                                     tiled=False),
+        payload,
+    )
+    contrib = jax.vmap(
+        lambda pl: compressor.decompress(pl, x.shape[1:], jnp.float32)
+    )(moved)
+    chunk_mean = jnp.mean(contrib, axis=0)  # this worker's chunk of q̂
+    # ---- phase 2: owner-side compress (+ owner EF) + all-gather ------------ #
+    e2 = ef_state["e2"].reshape(chunk_mean.shape)
+    payload2, chunk_hat, e2_new = compress_with_ef(
+        compressor, chunk_mean, e2, keys[W], use_ef=True
+    )
+    del chunk_hat
+    new_state["e2"] = e2_new.reshape(ef_state["e2"].shape).astype(ef_state["e2"].dtype)
+    gathered = jax.tree.map(lambda c: jax.lax.all_gather(c, axes), payload2)
+    chunks = jax.vmap(
+        lambda pl: compressor.decompress(pl, chunk_mean.shape, jnp.float32)
+    )(gathered)
+    q = jnp.moveaxis(
+        chunks.reshape((orig_shape[ax],) + _rest(orig_shape, ax)), 0, ax
+    )
+    return q.astype(p.dtype), new_state
+
+
+def _rest(shape, ax):
+    return tuple(s for i, s in enumerate(shape) if i != ax)
+
+
+# --------------------------------------------------------------------------- #
+# modeled wire bytes (for the speedup benchmark + roofline cross-check)
+# --------------------------------------------------------------------------- #
+def modeled_wire_bytes(strategy, compressor, shape, n_workers):
+    """Per-worker bytes moved for one tensor, by strategy (send+receive)."""
+    d = math.prod(shape)
+    full = 4 * d
+    cb = compressor.wire_bytes(shape, n_workers)
+    if strategy == "exact" or strategy == "sim":
+        # ring all-reduce: 2·(W-1)/W · d · 4  ≈ 8d
+        return 2 * (n_workers - 1) / n_workers * full
+    if strategy == "allgather":
+        return cb + (n_workers - 1) * cb  # send own + receive all others
+    if strategy == "two_phase":
+        return 2 * (n_workers - 1) / n_workers * cb  # A2A + AG, compressed
+    raise ValueError(strategy)

@@ -1,0 +1,6 @@
+from .synthetic import (  # noqa: F401
+    gaussian_mixture_sampler,
+    lm_batch_iterator,
+    procedural_images,
+    synthetic_lm_batch,
+)

@@ -1,0 +1,75 @@
+"""Pallas TPU kernel: fused error-feedback + stochastic int8 quantization.
+
+This is the paper's per-step compute hot spot: every gradient element is
+read, compensated (m = g + e), scaled, stochastically rounded to an int8
+level, and the fresh residual written back — ~13 bytes of HBM traffic per
+element when unfused (g, e reads; codes, scale, e' writes — plus the jnp
+intermediates). The fused kernel does one VMEM-resident pass:
+
+    per (BR, C) tile:  m = g + e
+                       s = rowmax(|m|)
+                       q = floor(m/s*L) + (rand < frac)     (stochastic)
+                       e' = m - q*s/L
+
+Tiles are (BR, C) with C a multiple of 128 (lane width) and BR a multiple
+of 8 (sublane) — MXU/VPU-aligned per the TPU tiling rules. Randomness is
+passed in as a uniform tensor so the kernel is bit-reproducible on CPU
+(interpret=True) and TPU alike; on TPU the pltpu PRNG could generate it
+in-kernel (saves one read stream — noted in EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _quantize_ef_kernel(g_ref, e_ref, r_ref, codes_ref, scale_ref, enew_ref,
+                        *, levels: int):
+    m = g_ref[...].astype(jnp.float32) + e_ref[...].astype(jnp.float32)
+    s = jnp.max(jnp.abs(m), axis=1, keepdims=True) + 1e-20   # (BR, 1)
+    lv = m / s * levels
+    low = jnp.floor(lv)
+    up = (r_ref[...] < (lv - low)).astype(jnp.float32)
+    q = low + up
+    codes_ref[...] = q.astype(jnp.int8)
+    scale_ref[...] = s
+    enew_ref[...] = (m - q * (s / levels)).astype(enew_ref.dtype)
+
+
+def quantize_ef_blocked(g, e, rand, *, levels: int = 127, block_rows: int = 256,
+                        interpret: bool = True):
+    """g, e, rand: (R, C) with C % 128 == 0 and R % block_rows == 0.
+    Returns (codes int8 (R,C), scales f32 (R,1), e_new (R,C))."""
+    R, C = g.shape
+    assert C % 128 == 0, f"lane-align C to 128, got {C}"
+    br = min(block_rows, R)
+    assert R % br == 0, (R, br)
+    grid = (R // br,)
+
+    def idx(i):
+        return (i, 0)
+
+    kernel = functools.partial(_quantize_ef_kernel, levels=levels)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((br, C), idx),
+            pl.BlockSpec((br, C), idx),
+            pl.BlockSpec((br, C), idx),
+        ],
+        out_specs=[
+            pl.BlockSpec((br, C), idx),
+            pl.BlockSpec((br, 1), idx),
+            pl.BlockSpec((br, C), idx),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((R, C), jnp.int8),
+            jax.ShapeDtypeStruct((R, 1), jnp.float32),
+            jax.ShapeDtypeStruct((R, C), e.dtype),
+        ],
+        interpret=interpret,
+    )(g, e, rand)

@@ -1,0 +1,40 @@
+"""Pure-jnp oracles for the Pallas kernels (the allclose reference in
+tests/test_kernels.py)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_ef_ref(g, e, rand, levels: int = 127):
+    """Fused error-feedback stochastic quantization, per-row scales.
+
+    g, e, rand: (R, C) float32 (rand uniform in [0,1)).
+    Returns (codes int8, scale (R,1) f32, e_new f32) with
+        m      = g + e
+        scale  = max(|m|, axis=1)
+        codes  = stochastic_round(m / scale * levels)
+        e_new  = m - codes * scale / levels
+    """
+    m = g.astype(jnp.float32) + e.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(m), axis=1, keepdims=True) + 1e-20
+    lv = m / scale * levels
+    low = jnp.floor(lv)
+    codes = (low + (rand < (lv - low))).astype(jnp.int8)
+    deq = codes.astype(jnp.float32) * (scale / levels)
+    return codes, scale, m - deq
+
+
+def flash_attention_ref(q, k, v, causal: bool = True):
+    """Plain softmax attention. q,k,v: (B, S, H, D) (same H for k/v)."""
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if causal:
+        S = q.shape[1]
+        mask = jnp.tril(jnp.ones((S, S), bool))
+        s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32)).astype(q.dtype)

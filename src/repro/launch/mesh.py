@@ -1,0 +1,43 @@
+"""Production meshes. Functions, not module constants — importing this
+module never touches jax device state."""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False, override: str = ""):
+    """Single pod: (16,16) ('data','model') = 256 chips (v5e pod).
+    Multi pod:  (2,16,16) ('pod','data','model') = 512 chips.
+    `override` ("64,4" / "2,32,8") re-splits the same chips across the
+    data/model axes — a §Perf sharding-scheme knob."""
+    if override:
+        shape = tuple(int(x) for x in override.split(","))
+        assert len(shape) in (2, 3)
+        axes = (("pod",) if len(shape) == 3 else ()) + ("data", "model")
+        expected = 512 if multi_pod else 256
+        assert (len(shape) == 3) == multi_pod
+        total = 1
+        for x in shape:
+            total *= x
+        assert total == expected, (shape, expected)
+    else:
+        shape = (2, 16, 16) if multi_pod else (16, 16)
+        axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_test_mesh(shape=(2, 2, 2), axes=("pod", "data", "model")):
+    """Small mesh for unit tests (requires xla_force_host_platform_device_count)."""
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+
+
+def worker_axes_for(layout: str, multi_pod: bool):
+    """DQGAN worker axes by parameter layout (DESIGN.md §3):
+    dp   -> every data-parallel rank is a paper-worker;
+    fsdp -> each pod is a paper-worker (params sharded inside)."""
+    if layout == "dp":
+        return ("pod", "data") if multi_pod else ("data",)
+    if layout == "fsdp":
+        return ("pod",) if multi_pod else ()
+    raise ValueError(layout)

@@ -1,0 +1,81 @@
+"""Serving launcher: batched prefill + autoregressive decode for any
+registered arch (greedy or temperature sampling).
+
+    PYTHONPATH=src python -m repro.launch.serve --arch gemma-2b --smoke \
+        --batch 4 --prompt-len 32 --gen 16
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+
+import repro.configs as cfgs
+from repro.models import build
+
+
+def generate(bundle, params, prompt_tokens, gen_steps, key,
+             temperature=0.0, enc_embeds=None):
+    """prompt_tokens: (B, S). Returns (B, gen_steps) sampled tokens."""
+    cfg = bundle.cfg
+    B, S = prompt_tokens.shape
+    logits, caches = jax.jit(bundle.prefill, static_argnums=3)(
+        params, prompt_tokens, enc_embeds, S + gen_steps + 1)
+
+    decode = jax.jit(bundle.decode_step)
+
+    def sample(logits, k):
+        if temperature <= 0:
+            return jnp.argmax(logits, -1)
+        return jax.random.categorical(k, logits / temperature, axis=-1)
+
+    toks = []
+    tok = sample(logits, key)
+    for i in range(gen_steps):
+        toks.append(tok)
+        logits, caches = decode(params, tok[:, None].astype(jnp.int32), caches)
+        tok = sample(logits, jax.random.fold_in(key, i))
+    return jnp.stack(toks, axis=1)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = cfgs.get(args.arch)
+    if args.smoke:
+        cfg = cfg.reduced()
+    bundle = build(cfg)
+    key = jax.random.key(args.seed)
+    max_seq = args.prompt_len + args.gen + 1
+    params = bundle.init(key, max_seq=max(max_seq, 64))
+    prompts = jax.random.randint(key, (args.batch, args.prompt_len), 0,
+                                 cfg.vocab_size)
+    enc = None
+    if cfg.is_encdec:
+        enc = 0.1 * jax.random.normal(
+            key, (args.batch, cfg.encdec.enc_seq, cfg.d_model))
+    t0 = time.time()
+    out = generate(bundle, params, prompts, args.gen, key,
+                   temperature=args.temperature, enc_embeds=enc)
+    dt = time.time() - t0
+    print(json.dumps({
+        "arch": cfg.name, "batch": args.batch, "prompt_len": args.prompt_len,
+        "generated": args.gen, "tokens_per_s": round(args.batch * args.gen / dt, 1),
+        "sample_tokens": out[0, :8].tolist(),
+    }))
+    return out
+
+
+if __name__ == "__main__":
+    main()

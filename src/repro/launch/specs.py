@@ -1,0 +1,78 @@
+"""ShapeDtypeStruct input stand-ins for every (architecture × input-shape)
+combination — weak-type-correct, shardable, no device allocation. This is
+what the multi-pod dry-run lowers against."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.models import build
+from repro.parallel import sharding as shd
+
+
+def _sds(shape, dtype, mesh, spec):
+    return jax.ShapeDtypeStruct(shape, dtype,
+                                sharding=NamedSharding(mesh, spec))
+
+
+def train_batch_specs(cfg: ModelConfig, shape: InputShape, mesh):
+    B, S = shape.global_batch, shape.seq_len
+    bspec = shd.batch_spec(mesh, B)
+    batch = {
+        "tokens": _sds((B, S), jnp.int32, mesh, bspec),
+        "targets": _sds((B, S), jnp.int32, mesh, bspec),
+    }
+    if cfg.is_encdec:
+        batch["enc_embeds"] = _sds(
+            (B, cfg.encdec.enc_seq, cfg.d_model),
+            jnp.dtype(cfg.param_dtype), mesh, bspec,
+        )
+    return batch
+
+
+def prefill_input_specs(cfg: ModelConfig, shape: InputShape, mesh):
+    B, S = shape.global_batch, shape.seq_len
+    bspec = shd.batch_spec(mesh, B)
+    args = [_sds((B, S), jnp.int32, mesh, bspec)]
+    if cfg.is_encdec:
+        args.append(_sds((B, cfg.encdec.enc_seq, cfg.d_model),
+                         jnp.dtype(cfg.param_dtype), mesh, bspec))
+    else:
+        args.append(None)
+    return tuple(args)
+
+
+def decode_input_specs(cfg: ModelConfig, shape: InputShape, mesh,
+                       kv_layout: str = "hd_model"):
+    """(tokens, caches) stand-ins for serve_step: ONE new token against a
+    KV/state cache of shape.seq_len."""
+    B, S = shape.global_batch, shape.seq_len
+    bundle = build(cfg)
+    caches = jax.eval_shape(lambda: bundle.init_cache(B, S))
+    specs = shd.cache_specs(caches, mesh, B, kv_layout)
+    caches_sds = jax.tree.map(
+        lambda l, s: _sds(l.shape, l.dtype, mesh, s),
+        caches, specs,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct),
+    )
+    bspec = shd.batch_spec(mesh, B)
+    tokens = _sds((B, 1), jnp.int32, mesh, bspec)
+    return tokens, caches_sds
+
+
+def abstract_params(cfg: ModelConfig, mesh, layout: str, max_seq: int):
+    """Parameter ShapeDtypeStructs with the layout's shardings attached."""
+    bundle = build(cfg)
+    params = jax.eval_shape(lambda: bundle.init(jax.random.key(0), max_seq))
+    pspecs = shd.param_specs(params, cfg, layout, mesh)
+    return jax.tree.map(
+        lambda l, s: _sds(l.shape, l.dtype, mesh, s),
+        params, pspecs,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct),
+    ), pspecs
+
+
+def key_spec():
+    return jax.eval_shape(lambda: jax.random.key(0))

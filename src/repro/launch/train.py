@@ -1,0 +1,117 @@
+"""Training launcher: end-to-end DQGAN training of any registered arch on
+the local device set (CPU smoke / real TPU alike).
+
+    PYTHONPATH=src python -m repro.launch.train --arch gemma-2b --smoke \
+        --steps 100 --compressor qsgd8_linf --exchange sim
+
+For the paper's own experiment (DCGAN), use examples/train_gan.py which
+adds the WGAN weight clipping + evaluation metrics.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+
+import repro.configs as cfgs
+from repro import checkpoint
+from repro.configs.base import DQConfig
+from repro.core.dqgan import DQGAN
+from repro.data import lm_batch_iterator
+from repro.models import build
+from repro.parallel import sharding as shd
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced config (CPU-sized)")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--optimizer", default="oadam")
+    ap.add_argument("--compressor", default="qsgd8_linf")
+    ap.add_argument("--exchange", default="sim")
+    ap.add_argument("--no-error-feedback", action="store_true")
+    ap.add_argument("--checkpoint", default="")
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = cfgs.get(args.arch)
+    if args.smoke:
+        cfg = cfg.reduced()
+    bundle = build(cfg)
+
+    n_dev = jax.device_count()
+    mesh = None
+    worker_axes = ()
+    pspecs = None
+    bspec = None
+    if n_dev > 1:
+        from jax.sharding import AxisType, PartitionSpec as P
+        model_n = 2 if n_dev % 2 == 0 and n_dev > 2 else 1
+        mesh = jax.make_mesh((n_dev // model_n, model_n), ("data", "model"),
+                             axis_types=(AxisType.Auto,) * 2)
+        worker_axes = ("data",)
+        bspec = P(("data",))
+
+    dq = DQConfig(
+        compressor=args.compressor, exchange=args.exchange,
+        error_feedback=not args.no_error_feedback,
+        optimizer=args.optimizer, lr=args.lr, worker_axes=worker_axes,
+        message="update" if args.optimizer == "omd" else "grad",
+    )
+    key = jax.random.key(args.seed)
+    params = bundle.init(key, max_seq=args.seq)
+    if mesh is not None:
+        pspecs = shd.param_specs(params, cfg, "dp", mesh)
+        shards = shd.shardings(pspecs, mesh)
+        params = jax.tree.map(jax.device_put, params, shards)
+
+    trainer = DQGAN(field_fn=bundle.field_fn, dq=dq, mesh=mesh,
+                    param_specs=pspecs, batch_spec=bspec)
+    state = trainer.init(params)
+    step = jax.jit(trainer.step, donate_argnums=0)
+
+    enc_shape = ((cfg.encdec.enc_seq, cfg.d_model) if cfg.is_encdec else None)
+    it = lm_batch_iterator(args.seed, args.batch, args.seq, cfg.vocab_size,
+                           enc_shape)
+    history = []
+    t0 = time.time()
+    ctx = jax.set_mesh(mesh) if mesh is not None else _null()
+    with ctx:
+        for i in range(args.steps):
+            batch = next(it)
+            out = step(state, batch, key)
+            state = out.state
+            if i % args.log_every == 0 or i == args.steps - 1:
+                m = jax.device_get(out.metrics)
+                rec = {"step": i, "loss": float(m["loss"]),
+                       "grad_norm": float(m["grad_norm"]),
+                       "error_norm": float(m["error_norm"]),
+                       "elapsed_s": round(time.time() - t0, 1)}
+                history.append(rec)
+                print(json.dumps(rec), flush=True)
+    if args.checkpoint:
+        checkpoint.save(args.checkpoint, state.params,
+                        step=int(jax.device_get(state.step)))
+        print(f"saved params to {args.checkpoint}")
+    return history
+
+
+class _null:
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *a):
+        return False
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,202 @@
+"""GANs — the paper's own experimental architectures.
+
+Two families:
+  * DCGAN-style conv generator/discriminator for image data (the paper's
+    CIFAR10/CelebA setup, §4), built on lax.conv_general_dilated.
+  * MLP generator/discriminator for low-dimensional synthetic data
+    (2-D Gaussian mixtures) — used by the quickstart + convergence bench.
+
+Loss: WGAN (paper Eq. 3):
+    L_D = -E_x[D(x)] + E_z[D(G(z))]       L_G = -E_z[D(G(z))]
+The min-max field (paper Eq. 10) is F(w) = [∇θ L_G, ∇φ L_D] — that is what
+DQGAN exchanges/averages across workers.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from .layers import linear, linear_init
+
+
+@dataclass(frozen=True)
+class GANConfig:
+    name: str = "dcgan32"
+    arch_type: str = "gan"
+    image_size: int = 32          # 0 -> vector data (MLP GAN)
+    channels: int = 3
+    latent_dim: int = 128
+    base_width: int = 64
+    data_dim: int = 2             # for MLP GAN
+    hidden: int = 128
+    weight_clip: float = 0.1      # WGAN Lipschitz via clipping
+    # critic-to-generator learning-rate ratio; the simultaneous-update
+    # equivalent of WGAN's n_critic=5 (scales the disc part of the field)
+    disc_grad_mult: float = 5.0
+
+    @property
+    def is_image(self) -> bool:
+        return self.image_size > 0
+
+    def reduced(self) -> "GANConfig":
+        return GANConfig(name=self.name + "-smoke", image_size=8, channels=1,
+                         latent_dim=16, base_width=8)
+
+
+# --------------------------------------------------------------------------- #
+# conv helpers (NHWC)
+# --------------------------------------------------------------------------- #
+def conv_init(key, kh, kw, cin, cout):
+    fan = kh * kw * cin
+    return {"w": jax.random.normal(key, (kh, kw, cin, cout)) * 0.02,
+            "b": jnp.zeros((cout,))}
+
+
+def conv(p, x, stride=2):
+    y = jax.lax.conv_general_dilated(
+        x, p["w"], (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return y + p["b"]
+
+
+def conv_t(p, x, stride=2):
+    y = jax.lax.conv_transpose(
+        x, p["w"], (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return y + p["b"]
+
+
+def _bn_free_act(x):  # DCGAN without batchnorm (WGAN-friendly): leaky relu
+    return jax.nn.leaky_relu(x, 0.2)
+
+
+# --------------------------------------------------------------------------- #
+# DCGAN
+# --------------------------------------------------------------------------- #
+def dcgan_init(key, cfg: GANConfig):
+    bw = cfg.base_width
+    s0 = cfg.image_size // 8  # three stride-2 upsamples
+    ks = jax.random.split(key, 10)
+    gen = {
+        "fc": linear_init(ks[0], cfg.latent_dim, s0 * s0 * bw * 4, True),
+        "c1": conv_init(ks[1], 4, 4, bw * 4, bw * 2),
+        "c2": conv_init(ks[2], 4, 4, bw * 2, bw),
+        "c3": conv_init(ks[3], 4, 4, bw, cfg.channels),
+    }
+    disc = {
+        "c1": conv_init(ks[4], 4, 4, cfg.channels, bw),
+        "c2": conv_init(ks[5], 4, 4, bw, bw * 2),
+        "c3": conv_init(ks[6], 4, 4, bw * 2, bw * 4),
+        "fc": linear_init(ks[7], s0 * s0 * bw * 4, 1, True),
+    }
+    return {"gen": gen, "disc": disc}
+
+
+def dcgan_generate(gen, cfg: GANConfig, z):
+    bw = cfg.base_width
+    s0 = cfg.image_size // 8
+    x = jax.nn.relu(linear(gen["fc"], z)).reshape(-1, s0, s0, bw * 4)
+    x = jax.nn.relu(conv_t(gen["c1"], x))
+    x = jax.nn.relu(conv_t(gen["c2"], x))
+    return jnp.tanh(conv_t(gen["c3"], x))
+
+
+def dcgan_discriminate(disc, cfg: GANConfig, x):
+    h = _bn_free_act(conv(disc["c1"], x))
+    h = _bn_free_act(conv(disc["c2"], h))
+    h = _bn_free_act(conv(disc["c3"], h))
+    return linear(disc["fc"], h.reshape(h.shape[0], -1))[:, 0]
+
+
+# --------------------------------------------------------------------------- #
+# MLP GAN (synthetic 2-D data)
+# --------------------------------------------------------------------------- #
+def mlp_gan_init(key, cfg: GANConfig):
+    ks = jax.random.split(key, 6)
+    h = cfg.hidden
+    gen = {
+        "l1": linear_init(ks[0], cfg.latent_dim, h, True),
+        "l2": linear_init(ks[1], h, h, True),
+        "l3": linear_init(ks[2], h, cfg.data_dim, True),
+    }
+    disc = {
+        "l1": linear_init(ks[3], cfg.data_dim, h, True),
+        "l2": linear_init(ks[4], h, h, True),
+        "l3": linear_init(ks[5], h, 1, True),
+    }
+    return {"gen": gen, "disc": disc}
+
+
+def mlp_generate(gen, cfg, z):
+    h = jax.nn.relu(linear(gen["l1"], z))
+    h = jax.nn.relu(linear(gen["l2"], h))
+    return linear(gen["l3"], h)
+
+
+def mlp_discriminate(disc, cfg, x):
+    h = jax.nn.leaky_relu(linear(disc["l1"], x), 0.2)
+    h = jax.nn.leaky_relu(linear(disc["l2"], h), 0.2)
+    return linear(disc["l3"], h)[:, 0]
+
+
+# --------------------------------------------------------------------------- #
+# the min-max field (what DQGAN transports)
+# --------------------------------------------------------------------------- #
+def generate(params, cfg, z):
+    f = dcgan_generate if cfg.is_image else mlp_generate
+    return f(params["gen"], cfg, z)
+
+
+def discriminate(params, cfg, x):
+    f = dcgan_discriminate if cfg.is_image else mlp_discriminate
+    return f(params["disc"], cfg, x)
+
+
+def init(key, cfg: GANConfig, max_seq: int = 0):
+    del max_seq
+    return (dcgan_init if cfg.is_image else mlp_gan_init)(key, cfg)
+
+
+def gan_field_fn(cfg: GANConfig):
+    """Returns field_fn(params, batch, rng) -> (grads, metrics) for DQGAN.
+    batch: {"real": real samples}."""
+
+    def loss_g(gen_params, disc_params, z):
+        fake = generate({"gen": gen_params}, cfg, z) if False else (
+            (dcgan_generate if cfg.is_image else mlp_generate)(gen_params, cfg, z)
+        )
+        d = (dcgan_discriminate if cfg.is_image else mlp_discriminate)(
+            disc_params, cfg, fake)
+        return -jnp.mean(d)
+
+    def loss_d(disc_params, gen_params, real, z):
+        disc = dcgan_discriminate if cfg.is_image else mlp_discriminate
+        genf = dcgan_generate if cfg.is_image else mlp_generate
+        fake = jax.lax.stop_gradient(genf(gen_params, cfg, z))
+        return -jnp.mean(disc(disc_params, cfg, real)) + jnp.mean(
+            disc(disc_params, cfg, fake))
+
+    def field_fn(params, batch, rng):
+        real = batch["real"]
+        z = jax.random.normal(rng, (real.shape[0], cfg.latent_dim))
+        lg, g_gen = jax.value_and_grad(loss_g)(params["gen"], params["disc"], z)
+        ld, g_disc = jax.value_and_grad(loss_d)(params["disc"], params["gen"],
+                                                real, z)
+        grads = {"gen": g_gen,
+                 "disc": jax.tree.map(lambda x: cfg.disc_grad_mult * x,
+                                      g_disc)}
+        return grads, {"loss": ld + lg, "loss_g": lg, "loss_d": ld}
+
+    return field_fn
+
+
+def clip_disc(params, cfg: GANConfig):
+    """WGAN weight clipping (applied to the discriminator after a step)."""
+    c = cfg.weight_clip
+    return {
+        "gen": params["gen"],
+        "disc": jax.tree.map(lambda w: jnp.clip(w, -c, c), params["disc"]),
+    }

@@ -1,0 +1,312 @@
+"""Shared layers: norms, RoPE, linears, MLPs, attention (GQA/MQA, sliding
+window, KV-cache decode, chunked long-context prefill).
+
+Everything is functional: `*_init(key, ...) -> params` and pure apply
+functions. Params are plain nested dicts; linears are {"w": ..., "b"?: ...}
+so `parallel.sharding` can assign PartitionSpecs by path name.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+# ------------------------------------------------------------------------- #
+# init helpers
+# ------------------------------------------------------------------------- #
+def linear_init(key, d_in, d_out, use_bias=False, dtype=jnp.float32, scale=None):
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    p = {"w": (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)}
+    if use_bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def linear(p, x):
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+def embed_init(key, vocab, d, dtype=jnp.float32):
+    return (jax.random.normal(key, (vocab, d), jnp.float32) / math.sqrt(d)).astype(dtype)
+
+
+# ------------------------------------------------------------------------- #
+# norms
+# ------------------------------------------------------------------------- #
+def norm_init(kind: str, d, dtype=jnp.float32):
+    p = {"scale": jnp.ones((d,), dtype)}
+    if kind == "layernorm":
+        p["bias"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def apply_norm(kind: str, p, x, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        y = xf * jax.lax.rsqrt(jnp.mean(jnp.square(xf), -1, keepdims=True) + eps)
+    elif kind == "layernorm":
+        mu = jnp.mean(xf, -1, keepdims=True)
+        var = jnp.mean(jnp.square(xf - mu), -1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    else:
+        raise ValueError(kind)
+    y = y * p["scale"].astype(jnp.float32)
+    if "bias" in p:
+        y = y + p["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ------------------------------------------------------------------------- #
+# RoPE
+# ------------------------------------------------------------------------- #
+def rope(x, positions, theta: float):
+    """x: (..., S, H, hd); positions: (..., S)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., :, None].astype(jnp.float32) * freq  # (..., S, half)
+    ang = ang[..., None, :]  # broadcast over heads
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------------------------- #
+# MLP
+# ------------------------------------------------------------------------- #
+def mlp_init(key, d, ff, activation, use_bias, dtype):
+    ks = jax.random.split(key, 3)
+    if activation in ("silu", "geglu"):
+        return {
+            "gate": linear_init(ks[0], d, ff, use_bias, dtype),
+            "up": linear_init(ks[1], d, ff, use_bias, dtype),
+            "down": linear_init(ks[2], ff, d, use_bias, dtype, scale=1 / math.sqrt(ff)),
+        }
+    return {
+        "up": linear_init(ks[1], d, ff, use_bias, dtype),
+        "down": linear_init(ks[2], ff, d, use_bias, dtype, scale=1 / math.sqrt(ff)),
+    }
+
+
+def mlp(p, x, activation: str):
+    if activation in ("silu", "geglu"):
+        act = jax.nn.silu if activation == "silu" else (
+            lambda v: jax.nn.gelu(v, approximate=True)
+        )
+        h = act(linear(p["gate"], x)) * linear(p["up"], x)
+    else:
+        h = jax.nn.gelu(linear(p["up"], x), approximate=True)
+    return linear(p["down"], h)
+
+
+# ------------------------------------------------------------------------- #
+# attention
+# ------------------------------------------------------------------------- #
+def _constrain_batch_only(x, batch_size):
+    """with_sharding_constraint: batch dim over the data axes (when they
+    divide it), everything else replicated. Used to stop XLA from sharding
+    decode attention scores over 'model' along the KV-sequence dim — the
+    choice that forces cache/probs regathers (EXPERIMENTS.md §Perf hc2)."""
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+    except Exception:  # pragma: no cover
+        return x
+    if mesh is None or not mesh.axis_names or mesh.size <= 1:
+        return x
+    axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    n = 1
+    chosen = []
+    for a in axes:
+        if batch_size % (n * mesh.shape[a]) == 0:
+            chosen.append(a)
+            n *= mesh.shape[a]
+    spec = jax.sharding.PartitionSpec(
+        tuple(chosen) if chosen else None, *([None] * (x.ndim - 1)))
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def attn_init(key, d, n_heads, n_kv, head_dim, use_bias, dtype):
+    ks = jax.random.split(key, 4)
+    return {
+        "q": linear_init(ks[0], d, n_heads * head_dim, use_bias, dtype),
+        "k": linear_init(ks[1], d, n_kv * head_dim, use_bias, dtype),
+        "v": linear_init(ks[2], d, n_kv * head_dim, use_bias, dtype),
+        "o": linear_init(ks[3], n_heads * head_dim, d, use_bias, dtype,
+                         scale=1 / math.sqrt(n_heads * head_dim)),
+    }
+
+
+def _split_heads(x, n, hd):
+    return x.reshape(x.shape[:-1] + (n, hd))
+
+
+def _repeat_kv(k, n_heads, n_kv):
+    if n_heads == n_kv:
+        return k
+    return jnp.repeat(k, n_heads // n_kv, axis=-2)
+
+
+def _causal_band_mask(q_pos, k_pos, window: int):
+    """True where attention is allowed."""
+    diff = q_pos[:, None] - k_pos[None, :]
+    ok = diff >= 0
+    if window > 0:
+        ok &= diff < window
+    return ok
+
+
+def attention_dense(q, k, v, q_pos, k_pos, window=0, causal=True, softcap=0.0):
+    """Plain O(S²) attention. q: (B,Sq,H,hd); k,v: (B,Sk,K,hd)."""
+    B, Sq, H, hd = q.shape
+    K = k.shape[2]
+    k = _repeat_kv(k, H, K)
+    v = _repeat_kv(v, H, K)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32)
+    scores = scores / math.sqrt(hd)
+    if softcap > 0:
+        scores = jnp.tanh(scores / softcap) * softcap
+    if causal:
+        mask = _causal_band_mask(q_pos, k_pos, window)
+        scores = jnp.where(mask[None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs.astype(v.dtype), v)
+    return out.reshape(B, Sq, H * hd)
+
+
+def attention_chunked(q, k, v, window=0, causal=True, q_chunk=1024):
+    """Memory-bounded attention for long sequences: scan over query chunks,
+    each attending to a dynamically-sliced KV band. Avoids materializing
+    O(S²) scores; with a sliding window it also avoids O(S²) FLOPs (the KV
+    slice is bounded by window + chunk).
+
+    q: (B,S,H,hd), k/v: (B,S,K,hd). Self-attention with aligned positions.
+    """
+    B, S, H, hd = q.shape
+    K = k.shape[2]
+    n_chunks = S // q_chunk
+    assert S % q_chunk == 0, (S, q_chunk)
+    kv_span = (
+        S if window <= 0 else min(S, q_chunk * ((window + q_chunk - 1) // q_chunk + 1))
+    )
+
+    def body(_, idx):
+        q_start = idx * q_chunk
+        qc = jax.lax.dynamic_slice_in_dim(q, q_start, q_chunk, axis=1)
+        if window <= 0:
+            kc, vc, k_start = k, v, 0
+        else:
+            k_start = jnp.maximum(q_start + q_chunk - kv_span, 0)
+            kc = jax.lax.dynamic_slice_in_dim(k, k_start, kv_span, axis=1)
+            vc = jax.lax.dynamic_slice_in_dim(v, k_start, kv_span, axis=1)
+        q_pos = q_start + jnp.arange(q_chunk)
+        k_pos = k_start + jnp.arange(kc.shape[1])
+        out = attention_dense(qc, kc, vc, q_pos, k_pos, window=window,
+                              causal=causal)
+        return None, out
+
+    _, outs = jax.lax.scan(body, None, jnp.arange(n_chunks))
+    # (n_chunks, B, q_chunk, H*hd) -> (B, S, H*hd)
+    return jnp.moveaxis(outs, 0, 1).reshape(B, S, H * hd)
+
+
+def attn_apply(p, x, cfg, positions, cache=None, cross_kv=None, causal=True,
+               fill_cache=False):
+    """Unified attention: train/prefill (cache None), decode (cache dict),
+    or cross-attention (cross_kv = (k, v) precomputed from encoder).
+
+    With fill_cache=True (prefill), the freshly computed K/V are returned
+    as a decode-ready cache (rolled into window layout for sliding-window
+    models). Returns (out, new_cache).
+    """
+    B, S, d = x.shape
+    H, Kh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = _split_heads(linear(p["q"], x), H, hd)
+
+    if cross_kv is not None:
+        k, v = cross_kv
+        out = attention_dense(q, k, v, positions, jnp.arange(k.shape[1]),
+                              causal=False)
+        return linear(p["o"], out), None
+
+    k = _split_heads(linear(p["k"], x), Kh, hd)
+    v = _split_heads(linear(p["v"], x), Kh, hd)
+    if cfg.use_rope:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+
+    if cache is None:  # train / prefill
+        if S > 2048:
+            out = attention_chunked(q, k, v, window=cfg.attention_window,
+                                    causal=causal)
+        else:
+            pos = jnp.arange(S)
+            out = attention_dense(q, k, v, pos, pos,
+                                  window=cfg.attention_window, causal=causal)
+        new_cache = None
+        if fill_cache:
+            win = cfg.attention_window
+            if win > 0 and S >= win:
+                # rolling layout: slot i holds absolute position
+                # p = S - win + ((i - S) mod win), so that p ≡ i (mod win)
+                idx = S - win + jnp.mod(jnp.arange(win) - S, win)
+                ck, cv = jnp.take(k, idx, 1), jnp.take(v, idx, 1)
+            elif win > 0:  # prompt shorter than the window: pad to win slots
+                pad = ((0, 0), (0, win - S), (0, 0), (0, 0))
+                ck, cv = jnp.pad(k, pad), jnp.pad(v, pad)
+            else:
+                ck, cv = k, v
+            new_cache = {"k": ck, "v": cv, "pos": jnp.asarray(S, jnp.int32)}
+        return linear(p["o"], out), new_cache
+
+    # ---- decode with KV cache ------------------------------------------- #
+    # cache: {"k": (B, S_cache, K, hd), "v": ..., "pos": ()} — rolling when
+    # cfg.attention_window > 0 (cache length == window).
+    ck, cv = cache["k"], cache["v"]
+    t = cache["pos"]
+    if cfg.attention_window > 0 and ck.shape[1] == cfg.attention_window:
+        slot = t % cfg.attention_window
+        ck = jax.lax.dynamic_update_slice_in_dim(ck, k, slot, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cv, v, slot, axis=1)
+        k_pos = jnp.arange(ck.shape[1])
+        # rolling positions: entry i holds absolute position
+        # t - ((slot - i) mod window)
+        k_pos = t - jnp.mod(slot - k_pos, cfg.attention_window)
+        valid = k_pos >= 0
+    else:
+        ck = jax.lax.dynamic_update_slice_in_dim(ck, k, t, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cv, v, t, axis=1)
+        k_pos = jnp.arange(ck.shape[1])
+        valid = k_pos <= t
+    # grouped-GQA attention: no repeat_kv materialization (the repeat is a
+    # broadcast that forces XLA to regather the sharded cache — §Perf
+    # hillclimb 2), f32 only on the (tiny) score tensor.
+    G = H // Kh
+    qg = q.reshape(B, S, Kh, G, hd)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg, ck,
+                        preferred_element_type=jnp.float32)
+    scores = _constrain_batch_only(scores, B)
+    scores = scores / math.sqrt(hd)
+    scores = jnp.where(valid[None, None, None, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs.astype(cv.dtype), cv)
+    out = out.reshape(B, S, H * hd)
+    new_cache = {"k": ck, "v": cv, "pos": t + S}
+    return linear(p["o"], out), new_cache
+
+
+def attn_cache_init(cfg, batch, seq, dtype):
+    win = cfg.attention_window
+    length = min(seq, win) if win > 0 else seq
+    return {
+        "k": jnp.zeros((batch, length, cfg.num_kv_heads, cfg.head_dim), dtype),
+        "v": jnp.zeros((batch, length, cfg.num_kv_heads, cfg.head_dim), dtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }

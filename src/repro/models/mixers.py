@@ -1,0 +1,262 @@
+"""Sequence mixers beyond attention: Mamba2 SSD and the RG-LRU recurrent
+block (RecurrentGemma / Griffin). Both provide train/prefill over full
+sequences and O(1)-state decode steps.
+
+TPU adaptation notes (DESIGN.md): the CUDA SSD kernel is replaced by the
+chunked einsum formulation (state-space duality) — intra-chunk work is
+MXU-friendly batched matmuls, inter-chunk state is a short lax.scan. The
+RG-LRU uses lax.associative_scan (log-depth) instead of a fused CUDA scan.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .layers import linear, linear_init, apply_norm
+
+# ------------------------------------------------------------------------- #
+# causal depthwise conv1d (shared by SSD and RG-LRU)
+# ------------------------------------------------------------------------- #
+def conv1d_init(key, channels, width, dtype):
+    return {
+        "w": (jax.random.normal(key, (width, channels), jnp.float32)
+              / math.sqrt(width)).astype(dtype),
+        "b": jnp.zeros((channels,), dtype),
+    }
+
+
+def causal_conv1d(p, x):
+    """x: (B, T, C) -> (B, T, C), causal, depthwise."""
+    width = p["w"].shape[0]
+    pad = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    out = sum(
+        pad[:, i : i + x.shape[1], :] * p["w"][i] for i in range(width)
+    )
+    return out + p["b"]
+
+
+def conv_step(p, buf, x_t):
+    """Single decode step. buf: (B, width-1, C) past inputs; x_t: (B, 1, C)."""
+    width = p["w"].shape[0]
+    window = jnp.concatenate([buf, x_t], axis=1)  # (B, width, C)
+    out = jnp.einsum("bwc,wc->bc", window, p["w"]) + p["b"]
+    return out[:, None, :], window[:, 1:, :]
+
+
+# ------------------------------------------------------------------------- #
+# Mamba2 / SSD
+# ------------------------------------------------------------------------- #
+def ssd_init(key, cfg, dtype):
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.expand * d
+    n_h = di // s.head_dim
+    ks = jax.random.split(key, 8)
+    return {
+        "z": linear_init(ks[0], d, di, False, dtype),
+        "x": linear_init(ks[1], d, di, False, dtype),
+        "B": linear_init(ks[2], d, s.state_dim, False, dtype),
+        "C": linear_init(ks[3], d, s.state_dim, False, dtype),
+        "dt": linear_init(ks[4], d, n_h, False, dtype),
+        "dt_bias": jnp.zeros((n_h,), dtype),
+        "A_log": jnp.zeros((n_h,), jnp.float32),
+        "D": jnp.ones((n_h,), dtype),
+        "conv": conv1d_init(ks[5], di + 2 * s.state_dim, s.conv_width, dtype),
+        "norm": {"scale": jnp.ones((di,), dtype)},
+        "out": linear_init(ks[6], di, d, False, dtype, scale=1 / math.sqrt(di)),
+    }
+
+
+def _ssd_inputs(p, cfg, u):
+    """Shared projections for prefill and decode: returns (z, xBC, dt)."""
+    s = cfg.ssm
+    z = linear(p["z"], u)
+    xBC = jnp.concatenate(
+        [linear(p["x"], u), linear(p["B"], u), linear(p["C"], u)], axis=-1
+    )
+    dt = jax.nn.softplus(
+        linear(p["dt"], u).astype(jnp.float32) + p["dt_bias"].astype(jnp.float32)
+    )
+    return z, xBC, dt
+
+
+def _ssd_split(xBC, cfg):
+    s = cfg.ssm
+    di = s.expand * cfg.d_model
+    x = xBC[..., :di]
+    Bm = xBC[..., di : di + s.state_dim]
+    Cm = xBC[..., di + s.state_dim :]
+    return x, Bm, Cm
+
+
+def ssd_apply(p, cfg, u, state=None, return_state=False):
+    """u: (B, T, d). state None -> full-sequence (chunked SSD);
+    state dict -> single-token decode. With return_state=True the final
+    recurrent state + conv buffer are returned (prefill). Returns
+    (y, new_state)."""
+    s = cfg.ssm
+    di = s.expand * cfg.d_model
+    n_h = di // s.head_dim
+    P_ = s.head_dim
+    N = s.state_dim
+    A = -jnp.exp(p["A_log"])  # (H,) negative decay rates
+
+    z, xBC, dt = _ssd_inputs(p, cfg, u)
+
+    if state is not None:
+        conv_out, conv_buf = conv_step(p["conv"], state["conv"], xBC)
+        x, Bm, Cm = _ssd_split(jax.nn.silu(conv_out), cfg)
+        B_, T, _ = x.shape  # T == 1
+        xh = x.reshape(B_, n_h, P_)
+        dt1 = dt[:, 0]  # (B,H)
+        da = jnp.exp(A[None] * dt1)  # (B,H)
+        h = state["h"] * da[..., None, None] + jnp.einsum(
+            "bh,bhp,bn->bhpn", dt1, xh.astype(jnp.float32),
+            Bm[:, 0].astype(jnp.float32)
+        )
+        y = jnp.einsum("bhpn,bn->bhp", h, Cm[:, 0].astype(jnp.float32))
+        y = y.astype(u.dtype) + p["D"].astype(u.dtype)[None, :, None] * xh
+        y = y.reshape(B_, 1, di)
+        y = _gated_norm(p["norm"], y, z)
+        return linear(p["out"], y), {"h": h, "conv": conv_buf}
+
+    # ---- chunked SSD over the full sequence ------------------------------ #
+    x_conv = jax.nn.silu(causal_conv1d(p["conv"], xBC))
+    x, Bm, Cm = _ssd_split(x_conv, cfg)
+    B_, T, _ = x.shape
+    L = min(s.chunk_size, T)
+    assert T % L == 0, (T, L)
+    nc = T // L
+    xh = x.reshape(B_, nc, L, n_h, P_)
+    Bc = Bm.reshape(B_, nc, L, N).astype(jnp.float32)
+    Cc = Cm.reshape(B_, nc, L, N).astype(jnp.float32)
+    dtc = dt.reshape(B_, nc, L, n_h)                       # f32
+    Adt = A[None, None, None] * dtc                        # (B,nc,L,H)
+    cum = jnp.cumsum(Adt, axis=2)                          # running log-decay
+    # intra-chunk (lower-triangular kernel)
+    decay = jnp.exp(cum[:, :, :, None] - cum[:, :, None, :])  # (B,nc,L,L,H)
+    tri = jnp.tril(jnp.ones((L, L), bool))
+    kern = jnp.where(tri[None, None, :, :, None], decay, 0.0)
+    G = jnp.einsum("bcln,bcmn->bclm", Cc, Bc)              # (B,nc,L,L)
+    W = G[..., None] * kern * dtc[:, :, None]              # weight for (l<-m)
+    y_intra = jnp.einsum("bclmh,bcmhp->bclhp", W, xh.astype(jnp.float32))
+    # chunk-final states
+    dec_to_end = jnp.exp(cum[:, :, -1:, :] - cum)          # (B,nc,L,H)
+    S_c = jnp.einsum(
+        "bclh,bclhp,bcln->bchpn", dtc * dec_to_end, xh.astype(jnp.float32), Bc
+    )
+    chunk_decay = jnp.exp(jnp.sum(Adt, axis=2))            # (B,nc,H)
+
+    def scan_fn(h_prev, inp):
+        s_c, dec = inp
+        h_new = h_prev * dec[..., None, None] + s_c
+        return h_new, h_prev
+
+    h0 = jnp.zeros((B_, n_h, P_, N), jnp.float32)
+    h_final, h_prevs = jax.lax.scan(
+        scan_fn,
+        h0,
+        (jnp.moveaxis(S_c, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)),
+    )
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)                  # (B,nc,H,P,N) state before chunk
+    y_inter = jnp.einsum(
+        "bcln,bchpn,bclh->bclhp", Cc, h_prevs, jnp.exp(cum)
+    )
+    y = (y_intra + y_inter).astype(u.dtype)
+    y = y + p["D"].astype(y.dtype)[None, None, None, :, None] * xh
+    y = y.reshape(B_, T, di)
+    y = _gated_norm(p["norm"], y, z)
+    new_state = None
+    if return_state:
+        width = s.conv_width
+        new_state = {"h": h_final, "conv": xBC[:, -(width - 1):, :]}
+    return linear(p["out"], y), new_state
+
+
+def _gated_norm(norm_p, y, z):
+    return apply_norm("rmsnorm", norm_p, y * jax.nn.silu(z))
+
+
+def ssd_state_init(cfg, batch, dtype):
+    s = cfg.ssm
+    di = s.expand * cfg.d_model
+    n_h = di // s.head_dim
+    return {
+        "h": jnp.zeros((batch, n_h, s.head_dim, s.state_dim), jnp.float32),
+        "conv": jnp.zeros((batch, s.conv_width - 1, di + 2 * s.state_dim), dtype),
+    }
+
+
+# ------------------------------------------------------------------------- #
+# RG-LRU (RecurrentGemma / Griffin recurrent block)
+# ------------------------------------------------------------------------- #
+def rglru_init(key, cfg, dtype):
+    r = cfg.rglru
+    d = cfg.d_model
+    w = r.expand * d
+    ks = jax.random.split(key, 6)
+    # Λ initialized so a = σ(Λ)^c lands in [0.9, 0.999] (griffin init)
+    lam = jax.random.uniform(ks[0], (w,), jnp.float32, 0.9, 0.999)
+    lam_logit = jnp.log(lam ** (1.0 / r.c_constant) / (1 - lam ** (1.0 / r.c_constant)))
+    return {
+        "in_x": linear_init(ks[1], d, w, False, dtype),
+        "in_gate": linear_init(ks[2], d, w, False, dtype),
+        "conv": conv1d_init(ks[3], w, r.conv_width, dtype),
+        "W_a": linear_init(ks[4], w, w, True, dtype),
+        "W_i": linear_init(ks[5], w, w, True, dtype),
+        "lam": lam_logit,
+        "out": linear_init(jax.random.fold_in(key, 9), w, d, False, dtype,
+                           scale=1 / math.sqrt(w)),
+    }
+
+
+def _rglru_gates(p, cfg, u):
+    """u: conv'd x branch, (B,T,w). Returns (a, b) recurrence coefficients."""
+    c = cfg.rglru.c_constant
+    r_gate = jax.nn.sigmoid(linear(p["W_a"], u).astype(jnp.float32))
+    i_gate = jax.nn.sigmoid(linear(p["W_i"], u).astype(jnp.float32))
+    log_a = -c * jax.nn.softplus(p["lam"]) * r_gate   # log a_t  (B,T,w)
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (
+        i_gate * u.astype(jnp.float32)
+    )
+    return a, b
+
+
+def rglru_apply(p, cfg, x, state=None, return_state=False):
+    """x: (B,T,d). Returns (y, new_state). state: {"h": (B,w), "conv": buf}."""
+    u0 = linear(p["in_x"], x)
+    gate = jax.nn.gelu(linear(p["in_gate"], x), approximate=True)
+
+    if state is not None:
+        conv_out, conv_buf = conv_step(p["conv"], state["conv"], u0)
+        a, b = _rglru_gates(p, cfg, conv_out)
+        h = a[:, 0] * state["h"] + b[:, 0]               # (B,w)
+        y = (h[:, None, :]).astype(x.dtype) * gate
+        return linear(p["out"], y), {"h": h, "conv": conv_buf}
+
+    u = causal_conv1d(p["conv"], u0)
+    a, b = _rglru_gates(p, cfg, u)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    y = h.astype(x.dtype) * gate
+    new_state = None
+    if return_state:
+        width = cfg.rglru.conv_width
+        new_state = {"h": h[:, -1], "conv": u0[:, -(width - 1):, :]}
+    return linear(p["out"], y), new_state
+
+
+def rglru_state_init(cfg, batch, dtype):
+    w = cfg.rglru.expand * cfg.d_model
+    return {
+        "h": jnp.zeros((batch, w), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.rglru.conv_width - 1, w), dtype),
+    }

@@ -1,0 +1,452 @@
+"""The unified decoder LM (+ optional encoder for enc-dec) used by all ten
+assigned architectures: a cycled pattern of blocks (attention / RG-LRU /
+SSD mixers, dense / MoE FFNs), scan-over-layers with remat, chunked
+cross-entropy, KV/SSM caches with O(1) decode.
+
+Public entry points (see registry.py):
+    init(key, cfg, max_seq)                    -> params
+    forward(params, cfg, tokens|embeds, ...)   -> hidden states
+    loss_fn(params, cfg, batch, rng)           -> (loss, metrics)
+    prefill(params, cfg, tokens, cache)        -> (logits_last, cache)
+    decode_step(params, cfg, tokens, cache)    -> (logits, cache)
+    init_cache(cfg, batch, seq, dtype)         -> cache pytree
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from . import moe as moe_lib
+from .layers import (
+    apply_norm,
+    attn_apply,
+    attn_cache_init,
+    attn_init,
+    embed_init,
+    linear,
+    mlp,
+    mlp_init,
+    norm_init,
+)
+from .mixers import (
+    rglru_apply,
+    rglru_init,
+    rglru_state_init,
+    ssd_apply,
+    ssd_init,
+    ssd_state_init,
+)
+
+
+def _dtype(cfg):
+    return jnp.dtype(cfg.param_dtype)
+
+
+def pattern_kinds(cfg) -> list:
+    return [cfg.layer_pattern[i % len(cfg.layer_pattern)]
+            for i in range(cfg.num_layers)]
+
+
+# ------------------------------------------------------------------------- #
+# single block
+# ------------------------------------------------------------------------- #
+def block_init(key, cfg: ModelConfig, kind: str, cross: bool = False):
+    dt = _dtype(cfg)
+    d = cfg.d_model
+    ks = jax.random.split(key, 6)
+    p = {"norm1": norm_init(cfg.norm, d, dt)}
+    if kind == "attn":
+        p["attn"] = attn_init(ks[0], d, cfg.num_heads, cfg.num_kv_heads,
+                              cfg.head_dim, cfg.use_bias, dt)
+    elif kind == "rglru":
+        p["rglru"] = rglru_init(ks[0], cfg, dt)
+    elif kind == "ssd":
+        p["ssd"] = ssd_init(ks[0], cfg, dt)
+    else:
+        raise ValueError(kind)
+    if cross:
+        p["cross_norm"] = norm_init(cfg.norm, d, dt)
+        p["cross"] = attn_init(ks[1], d, cfg.num_heads, cfg.num_kv_heads,
+                               cfg.head_dim, cfg.use_bias, dt)
+    if cfg.d_ff > 0 or cfg.moe is not None:
+        p["norm2"] = norm_init(cfg.norm, d, dt)
+        if cfg.moe is not None:
+            p["moe"] = moe_lib.moe_init(ks[2], cfg, dt)
+        else:
+            p["mlp"] = mlp_init(ks[2], d, cfg.d_ff, cfg.activation,
+                                cfg.use_bias, dt)
+    return p
+
+
+def block_apply(p, cfg: ModelConfig, kind, x, positions, cache=None,
+                cross_kv=None, causal=True, fill_cache=False):
+    """Returns (x, new_cache, aux_losses). cross_kv is the raw encoder
+    output; per-layer K/V projections are applied here."""
+    aux = {}
+    h = apply_norm(cfg.norm, p["norm1"], x)
+    new_cache = None
+    if kind == "attn":
+        out, new_cache = attn_apply(
+            p["attn"], h, cfg, positions,
+            cache=None if cache is None else cache,
+            causal=causal, fill_cache=fill_cache,
+        )
+    elif kind == "rglru":
+        out, new_cache = rglru_apply(p["rglru"], cfg, h, state=cache,
+                                     return_state=fill_cache)
+    elif kind == "ssd":
+        out, new_cache = ssd_apply(p["ssd"], cfg, h, state=cache,
+                                   return_state=fill_cache)
+    x = x + out
+    if "cross" in p and cross_kv is not None:
+        h = apply_norm(cfg.norm, p["cross_norm"], x)
+        enc = cross_kv
+        B, Se = enc.shape[:2]
+        ck = (enc @ p["cross"]["k"]["w"]).reshape(
+            B, Se, cfg.num_kv_heads, cfg.head_dim)
+        cv = (enc @ p["cross"]["v"]["w"]).reshape(
+            B, Se, cfg.num_kv_heads, cfg.head_dim)
+        if "b" in p["cross"]["k"]:
+            ck = ck + p["cross"]["k"]["b"].reshape(cfg.num_kv_heads,
+                                                   cfg.head_dim)
+            cv = cv + p["cross"]["v"]["b"].reshape(cfg.num_kv_heads,
+                                                   cfg.head_dim)
+        out, _ = attn_apply(p["cross"], h, cfg, positions, cross_kv=(ck, cv))
+        x = x + out
+    if "mlp" in p:
+        x = x + mlp(p["mlp"], apply_norm(cfg.norm, p["norm2"], x),
+                    cfg.activation)
+    elif "moe" in p:
+        y, aux = moe_lib.moe_apply(p["moe"], cfg,
+                                   apply_norm(cfg.norm, p["norm2"], x))
+        x = x + y
+    return x, new_cache, aux
+
+
+def block_cache_init(cfg, kind, batch, seq, dtype):
+    if kind == "attn":
+        return attn_cache_init(cfg, batch, seq, dtype)
+    if kind == "rglru":
+        return rglru_state_init(cfg, batch, dtype)
+    if kind == "ssd":
+        return ssd_state_init(cfg, batch, dtype)
+    raise ValueError(kind)
+
+
+# ------------------------------------------------------------------------- #
+# parameter tree
+# ------------------------------------------------------------------------- #
+def init(key, cfg: ModelConfig, max_seq: int = 0):
+    """Full parameter pytree. Layer stacks are leading-axis-stacked for
+    lax.scan: params['scan'][name] has shape (n_periods, ...)."""
+    dt = _dtype(cfg)
+    kinds = pattern_kinds(cfg)
+    period = len(cfg.layer_pattern)
+    n_scan = cfg.num_layers // period if cfg.scan_layers else 0
+    tail_kinds = kinds[n_scan * period:]
+    cross = cfg.is_encdec
+
+    keys = jax.random.split(key, 8)
+    p: dict = {"embed": embed_init(keys[0], cfg.vocab_size, cfg.d_model, dt)}
+    if not cfg.tie_embeddings:
+        p["unembed"] = {
+            "w": embed_init(keys[1], cfg.d_model, cfg.vocab_size, dt)
+        }
+    p["final_norm"] = norm_init(cfg.norm, cfg.d_model, dt)
+
+    if n_scan:
+        def one_period(k):
+            ks = jax.random.split(k, period)
+            return {f"b{i}": block_init(ks[i], cfg, cfg.layer_pattern[i], cross)
+                    for i in range(period)}
+        p["scan"] = jax.vmap(one_period)(jax.random.split(keys[2], n_scan))
+    if tail_kinds:
+        ks = jax.random.split(keys[3], len(tail_kinds))
+        p["tail"] = [block_init(ks[i], cfg, kind, cross)
+                     for i, kind in enumerate(tail_kinds)]
+
+    if cfg.is_encdec:
+        e = cfg.encdec
+        ks = jax.random.split(keys[4], e.enc_layers + 2)
+        p["enc"] = {
+            "blocks": [block_init(ks[i], cfg, "attn") for i in range(e.enc_layers)],
+            "final_norm": norm_init(cfg.norm, cfg.d_model, dt),
+            "pos": (jax.random.normal(ks[-1], (e.enc_seq, cfg.d_model),
+                                      jnp.float32) * 0.02).astype(dt),
+        }
+    if cfg.positional == "learned":
+        assert max_seq > 0, "absolute-position model needs max_seq"
+        p["pos"] = (jax.random.normal(keys[5], (max_seq, cfg.d_model),
+                                      jnp.float32) * 0.02).astype(dt)
+    return p
+
+
+# ------------------------------------------------------------------------- #
+# forward over the block stack
+# ------------------------------------------------------------------------- #
+def _stack_apply(params, cfg, x, positions, caches=None, cross_kv=None,
+                 fill_cache=False):
+    """Run all layers. Three modes:
+      train   : caches=None, fill_cache=False  (remat'd scan, aux carried)
+      prefill : caches=None, fill_cache=True   (caches emitted as scan ys)
+      decode  : caches=dict                     (caches threaded as xs/ys)
+    Returns (x, new_caches, aux)."""
+    period = len(cfg.layer_pattern)
+    n_scan = cfg.num_layers // period if cfg.scan_layers else 0
+    aux_total = {}
+
+    def add_aux(aux):
+        for k, v in aux.items():
+            aux_total[k] = aux_total.get(k, 0.0) + v
+
+    def period_fn(x, layer_p, layer_cache):
+        lc_out = {}
+        aux_p = {}
+        for i in range(period):
+            kind = cfg.layer_pattern[i]
+            c = None if layer_cache is None else layer_cache[f"b{i}"]
+            x, nc, aux = block_apply(layer_p[f"b{i}"], cfg, kind, x,
+                                     positions, cache=c, cross_kv=cross_kv,
+                                     fill_cache=fill_cache)
+            lc_out[f"b{i}"] = nc
+            for k, v in aux.items():
+                aux_p[k] = aux_p.get(k, 0.0) + v
+        return x, lc_out, aux_p
+
+    new_caches = {"scan": None, "tail": []}
+    if n_scan:
+        if caches is None and not fill_cache:          # --- train --------- #
+            def body(carry, layer_p):
+                x, aux_c = carry
+                x, _, aux = period_fn(x, layer_p, None)
+                aux_c = {k: aux_c.get(k, 0.0) + aux.get(k, 0.0)
+                         for k in set(aux_c) | set(aux)}
+                return (x, aux_c), None
+
+            aux0 = ({"moe_load_balance": jnp.zeros(()),
+                     "moe_router_z": jnp.zeros(())}
+                    if cfg.moe is not None else {})
+            if cfg.remat != "none":
+                body = jax.checkpoint(body, prevent_cse=False)
+            (x, aux_c), _ = jax.lax.scan(body, (x, aux0), params["scan"])
+            add_aux(aux_c)
+        elif caches is None and fill_cache:            # --- prefill ------- #
+            def body(x, layer_p):
+                x, lc, _ = period_fn(x, layer_p, None)
+                return x, lc
+
+            x, scan_caches = jax.lax.scan(body, x, params["scan"])
+            new_caches["scan"] = scan_caches
+        else:                                          # --- decode -------- #
+            def body(x, inp):
+                layer_p, layer_cache = inp
+                x, lc, _ = period_fn(x, layer_p, layer_cache)
+                return x, lc
+
+            x, scan_caches = jax.lax.scan(
+                body, x, (params["scan"], caches["scan"])
+            )
+            new_caches["scan"] = scan_caches
+
+    for i, bp in enumerate(params.get("tail", [])):
+        kind = cfg.layer_pattern[(n_scan * period + i) % period]
+        c = None if caches is None else caches["tail"][i]
+        x, nc, aux = block_apply(bp, cfg, kind, x, positions, cache=c,
+                                 cross_kv=cross_kv, fill_cache=fill_cache)
+        add_aux(aux)
+        new_caches["tail"].append(nc)
+
+    if caches is None and not fill_cache:
+        new_caches = None
+    return x, new_caches, aux_total
+
+
+def encode(params, cfg, enc_embeds):
+    """Whisper-style encoder over precomputed (stub-frontend) embeddings."""
+    e = params["enc"]
+    x = enc_embeds.astype(_dtype(cfg)) + e["pos"][None, : enc_embeds.shape[1]]
+    pos = jnp.arange(x.shape[1])
+    for bp in e["blocks"]:
+        x, _, _ = block_apply(bp, cfg, "attn", x, pos, causal=False)
+    return apply_norm(cfg.norm, e["final_norm"], x)
+
+
+def _embed_tokens(params, cfg, tokens, positions):
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = x * math.sqrt(cfg.d_model)
+    if cfg.positional == "learned" and "pos" in params:
+        x = x + jnp.take(params["pos"], jnp.broadcast_to(positions, tokens.shape),
+                         axis=0)
+    return x.astype(_dtype(cfg))
+
+
+def _cross_kvs(params, cfg, enc_out):
+    """Precompute per-layer cross-attention K/V from encoder output."""
+    def kv(attn_p):
+        k = enc_out @ attn_p["k"]["w"]
+        v = enc_out @ attn_p["v"]["w"]
+        if "b" in attn_p["k"]:
+            k = k + attn_p["k"]["b"]
+            v = v + attn_p["v"]["b"]
+        B, S = enc_out.shape[:2]
+        return (k.reshape(B, S, cfg.num_kv_heads, cfg.head_dim),
+                v.reshape(B, S, cfg.num_kv_heads, cfg.head_dim))
+    return kv
+
+
+def forward(params, cfg, tokens, positions, caches=None, enc_out=None,
+            fill_cache=False):
+    """tokens: (B,S) int32. Returns (hidden, new_caches, aux)."""
+    x = _embed_tokens(params, cfg, tokens, positions)
+    x, new_caches, aux = _stack_apply(params, cfg, x, positions, caches,
+                                      cross_kv=enc_out, fill_cache=fill_cache)
+    x = apply_norm(cfg.norm, params["final_norm"], x)
+    return x, new_caches, aux
+
+
+def logits_fn(params, cfg, hidden):
+    if cfg.tie_embeddings:
+        return hidden @ params["embed"].T
+    return linear(params["unembed"], hidden)
+
+
+# ------------------------------------------------------------------------- #
+# losses
+# ------------------------------------------------------------------------- #
+def _xent(logits, targets):
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    return lse - ll
+
+
+def chunked_xent(params, cfg, hidden, targets, chunk):
+    """Cross entropy without materializing (B,S,V): scan over S chunks,
+    rematerializing logits in the backward pass."""
+    B, S, _ = hidden.shape
+    n = S // chunk
+    assert S % chunk == 0
+
+    @jax.checkpoint
+    def body(tot, idx):
+        h = jax.lax.dynamic_slice_in_dim(hidden, idx * chunk, chunk, axis=1)
+        t = jax.lax.dynamic_slice_in_dim(targets, idx * chunk, chunk, axis=1)
+        return tot + jnp.sum(_xent(logits_fn(params, cfg, h), t)), None
+
+    tot, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), jnp.arange(n))
+    return tot / (B * S)
+
+
+def loss_fn(params, cfg: ModelConfig, batch, rng=None):
+    """batch: {"tokens": (B,S), "targets": (B,S)[, "enc_embeds": (B,Se,d)]}"""
+    del rng
+    tokens = batch["tokens"]
+    positions = jnp.arange(tokens.shape[1])
+    enc_out = None
+    if cfg.is_encdec:
+        enc_out = encode(params, cfg, batch["enc_embeds"])
+    hidden, _, aux = forward(params, cfg, tokens, positions, enc_out=enc_out)
+    if cfg.xent_chunk and tokens.shape[1] % cfg.xent_chunk == 0:
+        loss = chunked_xent(params, cfg, hidden, batch["targets"],
+                            cfg.xent_chunk)
+    else:
+        loss = jnp.mean(_xent(logits_fn(params, cfg, hidden), batch["targets"]))
+    metrics = {"loss": loss, **{k: v for k, v in aux.items()}}
+    total = loss + sum(aux.values()) if aux else loss
+    return total, metrics
+
+
+# ------------------------------------------------------------------------- #
+# serving
+# ------------------------------------------------------------------------- #
+def init_cache(cfg, batch, seq, dtype=None):
+    dtype = dtype or _dtype(cfg)
+    kinds = pattern_kinds(cfg)
+    period = len(cfg.layer_pattern)
+    n_scan = cfg.num_layers // period if cfg.scan_layers else 0
+
+    def one(kind):
+        return block_cache_init(cfg, kind, batch, seq, dtype)
+
+    caches = {"scan": None, "tail": []}
+    if n_scan:
+        period_cache = {f"b{i}": one(cfg.layer_pattern[i]) for i in range(period)}
+        caches["scan"] = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (n_scan,) + x.shape).copy()
+            if hasattr(x, "shape") else x,
+            period_cache,
+        )
+    for kind in kinds[n_scan * period:]:
+        caches["tail"].append(one(kind))
+    if cfg.is_encdec:
+        caches["enc_out"] = jnp.zeros(
+            (batch, cfg.encdec.enc_seq, cfg.d_model), dtype
+        )
+    return caches
+
+
+def decode_step(params, cfg, tokens, caches):
+    """tokens: (B,1). Uses and updates caches; returns (logits (B,V), caches)."""
+    t = _cache_pos(caches, cfg)
+    positions = t + jnp.zeros((1,), jnp.int32)
+    enc_out = caches.get("enc_out") if cfg.is_encdec else None
+    model_caches = {k: v for k, v in caches.items() if k != "enc_out"}
+    hidden, new_caches, _ = forward(params, cfg, tokens, positions,
+                                    caches=model_caches, enc_out=enc_out)
+    if cfg.is_encdec:
+        new_caches["enc_out"] = caches["enc_out"]
+    logits = logits_fn(params, cfg, hidden[:, -1])
+    return logits, new_caches
+
+
+def prefill(params, cfg, tokens, enc_embeds=None, max_len: int = 0):
+    """Run the full prompt in one pass; return (last_logits, decode-ready
+    caches). Attention K/V land directly in cache layout; recurrent mixers
+    emit their final states. max_len > prompt length reserves decode slots
+    in global-attention caches (rolling-window caches are fixed-size)."""
+    positions = jnp.arange(tokens.shape[1])
+    enc_out = encode(params, cfg, enc_embeds) if cfg.is_encdec else None
+    hidden, caches, _ = forward(params, cfg, tokens, positions,
+                                enc_out=enc_out, fill_cache=True)
+    if max_len > tokens.shape[1] and cfg.attention_window == 0:
+        caches = _pad_attn_caches(caches, max_len)
+    if cfg.is_encdec:
+        caches["enc_out"] = enc_out
+    logits = logits_fn(params, cfg, hidden[:, -1])
+    return logits, caches
+
+
+def _pad_attn_caches(caches, max_len):
+    def pad(sub):
+        if isinstance(sub, dict) and "k" in sub and "pos" in sub:
+            extra = max_len - sub["k"].shape[-3]
+            if extra > 0:
+                widths = [(0, 0)] * sub["k"].ndim
+                widths[-3] = (0, extra)
+                sub = dict(sub, k=jnp.pad(sub["k"], widths),
+                           v=jnp.pad(sub["v"], widths))
+            return sub
+        return sub
+
+    return jax.tree.map(
+        pad, caches,
+        is_leaf=lambda x: isinstance(x, dict) and "k" in x and "pos" in x,
+    )
+
+
+def _cache_pos(caches, cfg):
+    leaves = caches["tail"] if caches.get("tail") else None
+    if caches.get("scan") is not None:
+        for v in caches["scan"].values():
+            if isinstance(v, dict) and "pos" in v:
+                return v["pos"][0] if v["pos"].ndim else v["pos"]
+    if leaves:
+        for v in leaves:
+            if isinstance(v, dict) and "pos" in v:
+                return v["pos"]
+    return jnp.zeros((), jnp.int32)  # pure-recurrent models track no pos

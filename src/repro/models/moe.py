@@ -1,0 +1,125 @@
+"""Mixture-of-experts FFN: top-k routing with capacity-based one-hot-cumsum
+dispatch (Mesh-TensorFlow style — fully auto-shardable: experts over the
+'model' axis, capacity slots over 'data'), load-balance + router-z losses,
+and Arctic's dense-residual variant (a small dense FFN added in parallel).
+
+Production note (DESIGN.md): a shard_map ragged all-to-all dispatch would
+cut dispatch memory further; the einsum form is chosen because it composes
+with the auto-sharded model axis and lowers cleanly for every mesh.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .layers import _constrain_batch_only as _constrain
+from .layers import linear, linear_init, mlp, mlp_init
+
+
+def moe_init(key, cfg, dtype):
+    m = cfg.moe
+    d = cfg.d_model
+    ks = jax.random.split(key, 5)
+    scale_in = 1.0 / math.sqrt(d)
+    scale_out = 1.0 / math.sqrt(m.d_ff_expert)
+
+    def experts(k, shape, scale):
+        return (jax.random.normal(k, shape, jnp.float32) * scale).astype(dtype)
+
+    p = {
+        "router": linear_init(ks[0], d, m.num_experts, False, jnp.float32),
+        "gate_proj": experts(ks[1], (m.num_experts, d, m.d_ff_expert), scale_in),
+        "up_proj": experts(ks[2], (m.num_experts, d, m.d_ff_expert), scale_in),
+        "down_proj": experts(ks[3], (m.num_experts, m.d_ff_expert, d), scale_out),
+    }
+    if m.has_dense_residual:
+        p["dense"] = mlp_init(ks[4], d, m.dense_residual_d_ff, cfg.activation,
+                              cfg.use_bias, dtype)
+    return p
+
+
+def moe_apply(p, cfg, x):
+    """x: (B, S, d) -> (y, aux_losses dict)."""
+    m = cfg.moe
+    B, S, d = x.shape
+    T = B * S
+
+    xt = x.reshape(T, d)
+    logits = linear(p["router"], xt.astype(jnp.float32))        # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, m.top_k)       # (T, k)
+    gate_vals = gate_vals / (jnp.sum(gate_vals, -1, keepdims=True) + 1e-9)
+
+    # ---- aux losses ------------------------------------------------------ #
+    me = jnp.mean(probs, axis=0)                                # (E,)
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(expert_idx, m.num_experts), axis=1), axis=0
+    )                                                           # frac routed
+    aux = {
+        "moe_load_balance": m.router_aux_coef * m.num_experts
+        * jnp.sum(me * ce),
+        "moe_router_z": m.router_z_coef
+        * jnp.mean(jnp.square(jax.nn.logsumexp(logits, axis=-1))),
+    }
+
+    if m.dispatch == "per_row":
+        # ranks + capacity per batch row: everything left of the expert
+        # einsum is local to a 'data' shard (no cross-device cumsum), and
+        # the stacked dispatch buffers are pinned batch-sharded so the
+        # scatter never forces replication (§Perf hillclimb 1).
+        cap = int(max(m.top_k, math.ceil(m.top_k * S / m.num_experts
+                                         * m.capacity_factor)))
+        ei = expert_idx.reshape(B, S, m.top_k)
+        gv = gate_vals.reshape(B, S, m.top_k)
+        y = jax.vmap(
+            lambda xr, er, gr: _dispatch_combine(p, cfg, xr, er, gr, cap)
+        )(x, ei, gv)
+        y = _constrain(y.reshape(B, S, d), B)
+    else:
+        cap = int(max(m.top_k, math.ceil(m.top_k * S / m.num_experts
+                                         * m.capacity_factor)) * B)
+        y = _dispatch_combine(p, cfg, xt, expert_idx, gate_vals,
+                              cap).reshape(B, S, d)
+
+    if "dense" in p:  # Arctic: dense FFN residual in parallel with MoE
+        y = y + mlp(p["dense"], xt, cfg.activation).reshape(B, S, d)
+    return y, aux
+
+
+def _dispatch_combine(p, cfg, xt, expert_idx, gate_vals, cap):
+    """One-hot-cumsum capacity dispatch + batched expert FFN + combine.
+    xt: (T, d); expert_idx/gate_vals: (T, k)."""
+    m = cfg.moe
+    T, d = xt.shape
+    k = m.top_k
+    E = m.num_experts
+
+    flat_e = expert_idx.reshape(T * k)
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)
+    ranks = jnp.cumsum(onehot, axis=0) - onehot                 # rank within expert
+    rank = jnp.take_along_axis(ranks, flat_e[:, None], axis=1)[:, 0]
+    keep = rank < cap
+    rank_c = jnp.where(keep, rank, 0)
+
+    x_rep = jnp.repeat(xt, k, axis=0)                           # (T*k, d)
+    buf = jnp.zeros((E, cap, d), xt.dtype)
+    buf = buf.at[flat_e, rank_c].add(
+        jnp.where(keep[:, None], x_rep, 0), mode="drop"
+    )
+
+    # ---- expert FFN (batched over experts) -------------------------------- #
+    act = jax.nn.silu if cfg.activation in ("silu",) else (
+        lambda v: jax.nn.gelu(v, approximate=True)
+    )
+    h = act(jnp.einsum("ecd,edf->ecf", buf, p["gate_proj"])) * jnp.einsum(
+        "ecd,edf->ecf", buf, p["up_proj"]
+    )
+    out_buf = jnp.einsum("ecf,efd->ecd", h, p["down_proj"])     # (E,cap,d)
+
+    # ---- combine ----------------------------------------------------------- #
+    tok_out = out_buf[flat_e, rank_c]                           # (T*k, d)
+    tok_out = jnp.where(keep[:, None], tok_out, 0)
+    w = gate_vals.reshape(T * k)[:, None].astype(tok_out.dtype)
+    return jnp.sum((tok_out * w).reshape(T, k, d), axis=1)

@@ -1,0 +1,92 @@
+"""Optimizer subsystem. The distributed optimizers (OMD / optimistic Adam /
+Adam / SGD with the quantized exchange) live in `repro.core.dqgan` — this
+module exposes single-machine transforms used by tests, examples, and the
+GAN baselines, in a tiny optax-like (init_fn, update_fn) interface."""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: callable   # params -> state
+    update: callable  # (grads, state, params) -> (new_params, new_state)
+
+
+def sgd(lr: float) -> Optimizer:
+    def init(params):
+        return ()
+
+    def update(grads, state, params):
+        new = jax.tree.map(lambda w, g: w - lr * g.astype(w.dtype), params, grads)
+        return new, state
+
+    return Optimizer(init, update)
+
+
+def adam(lr, b1=0.9, b2=0.999, eps=1e-8) -> Optimizer:
+    def init(params):
+        z = jax.tree.map(lambda w: jnp.zeros_like(w, jnp.float32), params)
+        return {"m": z, "v": z, "t": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        t = state["t"] + 1
+        tf = t.astype(jnp.float32)
+        m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state["m"], grads)
+        v = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * jnp.square(g),
+                         state["v"], grads)
+        new = jax.tree.map(
+            lambda w, m_, v_: w - (lr * (m_ / (1 - b1**tf))
+                                   / (jnp.sqrt(v_ / (1 - b2**tf)) + eps)
+                                   ).astype(w.dtype),
+            params, m, v,
+        )
+        return new, {"m": m, "v": v, "t": t}
+
+    return Optimizer(init, update)
+
+
+def oadam(lr, b1=0.9, b2=0.999, eps=1e-8) -> Optimizer:
+    """Optimistic Adam (Daskalakis et al. 2018): w ← w − η(2 d_t − d_{t−1})."""
+    base = adam(lr, b1, b2, eps)
+
+    def init(params):
+        st = base.init(params)
+        st["prev"] = jax.tree.map(lambda w: jnp.zeros_like(w, jnp.float32),
+                                  params)
+        return st
+
+    def update(grads, state, params):
+        t = state["t"] + 1
+        tf = t.astype(jnp.float32)
+        m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state["m"], grads)
+        v = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * jnp.square(g),
+                         state["v"], grads)
+        d = jax.tree.map(
+            lambda m_, v_: (m_ / (1 - b1**tf))
+            / (jnp.sqrt(v_ / (1 - b2**tf)) + eps),
+            m, v,
+        )
+        new = jax.tree.map(
+            lambda w, d_, p: w - (lr * (2 * d_ - p)).astype(w.dtype),
+            params, d, state["prev"],
+        )
+        return new, {"m": m, "v": v, "t": t, "prev": d}
+
+    return Optimizer(init, update)
+
+
+def cosine_lr(base_lr, warmup, total):
+    def schedule(step):
+        s = jnp.asarray(step, jnp.float32)
+        warm = s / jnp.maximum(warmup, 1)
+        prog = jnp.clip((s - warmup) / jnp.maximum(total - warmup, 1), 0, 1)
+        cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return base_lr * jnp.where(s < warmup, warm, cos)
+
+    return schedule
+
+
+REGISTRY = {"sgd": sgd, "adam": adam, "oadam": oadam}

@@ -1,0 +1,7 @@
+from .sharding import (  # noqa: F401
+    batch_axes,
+    batch_spec,
+    cache_specs,
+    param_specs,
+    shardings,
+)

@@ -1,0 +1,129 @@
+"""Property tests for the δ-approximate compressors (paper Def. 1, Thms 1–2)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import compressors as C
+
+KEY = jax.random.key(0)
+
+
+def vec(draw, n):
+    xs = draw(st.lists(st.floats(-100, 100, allow_nan=False, width=32),
+                       min_size=n, max_size=n))
+    return jnp.array(xs, jnp.float32)
+
+
+vec_strategy = st.integers(8, 200).flatmap(
+    lambda n: st.lists(
+        st.floats(-100, 100, allow_nan=False, width=32),
+        min_size=n, max_size=n,
+    )
+)
+
+
+@settings(max_examples=40, deadline=None)
+@given(vec_strategy)
+def test_topk_is_delta_contraction(xs):
+    """Thm 1: ||Q(v)-v||² ≤ (1 - k/d)||v||² — deterministically, per sample."""
+    v = jnp.array(xs, jnp.float32)
+    comp = C.TopK(frac=0.25)
+    vhat = comp.roundtrip(v, KEY)
+    lhs = float(jnp.sum((vhat - v) ** 2))
+    delta = comp.delta(v.size)
+    rhs = (1 - delta) * float(jnp.sum(v**2))
+    assert lhs <= rhs + 1e-4
+
+
+@settings(max_examples=40, deadline=None)
+@given(vec_strategy)
+def test_sign_is_contraction(xs):
+    """sign·mean(|v|) satisfies Def. 1 with δ = ||v||₁²/(d·||v||₂²)."""
+    v = jnp.array(xs, jnp.float32)
+    if float(jnp.sum(jnp.abs(v))) == 0.0:
+        return
+    vhat = C.SignMean().roundtrip(v, KEY)
+    lhs = float(jnp.sum((vhat - v) ** 2))
+    l1, l2sq = float(jnp.sum(jnp.abs(v))), float(jnp.sum(v**2))
+    delta = l1**2 / (v.size * l2sq)
+    assert 0 < delta <= 1 + 1e-6
+    assert lhs <= (1 - delta) * l2sq + 1e-3 * l2sq
+
+
+@settings(max_examples=25, deadline=None)
+@given(vec_strategy)
+def test_qsgd_contraction_in_expectation(xs):
+    """Thm 2: the stochastic quantizers are δ-approximate (measured over
+    repeated draws; linf-scaled 8-bit must beat δ ≥ 0.9)."""
+    v = jnp.array(xs, jnp.float32)
+    if float(jnp.max(jnp.abs(v))) == 0.0:
+        return
+    comp = C.StochasticQuant(bits=8, norm="linf")
+    errs = []
+    for i in range(16):
+        vhat = comp.roundtrip(v, jax.random.fold_in(KEY, i))
+        errs.append(float(jnp.sum((vhat - v) ** 2)))
+    l2sq = float(jnp.sum(v**2))
+    assert np.mean(errs) <= (1 - 0.9) * l2sq + 1e-5
+
+
+def test_qsgd_unbiased():
+    """Thm 2: E[Q(v)] = v for the stochastic quantizer."""
+    v = jax.random.normal(KEY, (256,))
+    comp = C.StochasticQuant(bits=4, norm="linf")
+    acc = jnp.zeros_like(v)
+    n = 600
+    for i in range(n):
+        acc = acc + comp.roundtrip(v, jax.random.fold_in(KEY, i))
+    est = acc / n
+    scale = float(jnp.max(jnp.abs(v)))
+    np.testing.assert_allclose(np.asarray(est), np.asarray(v),
+                               atol=4 * scale / 7 / np.sqrt(n) * 4)
+
+
+def test_randk_expectation_contraction():
+    v = jax.random.normal(KEY, (400,))
+    comp = C.RandK(frac=0.25)
+    errs = [float(jnp.sum((comp.roundtrip(v, jax.random.fold_in(KEY, i)) - v) ** 2))
+            for i in range(200)]
+    l2sq = float(jnp.sum(v**2))
+    assert abs(np.mean(errs) / l2sq - 0.75) < 0.05
+
+
+@pytest.mark.parametrize("name", sorted(C.REGISTRY))
+@pytest.mark.parametrize("shape", [(64,), (16, 32), (4, 8, 8)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_roundtrip_shape_dtype(name, shape, dtype):
+    comp = C.get(name)
+    v = jax.random.normal(KEY, shape).astype(dtype)
+    out = comp.roundtrip(v, KEY)
+    assert out.shape == v.shape and out.dtype == v.dtype
+    # error never exceeds the identity bound ||v||²  (δ > 0)
+    err = float(jnp.sum((out.astype(jnp.float32) - v.astype(jnp.float32)) ** 2))
+    l2 = float(jnp.sum(v.astype(jnp.float32) ** 2))
+    assert err <= l2 * (1 + 1e-3) + 1e-6
+
+
+def test_wire_bytes_ordering():
+    shape = (1024,)
+    full = C.get("identity").wire_bytes(shape)
+    q8 = C.get("qsgd8_linf").wire_bytes(shape)
+    q4 = C.get("qsgd4_linf").wire_bytes(shape)
+    sign = C.get("sign").wire_bytes(shape)
+    assert full > q8 > q4 > sign
+    assert q8 <= full / 4 + 16
+
+
+def test_per_block_scales_reduce_error():
+    # heavy-tailed vector: per-block scaling must quantize the small half
+    # much better than one global scale
+    v = jnp.concatenate([jax.random.normal(KEY, (256,)),
+                         100.0 * jax.random.normal(jax.random.fold_in(KEY, 1),
+                                                   (256,))])
+    glob = C.StochasticQuant(bits=8, norm="linf")
+    blk = C.StochasticQuant(bits=8, norm="linf", per_block=256)
+    e_g = float(jnp.sum((glob.roundtrip(v, KEY) - v) ** 2))
+    e_b = float(jnp.sum((blk.roundtrip(v, KEY) - v) ** 2))
+    assert e_b < e_g

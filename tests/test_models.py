@@ -1,0 +1,159 @@
+"""Per-architecture smoke + correctness tests on reduced configs:
+(f) deliverable — one reduced-variant train step per assigned arch, plus the
+decode-vs-teacher-forcing equivalence that exercises every cache type
+(KV, rolling-window KV, SSD state, RG-LRU state, enc-dec cross-attn)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.configs as cfgs
+from repro.models import build
+from repro.models import model as lm
+
+ARCHS = list(cfgs.ASSIGNED) + ["gemma-2b-swa"]
+KEY = jax.random.key(0)
+
+
+def _batch(cfg, B=2, S=32):
+    batch = {
+        "tokens": jax.random.randint(KEY, (B, S), 0, cfg.vocab_size),
+        "targets": jax.random.randint(KEY, (B, S), 0, cfg.vocab_size),
+    }
+    if cfg.is_encdec:
+        batch["enc_embeds"] = 0.1 * jax.random.normal(
+            KEY, (B, cfg.encdec.enc_seq, cfg.d_model))
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_reduced_train_step(arch):
+    cfg = cfgs.get(arch).reduced()
+    bundle = build(cfg)
+    params = bundle.init(KEY, max_seq=64)
+    batch = _batch(cfg)
+    grads, metrics = jax.jit(bundle.field_fn)(params, batch, KEY)
+    assert jnp.isfinite(metrics["loss"])
+    flat = jax.tree.leaves(grads)
+    assert all(g.shape == p.shape for g, p in
+               zip(flat, jax.tree.leaves(params)))
+    assert not any(bool(jnp.any(jnp.isnan(g))) for g in flat)
+    assert float(sum(jnp.sum(jnp.abs(g)) for g in flat)) > 0
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_decode_matches_teacher_forcing(arch):
+    """prefill(tokens[:p]) then step-by-step decode must reproduce the
+    teacher-forced forward logits at every position."""
+    cfg = cfgs.get(arch).reduced()
+    bundle = build(cfg)
+    params = bundle.init(KEY, max_seq=64)
+    B, S, p = 2, 24, 8
+    tokens = jax.random.randint(KEY, (B, S), 0, cfg.vocab_size)
+    enc = (0.1 * jax.random.normal(KEY, (B, cfg.encdec.enc_seq, cfg.d_model))
+           if cfg.is_encdec else None)
+
+    # teacher forcing
+    positions = jnp.arange(S)
+    enc_out = lm.encode(params, cfg, enc) if cfg.is_encdec else None
+    hidden, _, _ = lm.forward(params, cfg, tokens, positions, enc_out=enc_out)
+    full_logits = lm.logits_fn(params, cfg, hidden)  # (B, S, V)
+
+    # prefill + decode
+    logits_p, caches = bundle.prefill(params, tokens[:, :p], enc, max_len=S)
+    np.testing.assert_allclose(np.asarray(logits_p),
+                               np.asarray(full_logits[:, p - 1]),
+                               rtol=2e-3, atol=2e-3)
+    decode = jax.jit(bundle.decode_step)
+    for t in range(p, S):
+        logits_t, caches = decode(params, tokens[:, t:t + 1], caches)
+        np.testing.assert_allclose(
+            np.asarray(logits_t), np.asarray(full_logits[:, t]),
+            rtol=2e-3, atol=2e-3,
+            err_msg=f"{arch} decode diverges at position {t}")
+
+
+def test_sliding_window_masks_distant_tokens():
+    """With window w, position t must be independent of tokens < t - w."""
+    cfg = cfgs.get("gemma-2b-swa").reduced()  # window 32 -> reduced to 32
+    assert cfg.attention_window > 0
+    bundle = build(cfg)
+    params = bundle.init(KEY, max_seq=256)
+    w = cfg.attention_window
+    S = w + 16
+    t1 = jax.random.randint(KEY, (1, S), 0, cfg.vocab_size)
+    t2 = t1.at[:, 0].set((t1[:, 0] + 7) % cfg.vocab_size)  # perturb far past
+    h1, _, _ = lm.forward(params, cfg, t1, jnp.arange(S))
+    h2, _, _ = lm.forward(params, cfg, t2, jnp.arange(S))
+    # positions >= w can no longer see position 0 through ANY layer only if
+    # depth*window > S... with 2 layers receptive field is 2w >= S, so just
+    # check the LAST position with a 1-layer-deep probe: compare against
+    # dense equivalence instead — perturbation must affect early positions
+    # but the attention itself at position t>w must mask index 0:
+    from repro.models.layers import attention_dense
+    q = jax.random.normal(KEY, (1, S, 2, 16))
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), (1, S, 2, 16))
+    v = jax.random.normal(jax.random.fold_in(KEY, 2), (1, S, 2, 16))
+    pos = jnp.arange(S)
+    out = attention_dense(q, k, v, pos, pos, window=w)
+    v2 = v.at[:, 0].add(100.0)  # huge change at position 0
+    out2 = attention_dense(q, k, v2, pos, pos, window=w)
+    np.testing.assert_allclose(np.asarray(out[:, w:]),
+                               np.asarray(out2[:, w:]), atol=1e-5)
+    assert float(jnp.max(jnp.abs(out[:, :w] - out2[:, :w]))) > 1.0
+
+
+def test_chunked_attention_matches_dense():
+    from repro.models.layers import attention_chunked, attention_dense
+    B, S, H, D = 2, 4096, 2, 32
+    q = jax.random.normal(KEY, (B, S, H, D))
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), (B, S, H, D))
+    v = jax.random.normal(jax.random.fold_in(KEY, 2), (B, S, H, D))
+    pos = jnp.arange(S)
+    for win in (0, 512):
+        dense = attention_dense(q, k, v, pos, pos, window=win)
+        chunked = attention_chunked(q, k, v, window=win, q_chunk=1024)
+        np.testing.assert_allclose(np.asarray(chunked), np.asarray(dense),
+                                   rtol=2e-4, atol=2e-4)
+
+
+def test_chunked_xent_matches_dense():
+    cfg = cfgs.get("gemma-2b").reduced()
+    import dataclasses
+    cfg_chunked = dataclasses.replace(cfg, xent_chunk=8)
+    bundle = build(cfg)
+    params = bundle.init(KEY, max_seq=64)
+    batch = _batch(cfg, B=2, S=32)
+    l1 = lm.loss_fn(params, cfg, batch)[0]
+    l2 = lm.loss_fn(params, cfg_chunked, batch)[0]
+    np.testing.assert_allclose(float(l1), float(l2), rtol=1e-5)
+
+
+def test_scan_vs_unrolled_equivalence():
+    """scan-over-layers must compute the same function as the unrolled stack."""
+    import dataclasses
+    cfg = cfgs.get("mamba2-1.3b").reduced()
+    cfg_unrolled = dataclasses.replace(cfg, scan_layers=False)
+    bundle = build(cfg)
+    params = bundle.init(KEY, max_seq=64)
+    tokens = jax.random.randint(KEY, (2, 16), 0, cfg.vocab_size)
+    h1, _, _ = lm.forward(params, cfg, tokens, jnp.arange(16))
+    # re-pack scan params into tail list for the unrolled config
+    n = cfg.num_layers
+    tail = [jax.tree.map(lambda x: x[i], params["scan"]["b0"]) for i in range(n)]
+    params2 = {k: v for k, v in params.items() if k != "scan"}
+    params2["tail"] = tail
+    h2, _, _ = lm.forward(params2, cfg_unrolled, tokens, jnp.arange(16))
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2), rtol=1e-4,
+                               atol=1e-4)
+
+
+def test_param_count_matches_actual():
+    """Analytic param_count (used for MODEL_FLOPS) within 5% of reality."""
+    for arch in ("gemma-2b", "mamba2-1.3b", "qwen3-moe-30b-a3b"):
+        cfg = cfgs.get(arch).reduced()
+        bundle = build(cfg)
+        params = bundle.init(KEY, max_seq=64)
+        actual = sum(x.size for x in jax.tree.leaves(params))
+        analytic = cfg.param_count()
+        assert abs(actual - analytic) / actual < 0.05, (arch, actual, analytic)
