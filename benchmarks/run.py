@@ -8,6 +8,9 @@ Sections:
   speedup     : paper Fig 4 — modeled time/step and speedup vs workers
   compression : compressor micro-bench (throughput, ratio, measured δ)
   kernels     : Pallas fused quantize+EF + flash attention vs jnp oracle
+  comm        : repro.comm wire telemetry — bytes/step (per-step, cumulative,
+                achieved ratio) and two_phase sim-fallback counts, seed
+                per-tensor planner vs bucketed, on dcgan32 + gemma-2b smoke
 """
 from __future__ import annotations
 
@@ -151,18 +154,71 @@ def bench_kernels(quick: bool):
 
 
 # --------------------------------------------------------------------------- #
+def bench_comm(quick: bool, sim_steps: int = 0):
+    """repro.comm telemetry on the two smoke configs: per-step + cumulative
+    wire bytes, achieved compression ratio, and how many tensors the seed
+    per-tensor two_phase planner bounces to `sim` vs the bucketed planner.
+    Two worker counts: 8 (power-of-two pod) and 12 (3 hosts x 4 chips —
+    the non-power-of-two case where per-tensor chunking falls apart)."""
+    import repro.configs as cfgs
+    from repro import comm
+    from repro.models import build
+
+    sim_steps = sim_steps or (10 if quick else 100)
+    out = {"sim_steps": sim_steps, "configs": {}}
+    for arch in ("dcgan32", "gemma-2b"):
+        cfg = cfgs.get(arch).reduced()
+        bundle = build(cfg)
+        params = jax.eval_shape(lambda k: bundle.init(k, max_seq=32),
+                                jax.random.key(0))
+        shapes = jax.tree.map(lambda x: tuple(x.shape), params)
+        rec = {}
+        for W in (8, 12):
+            for mode in ("seed", "bucketed"):
+                if mode == "seed":
+                    led = comm.CommLedger.from_tree(
+                        "two_phase", "qsgd8_linf", shapes, None, W)
+                else:
+                    layout = comm.build_layout(shapes, None, W,
+                                               bucket_bytes=1 << 20)
+                    plan = comm.plan_comm(layout, "qsgd8_linf", "uniform")
+                    led = comm.CommLedger.from_plan(
+                        layout, plan, "two_phase", W, "qsgd8_linf")
+                led.tick(sim_steps)
+                s = led.summary()
+                rec[f"{mode}_W{W}"] = s
+                row(f"comm/{arch}/W{W}/{mode}", 0.0,
+                    f"wire_mb_step={s['wire_bytes_per_step']/1e6:.3f} "
+                    f"cum_wire_mb={s['cumulative_wire_bytes']/1e6:.1f} "
+                    f"ratio={s['compression_ratio']} "
+                    f"fallbacks={s['n_fallbacks']}/{s['n_entries']}")
+            assert (rec[f"bucketed_W{W}"]["n_fallbacks"]
+                    <= rec[f"seed_W{W}"]["n_fallbacks"])
+        # the non-power-of-two worker count is where bucketing pays off
+        assert (rec["bucketed_W12"]["n_fallbacks"]
+                < rec["seed_W12"]["n_fallbacks"])
+        out["configs"][arch] = rec
+    with open("experiments/comm.json", "w") as f:
+        json.dump(out, f, indent=1)
+    return out
+
+
+# --------------------------------------------------------------------------- #
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="small sizes/steps (CI mode)")
     ap.add_argument("--only", default="",
-                    help="comma list: convergence,speedup,compression,kernels")
+                    help="comma list: convergence,speedup,compression,"
+                         "kernels,comm")
     args = ap.parse_args(argv)
     only = set(args.only.split(",")) if args.only else None
     print("name,us_per_call,derived")
     os.makedirs("experiments", exist_ok=True)
     if not only or "compression" in only:
         bench_compression(args.quick)
+    if not only or "comm" in only:
+        bench_comm(args.quick)
     if not only or "kernels" in only:
         bench_kernels(args.quick)
     if not only or "speedup" in only:

@@ -6,6 +6,19 @@ DQGAN (8-bit + error feedback, the paper's method) — then prints
 mode coverage and the synthetic Fréchet distance for each.
 
     PYTHONPATH=src:. python examples/quickstart.py [--steps 1500]
+
+Going further — the communication subsystem (DESIGN.md §3): the full
+launcher exposes gradient bucketing + layer-wise compression planning
+and logs actual wire bytes per step:
+
+    PYTHONPATH=src python -m repro.launch.train --arch dcgan32 --smoke \
+        --steps 50 --exchange two_phase --comm-plan uniform
+    PYTHONPATH=src python -m repro.launch.train --arch gemma-2b --smoke \
+        --steps 50 --comm-plan delta_budget --comm-budget-mb 1.0
+
+and `python -m benchmarks.run --only comm` writes the per-step /
+cumulative wire-byte comparison (seed per-tensor planner vs bucketed)
+to experiments/comm.json.
 """
 import argparse
 import sys

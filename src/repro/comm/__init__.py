@@ -1,0 +1,37 @@
+"""repro.comm — the communication subsystem (DESIGN.md §3).
+
+Three cooperating pieces:
+
+  buckets.py  : static DDP-style bucketing of the gradient pytree into
+                contiguous, worker-divisible, lane-aligned flat arrays.
+  planner.py  : per-bucket compressor assignment (uniform / size_tiered /
+                delta_budget policies) from analytic δ + a byte budget.
+  ledger.py   : CommLedger — per-step and cumulative on-wire byte
+                telemetry, computed statically from payload shapes.
+
+`core.dqgan` routes the exchange through bucket views when
+DQConfig.comm_plan != "none"; `launch.train` and `benchmarks.run`
+surface the ledger.
+"""
+from .buckets import (  # noqa: F401
+    Bucket,
+    BucketLayout,
+    LeafSlot,
+    build_layout,
+    layout_for_params,
+    pack,
+    unpack_into,
+)
+from .ledger import (  # noqa: F401
+    CommLedger,
+    LedgerEntry,
+    payload_nbytes,
+    strategy_wire_bytes,
+)
+from .planner import (  # noqa: F401
+    BucketAssignment,
+    CommPlan,
+    POLICIES,
+    analytic_delta,
+    plan_comm,
+)

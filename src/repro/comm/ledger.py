@@ -1,0 +1,200 @@
+"""Wire-byte telemetry (DESIGN.md §3.3).
+
+`CommLedger` answers "how many bytes did this step actually move?" without
+a host callback in the hot loop: every payload shape is static, so the
+per-step cost of each exchange is computable once at plan time from the
+*real* payload structure (codes + scales + phase-2 EF re-quantization),
+then accumulated host-side as the training loop ticks.
+
+Two byte counts are kept per entry:
+
+  wire_bytes    : analytic bits-on-the-wire (Compressor.wire_bytes × the
+                  strategy's collective multiplier) — what an optimal wire
+                  format costs; matches benchmarks' modeled numbers.
+  carried_bytes : bytes of the payload buffers the collectives actually
+                  move (via jax.eval_shape over Compressor.compress) —
+                  e.g. sign codes ride in int8, 8× the 1-bit wire model.
+
+For int8 quantizers the two coincide; divergence is the packing headroom
+a custom wire format would recover.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import compressors as C
+from repro.core import exchange as X
+
+from .buckets import BucketLayout
+from .planner import CommPlan
+
+
+# --------------------------------------------------------------------------- #
+# static payload measurement
+# --------------------------------------------------------------------------- #
+def payload_nbytes(comp: C.Compressor, shape) -> int:
+    """Bytes of the buffers comp.compress emits for one tensor (codes +
+    scales + indices ...), measured from abstract shapes — no FLOPs run."""
+    v = jax.ShapeDtypeStruct(tuple(shape), jnp.float32)
+    payload = jax.eval_shape(lambda x: comp.compress(x, jax.random.key(0)), v)
+    return int(sum(math.prod(p.shape) * jnp.dtype(p.dtype).itemsize
+                   for p in jax.tree.leaves(payload)))
+
+
+def strategy_wire_bytes(strategy: str, comp: C.Compressor, shape,
+                        n_workers: int, carried: bool = False) -> float:
+    """Per-worker send+receive bytes for one tensor under a strategy.
+    Mirrors exchange.modeled_wire_bytes; ``carried`` swaps the analytic
+    compressor model for measured payload buffer sizes."""
+    if not carried:
+        return X.modeled_wire_bytes(strategy, comp, shape, n_workers)
+    d = math.prod(shape)
+    W = n_workers
+    cb = payload_nbytes(comp, shape)
+    if strategy in ("exact", "sim"):
+        return 2 * (W - 1) / W * 4 * d     # float ring all-reduce either way
+    if strategy == "allgather":
+        return cb + (W - 1) * cb
+    if strategy == "two_phase":
+        return 2 * (W - 1) / W * cb
+    raise ValueError(strategy)
+
+
+# --------------------------------------------------------------------------- #
+# the ledger
+# --------------------------------------------------------------------------- #
+@dataclass
+class LedgerEntry:
+    tag: str
+    strategy: str
+    compressor: str
+    elems: int
+    n_workers: int
+    wire_bytes: float
+    carried_bytes: float
+    fallback: bool = False
+
+
+@dataclass
+class CommLedger:
+    """Accumulates per-step wire cost. Register entries once (at plan
+    time), then ``tick()`` each training step; read ``summary()``."""
+    entries: List[LedgerEntry] = field(default_factory=list)
+    steps: int = 0
+
+    # -- registration ------------------------------------------------------- #
+    def register(self, tag, strategy, comp: C.Compressor, shape,
+                 n_workers: int, fallback: bool = False):
+        self.entries.append(LedgerEntry(
+            tag=tag, strategy=strategy, compressor=comp.name,
+            elems=math.prod(shape), n_workers=n_workers,
+            wire_bytes=strategy_wire_bytes(strategy, comp, shape, n_workers),
+            carried_bytes=strategy_wire_bytes(strategy, comp, shape,
+                                              n_workers, carried=True),
+            fallback=fallback,
+        ))
+
+    @classmethod
+    def from_plan(cls, layout: BucketLayout, plan: CommPlan, strategy: str,
+                  n_workers: int, base_compressor: str,
+                  leaf_plans: Optional[list] = None) -> "CommLedger":
+        """Ledger for the bucketed path: one entry per bucket (its assigned
+        compressor) + one per skipped leaf on the per-tensor path.
+        ``leaf_plans`` are the exchange.plan_leaf dicts for skipped leaves
+        (to account their sim fallbacks faithfully). Without them we cannot
+        re-derive the real plan — skipped leaves are skipped *because* they
+        are sharded, and the spec is gone from the layout — so we account
+        them conservatively as sim fallbacks (full-precision wire)."""
+        led = cls()
+        W = max(n_workers, 2)  # collective multipliers degenerate at W=1
+        for b, a in zip(layout.buckets, plan.assignments):
+            led.register(f"bucket/{b.bid}", strategy, C.get(a.compressor),
+                         (b.size,), W)
+        base = C.get(base_compressor)
+        for i, s in enumerate(layout.skipped):
+            if leaf_plans:
+                lp = leaf_plans[i]
+            else:
+                lp = {"strategy": "sim" if strategy == "two_phase"
+                      else strategy,
+                      "fallback": strategy == "two_phase"}
+            led.register(f"leaf{s.path}", lp["strategy"], base, s.shape, W,
+                         fallback=lp.get("fallback", False))
+        return led
+
+    @classmethod
+    def from_tree(cls, strategy: str, comp_name: str, shapes_tree,
+                  specs_tree, n_workers: int) -> "CommLedger":
+        """Ledger for the seed per-tensor path (comm_plan='none')."""
+        led = cls()
+        W = max(n_workers, 2)
+        is_shape = (lambda x: isinstance(x, tuple)
+                    and all(isinstance(i, int) for i in x))
+        if specs_tree is None:
+            from jax.sharding import PartitionSpec as P
+            specs_tree = jax.tree.map(lambda _: P(), shapes_tree,
+                                      is_leaf=is_shape)
+        plans = X.plan_for_tree(strategy, shapes_tree, specs_tree, n_workers)
+        comp = C.get(comp_name)
+        flat, _ = jax.tree_util.tree_flatten_with_path(
+            shapes_tree,
+            is_leaf=lambda x: isinstance(x, tuple)
+            and all(isinstance(i, int) for i in x))
+        plan_leaves = jax.tree.leaves(
+            plans, is_leaf=lambda x: isinstance(x, dict) and "strategy" in x)
+        for (path, shape), lp in zip(flat, plan_leaves):
+            led.register(f"leaf{jax.tree_util.keystr(path)}",
+                         lp["strategy"], comp, shape, W,
+                         fallback=lp.get("fallback", False))
+        return led
+
+    # -- accumulation ------------------------------------------------------- #
+    def tick(self, n: int = 1):
+        self.steps += n
+
+    # -- readouts ----------------------------------------------------------- #
+    @property
+    def wire_bytes_per_step(self) -> float:
+        return sum(e.wire_bytes for e in self.entries)
+
+    @property
+    def carried_bytes_per_step(self) -> float:
+        return sum(e.carried_bytes for e in self.entries)
+
+    @property
+    def raw_bytes_per_step(self) -> float:
+        """What the exact (f32 ring all-reduce) exchange would move."""
+        total = 0.0
+        for e in self.entries:
+            total += strategy_wire_bytes(
+                "exact", C.get("identity"), (e.elems,), e.n_workers)
+        return total
+
+    @property
+    def cumulative_wire_bytes(self) -> float:
+        return self.steps * self.wire_bytes_per_step
+
+    @property
+    def compression_ratio(self) -> float:
+        w = self.wire_bytes_per_step
+        return self.raw_bytes_per_step / w if w else 1.0
+
+    def n_fallbacks(self) -> int:
+        return sum(1 for e in self.entries if e.fallback)
+
+    def summary(self) -> dict:
+        return {
+            "steps": self.steps,
+            "wire_bytes_per_step": round(self.wire_bytes_per_step),
+            "carried_bytes_per_step": round(self.carried_bytes_per_step),
+            "raw_bytes_per_step": round(self.raw_bytes_per_step),
+            "cumulative_wire_bytes": round(self.cumulative_wire_bytes),
+            "compression_ratio": round(self.compression_ratio, 2),
+            "n_entries": len(self.entries),
+            "n_fallbacks": self.n_fallbacks(),
+        }

@@ -1,0 +1,158 @@
+"""Layer-wise compression planning (DESIGN.md §3.2).
+
+One global compressor for every tensor is the paper's setting, but it is
+not the byte-optimal one: biases and norm gains are a rounding error of
+the wire budget yet dominate the δ penalty when crushed to 4 bits, while
+the big matmul kernels are where the bytes actually are (the layer-wise
+direction of QODA / "Layer-wise Quantization for Quantized Optimistic
+Dual Averaging", PAPERS.md). The planner assigns one compressor per
+bucket from three policies:
+
+  uniform      : every bucket gets DQConfig.compressor (paper semantics).
+  size_tiered  : buckets made only of small tensors (< SMALL_ELEMS) keep
+                 full precision — they are ≤ a few % of the bytes but
+                 carry δ=1; everything else gets the base compressor.
+  delta_budget : greedy bit-width descent. Start every bucket at the base
+                 compressor and, while the modeled per-step payload
+                 exceeds ``budget_bytes``, downgrade the bucket with the
+                 best (bytes saved) / (δ lost) ratio one rung down the
+                 ladder base → qsgd4_linf → sign.
+
+δ for the stochastic quantizers is data-dependent (compressors.py returns
+None); the planner uses a documented Gaussian heuristic instead — good
+enough to *rank* buckets, which is all the greedy needs.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+from repro.core import compressors as C
+
+from .buckets import BucketLayout
+
+POLICIES = ("uniform", "size_tiered", "delta_budget")
+
+SMALL_ELEMS = 1 << 16           # size_tiered: "small" bucket threshold
+LADDER = ("qsgd4_linf", "sign")  # delta_budget downgrade rungs after base
+
+
+def analytic_delta(comp: C.Compressor, d: int) -> float:
+    """δ hint in (0, 1]. Exact where the compressor reports one (identity,
+    topk, randk); for linf stochastic quantizers use the Gaussian-input
+    estimate E||Q(v)-v||²/||v||² ≈ d·(s/2L)²·(1/3)/||v||² with s² ≈
+    2·ln(d)·σ² (expected max² of d gaussians) and ||v||² ≈ d·σ², i.e.
+    δ ≈ 1 − ln(d)/(6L²); for sign, δ = (E|v|)²/E[v²] = 2/π."""
+    exact = comp.delta(d)
+    if exact is not None:
+        return float(exact)
+    if isinstance(comp, C.StochasticQuant):
+        block = comp.per_block if comp.per_block > 0 else d
+        loss = math.log(max(block, 2)) / (6.0 * comp.levels**2)
+        return max(1e-3, 1.0 - loss)
+    if isinstance(comp, C.SignMean):
+        return 2.0 / math.pi
+    return 0.5
+
+
+@dataclass(frozen=True)
+class BucketAssignment:
+    bid: int
+    compressor: str
+    elems: int
+    wire_bytes: int             # analytic payload bytes for this bucket
+    delta: float                # δ hint for the assigned compressor
+
+
+@dataclass(frozen=True)
+class CommPlan:
+    policy: str
+    assignments: Tuple[BucketAssignment, ...]
+    base_compressor: str
+
+    @property
+    def payload_bytes(self) -> int:
+        """Per-worker compressed payload bytes per step (before the
+        strategy's collective multiplier — see ledger.strategy_multiplier)."""
+        return sum(a.wire_bytes for a in self.assignments)
+
+    @property
+    def min_delta(self) -> float:
+        return min((a.delta for a in self.assignments), default=1.0)
+
+    def compressor_for(self, bid: int) -> str:
+        return self.assignments[bid].compressor
+
+    def describe(self) -> str:
+        by = {}
+        for a in self.assignments:
+            by[a.compressor] = by.get(a.compressor, 0) + 1
+        mix = " ".join(f"{k}x{n}" for k, n in sorted(by.items()))
+        return (f"policy={self.policy} [{mix}] payload={self.payload_bytes}B "
+                f"min_delta={self.min_delta:.3f}")
+
+
+def _assign(bid: int, name: str, elems: int) -> BucketAssignment:
+    comp = C.get(name)
+    return BucketAssignment(
+        bid=bid, compressor=name, elems=elems,
+        wire_bytes=int(comp.wire_bytes((elems,))),
+        delta=analytic_delta(comp, elems),
+    )
+
+
+def plan_comm(
+    layout: BucketLayout,
+    base_compressor: str,
+    policy: str = "uniform",
+    budget_bytes: int = 0,
+) -> CommPlan:
+    if policy not in POLICIES:
+        raise ValueError(f"unknown comm policy {policy!r}; have {POLICIES}")
+    if policy == "delta_budget" and budget_bytes <= 0:
+        raise ValueError(
+            "comm policy 'delta_budget' needs a positive byte budget "
+            "(set DQConfig.comm_budget_mb / --comm-budget-mb)")
+    C.get(base_compressor)  # fail fast on bad names
+
+    names = [base_compressor] * len(layout.buckets)
+
+    if policy == "size_tiered":
+        for b in layout.buckets:
+            if all(s.size < SMALL_ELEMS for s in b.slots):
+                names[b.bid] = "identity"
+
+    if policy == "delta_budget":
+        ladder = [base_compressor] + [n for n in LADDER
+                                      if n != base_compressor]
+        rung = [0] * len(layout.buckets)
+
+        def total():
+            return sum(_assign(b.bid, names[b.bid], b.size).wire_bytes
+                       for b in layout.buckets)
+
+        while total() > budget_bytes:
+            best, best_score = None, 0.0
+            for b in layout.buckets:
+                r = rung[b.bid]
+                if r + 1 >= len(ladder):
+                    continue
+                cur = _assign(b.bid, ladder[r], b.size)
+                nxt = _assign(b.bid, ladder[r + 1], b.size)
+                saved = cur.wire_bytes - nxt.wire_bytes
+                lost = max(cur.delta - nxt.delta, 1e-6)
+                if saved <= 0:
+                    continue
+                score = saved / lost
+                if best is None or score > best_score:
+                    best, best_score = b.bid, score
+            if best is None:
+                break  # every bucket already at the cheapest rung
+            rung[best] += 1
+            names[best] = ladder[rung[best]]
+
+    assignments = tuple(_assign(b.bid, names[b.bid], b.size)
+                        for b in layout.buckets)
+    return CommPlan(policy=policy, assignments=assignments,
+                    base_compressor=base_compressor)

@@ -269,3 +269,10 @@ class DQConfig:
     # sidesteps an XLA partitioner CHECK with manual-pod + FSDP-auto inside;
     # paper semantics exact, wire format compiler-chosen). See DESIGN.md §2.
     spmd: str = "shard_map"
+    # ---- repro.comm: bucketing + layer-wise planning (DESIGN.md §3) ------ #
+    # "none" keeps the seed per-tensor exchange; any planner policy
+    # ("uniform" | "size_tiered" | "delta_budget") routes unsharded leaves
+    # through flat, worker-divisible, lane-aligned buckets instead.
+    comm_plan: str = "none"
+    bucket_mb: float = 4.0           # f32 MiB per bucket before closing it
+    comm_budget_mb: float = 0.0      # delta_budget: payload MiB/step target

@@ -257,6 +257,12 @@ REGISTRY = {
     "qsgd8_block256": StochasticQuant(
         name="qsgd8_block256", bits=8, norm="linf", per_block=256
     ),
+    # one scale per 1024-elem lane-aligned row: the bucket-native quantizer.
+    # Over flat comm buckets error_feedback.compress_with_ef realizes it
+    # with the fused Pallas quantize+EF kernel (one VMEM pass).
+    "qsgd8_block1024": StochasticQuant(
+        name="qsgd8_block1024", bits=8, norm="linf", per_block=1024
+    ),
 }
 
 

@@ -69,6 +69,10 @@ def _is_plan(x):
     return isinstance(x, dict) and "strategy" in x
 
 
+def _is_shape(x):
+    return isinstance(x, tuple) and all(isinstance(i, int) for i in x)
+
+
 @dataclasses.dataclass(frozen=True)
 class DQGAN:
     """Builder. Construct once per (model, mesh, DQConfig); then use
@@ -79,6 +83,10 @@ class DQGAN:
     mesh: Any = None                      # jax.sharding.Mesh | None (single proc)
     param_specs: Any = None               # pytree of PartitionSpec (model axes only)
     batch_spec: Any = None                # PartitionSpec for batch leaves
+    # (layout, plan) memo keyed by leaf shapes — _comm is hit several times
+    # per trace (plans, EF init, exchange) and is pure host-side planning.
+    _comm_cache: dict = dataclasses.field(
+        default_factory=dict, compare=False, repr=False)
 
     # ------------------------------------------------------------------ #
     @property
@@ -95,17 +103,75 @@ class DQGAN:
     def uses_adam(self) -> bool:
         return self.dq.optimizer in ("adam", "oadam")
 
+    @property
+    def bucketed(self) -> bool:
+        """True when the repro.comm flat-bucket exchange path is active.
+        The vmap SPMD style keeps the paper's per-tensor semantics (its
+        wire format is compiler-chosen anyway), so bucketing is a no-op
+        there."""
+        return self.dq.comm_plan != "none" and self.dq.spmd != "vmap"
+
+    def _comm(self, tree):
+        """(BucketLayout, CommPlan) — static, derived from leaf shapes."""
+        from repro import comm as RC
+
+        shapes = jax.tree.map(lambda x: tuple(x.shape), tree)
+        cache_key = (jax.tree.structure(shapes, is_leaf=_is_shape),
+                     tuple(jax.tree.leaves(shapes, is_leaf=_is_shape)))
+        hit = self._comm_cache.get(cache_key)
+        if hit is not None:
+            return hit
+        layout = RC.build_layout(
+            shapes, self.param_specs, max(self.n_workers, 1),
+            bucket_bytes=int(self.dq.bucket_mb * (1 << 20)))
+        plan = RC.plan_comm(
+            layout, self.dq.compressor, self.dq.comm_plan,
+            budget_bytes=int(self.dq.comm_budget_mb * (1 << 20)))
+        self._comm_cache[cache_key] = (layout, plan)
+        return layout, plan
+
+    def comm_ledger(self, params) -> "Any":
+        """CommLedger describing this trainer's per-step wire cost (used by
+        launch.train logs and benchmarks.run)."""
+        from repro.comm import CommLedger
+
+        shapes = jax.tree.map(lambda x: tuple(x.shape), params)
+        if self.bucketed:
+            layout, cplan = self._comm(params)
+            flat_plans = jax.tree.leaves(self._plans(params), is_leaf=_is_plan)
+            leaf_plans = [flat_plans[s.index] for s in layout.skipped]
+            return CommLedger.from_plan(
+                layout, cplan, self.dq.exchange, self.n_workers,
+                self.dq.compressor, leaf_plans=leaf_plans)
+        return CommLedger.from_tree(
+            self.dq.exchange, self.dq.compressor, shapes,
+            self.param_specs, self.n_workers)
+
     def _plans(self, params):
         shapes = jax.tree.map(lambda x: tuple(x.shape), params)
         specs = self.param_specs
         if specs is None:
             specs = jax.tree.map(lambda x: P(), params)
-        return jax.tree.map(
+        plans = jax.tree.map(
             lambda sh, sp: X.plan_leaf(self.dq.exchange, sh, sp, self.n_workers),
             shapes, specs,
             is_leaf=lambda x: isinstance(x, tuple)
             and all(isinstance(i, int) for i in x),
         )
+        if not self.bucketed:
+            return plans
+        # bucketed leaves leave the per-tensor machinery entirely; only the
+        # skipped (sharded) leaves keep their per-tensor plan (which may
+        # still legitimately fall back to sim).
+        layout, _ = self._comm(params)
+        in_bucket = {s.index for b in layout.buckets for s in b.slots}
+        flat, treedef = jax.tree.flatten(plans, is_leaf=_is_plan)
+        flat = [
+            {"strategy": "bucketed", "chunk_axis": None, "fallback": False}
+            if i in in_bucket else p
+            for i, p in enumerate(flat)
+        ]
+        return jax.tree.unflatten(treedef, flat)
 
     def _scale_groups(self, tree):
         """Apply DQConfig.lr_mults by top-level pytree key (TTUR)."""
@@ -186,6 +252,19 @@ class DQGAN:
             return st if st else None
 
         ef = jax.tree.map(ef_leaf, params, plans)
+        if self.bucketed:
+            # bucket-level state rides beside the per-leaf residuals: e1
+            # stays per-tensor (the local-extrapolation lookahead needs leaf
+            # views of it), phase-2 owner error is per-bucket.
+            layout, _ = self._comm(params)
+            bucket_ef = {}
+            if dq.exchange == "two_phase":
+                for b in layout.buckets:
+                    bucket_ef[str(b.bid)] = {
+                        "e2": sds((W, b.size // max(W, 1)), ef_dtype,
+                                  worker_spec(P()))
+                    }
+            ef = {"leaf": ef, "bucket": bucket_ef}
 
         m = v = None
         if self.uses_adam:
@@ -229,7 +308,7 @@ class DQGAN:
             # single worker: per-worker leaves still carry their leading
             # worker axis (of size 1), so squeeze stays on.
             return self._worker_body(
-                state, batch, key, plans, axes=(), squeeze=True
+                state, batch, key, None, plans, axes=(), squeeze=True
             )
 
         if dq.spmd == "vmap":
@@ -266,15 +345,28 @@ class DQGAN:
             state=state_specs,
             metrics={"loss": rep, "grad_norm": rep, "error_norm": rep},
         )
-        fn = jax.shard_map(
+        from repro.parallel.compat import key_across_boundary, shard_map
+
+        key, converted = key_across_boundary(key)
+        if converted:
+            inner = body
+
+            def body(state, batch, kd, widx_arr):
+                return inner(state, batch, jax.random.wrap_key_data(kd),
+                             widx_arr)
+
+        # worker index as a sharded input: equivalent to lax.axis_index but
+        # also usable on legacy jax, whose partial-auto shard_map cannot
+        # lower PartitionId (see parallel.compat).
+        widx_arr = jnp.arange(W, dtype=jnp.int32)
+        fn = shard_map(
             body,
             mesh=self.mesh,
-            in_specs=(state_specs, batch_specs, rep),
+            in_specs=(state_specs, batch_specs, rep, wlead),
             out_specs=out_specs,
-            axis_names=set(axes),
-            check_vma=False,
+            axis_names=axes,
         )
-        return fn(state, batch, key)
+        return fn(state, batch, key, widx_arr)
 
     # ------------------------------------------------------------------ #
     def _step_vmap(self, state, batch, key, W):
@@ -329,7 +421,7 @@ class DQGAN:
                 e1 = (e["e1"] if e else jnp.zeros_like(m)).astype(jnp.float32)
                 _, p_hat, e_new = compress_with_ef(
                     comp, m, e1, jax.random.fold_in(kq, j),
-                    use_ef=dq.error_feedback)
+                    use_ef=dq.error_feedback, allow_fused=False)  # vmapped
                 phats.append(p_hat)
                 enews.append({"e1": e_new.astype(jnp.dtype(dq.ef_dtype))}
                              if dq.error_feedback else None)
@@ -394,9 +486,11 @@ class DQGAN:
                                    "grad_norm": gn, "error_norm": en})
 
     # ------------------------------------------------------------------ #
-    def _worker_body(self, state, batch, key, plans, axes, squeeze):
+    def _worker_body(self, state, batch, key, widx_arr, plans, axes, squeeze):
         """Per-worker computation. When `squeeze`, per-worker leaves arrive
-        with a leading axis of local size 1 (their worker shard)."""
+        with a leading axis of local size 1 (their worker shard).
+        `widx_arr` is the (local size 1) slice of arange(W) sharded over
+        the worker axes, or None outside shard_map."""
         dq = self.dq
         comp = self.compressor
         W = self.n_workers
@@ -412,8 +506,10 @@ class DQGAN:
                 return tree
             return jax.tree.map(lambda x: x[None], tree)
 
+        widx = None
         if axes:
-            widx = jax.lax.axis_index(axes)
+            widx = (widx_arr[0] if widx_arr is not None
+                    else jax.lax.axis_index(axes))
             key = jax.random.fold_in(key, widx)
         kfield, kq = jax.random.split(jax.random.fold_in(key, state.step))
 
@@ -422,9 +518,10 @@ class DQGAN:
         ef = takew(state.ef)
 
         # ---------- extrapolation to w_{t-1/2} ---------------------------- #
+        ef_leaf_tree = ef["leaf"] if (self.bucketed and ef is not None) else ef
         if dq.optimizer == "omd":
             if dq.extrapolation == "local":
-                e_term = ef if dq.error_feedback else None
+                e_term = ef_leaf_tree if dq.error_feedback else None
 
                 def extrap(w, g_prev, e_leaf):
                     upd = eta * g_prev
@@ -459,7 +556,8 @@ class DQGAN:
         else:
             message = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
 
-        qhat, new_ef = self._exchange_tree(message, ef, plans, kq, axes)
+        qhat, new_ef = self._exchange_tree(message, ef, plans, kq, axes,
+                                           widx=widx)
 
         # ---------- server-side update ------------------------------------ #
         new_m, new_v, new_prev_update = state.m, state.v, state.prev_update
@@ -536,7 +634,10 @@ class DQGAN:
         )
 
     # ------------------------------------------------------------------ #
-    def _exchange_tree(self, message, ef, plans, key, axes):
+    def _exchange_tree(self, message, ef, plans, key, axes, widx=None):
+        if self.bucketed:
+            return self._exchange_bucketed(message, ef, plans, key, axes,
+                                           widx=widx)
         dq = self.dq
         comp = self.compressor
         W = self.n_workers
@@ -558,7 +659,7 @@ class DQGAN:
                 q, ne = self._single_worker_leaf(comp, pl, p, e, k)
             else:
                 q, ne = X.exchange_leaf(
-                    comp, pl, p, e, k, axes, W, dq.error_feedback
+                    comp, pl, p, e, k, axes, W, dq.error_feedback, widx=widx
                 )
             out.append(q)
             new_ef.append(ne if ne else None)
@@ -570,7 +671,7 @@ class DQGAN:
     def _single_worker_leaf(self, comp, plan, p, e, key):
         from .error_feedback import compress_with_ef
 
-        if plan["strategy"] == "exact" or self.dq.compressor == "identity":
+        if plan["strategy"] == "exact" or comp.name == "identity":
             return p, dict(e)
         e1 = e.get("e1", jnp.zeros_like(p))
         _, p_hat, e_new = compress_with_ef(
@@ -580,6 +681,104 @@ class DQGAN:
         if self.dq.error_feedback:
             ne["e1"] = e_new
         return p_hat, ne
+
+    # ------------------------------------------------------------------ #
+    # repro.comm flat-bucket fast path (DESIGN.md §3)
+    # ------------------------------------------------------------------ #
+    def _exchange_bucketed(self, message, ef, plans, key, axes, widx=None):
+        """Exchange over bucket views: unsharded leaves are packed into a
+        handful of flat, worker-divisible arrays (one collective each, per-
+        bucket compressor from the comm planner); sharded leaves keep the
+        per-tensor path. EF: e1 is packed/unpacked alongside the message so
+        the per-leaf residual tree stays intact; two_phase owner error e2
+        lives per-bucket under ef["bucket"]."""
+        from repro.comm import buckets as B
+
+        dq = self.dq
+        W = self.n_workers
+        ef_dtype = jnp.dtype(dq.ef_dtype)
+        layout, cplan = self._comm(message)
+        leaves, treedef = jax.tree.flatten(message)
+        plan_leaves = treedef.flatten_up_to(plans)
+
+        leaf_ef = ef["leaf"] if ef is not None else None
+        bucket_ef = ef["bucket"] if ef is not None else {}
+        if leaf_ef is None:
+            ef_leaves = [{}] * len(leaves)
+        else:
+            ef_leaves = [e if e is not None else {}
+                         for e in treedef.flatten_up_to(leaf_ef)]
+
+        # ---- buckets ------------------------------------------------------ #
+        flats = B.pack(layout, leaves)
+        e1_flats = None
+        if dq.error_feedback:
+            e1_leaves = [
+                e.get("e1", jnp.zeros(l.shape, ef_dtype))
+                for l, e in zip(leaves, ef_leaves)
+            ]
+            e1_flats = B.pack(layout, e1_leaves)
+
+        out_flats, new_e1_flats, new_bucket_ef = [], [], {}
+        for b, assign in zip(layout.buckets, cplan.assignments):
+            comp_b = C.get(assign.compressor)
+            plan_b = X.plan_bucket(dq.exchange, b.size, max(W, 1))
+            est = {}
+            if dq.error_feedback:
+                est["e1"] = e1_flats[b.bid]
+            if plan_b["strategy"] == "two_phase":
+                est["e2"] = (bucket_ef[str(b.bid)]["e2"]
+                             if str(b.bid) in bucket_ef
+                             else jnp.zeros((b.size // max(W, 1),), ef_dtype))
+            k = jax.random.fold_in(key, 100_000 + b.bid)
+            if not axes:
+                q, ne = self._single_worker_leaf(comp_b, plan_b,
+                                                 flats[b.bid], est, k)
+            else:
+                q, ne = X.exchange_leaf(comp_b, plan_b, flats[b.bid], est, k,
+                                        axes, W, dq.error_feedback, widx=widx)
+            out_flats.append(q)
+            if dq.error_feedback:
+                new_e1_flats.append(ne.get("e1", est.get("e1")))
+            if plan_b["strategy"] == "two_phase":
+                new_bucket_ef[str(b.bid)] = {"e2": ne["e2"].astype(ef_dtype)}
+
+        out_leaves = B.unpack_into(layout, out_flats, leaves)
+        if dq.error_feedback:
+            new_e1_leaves = B.unpack_into(layout, new_e1_flats, e1_leaves)
+
+        # ---- skipped (sharded) leaves: per-tensor path -------------------- #
+        base_comp = self.compressor
+        skipped_new = {}
+        for s in layout.skipped:
+            k = jax.random.fold_in(key, s.index)
+            if not axes:
+                q, ne = self._single_worker_leaf(
+                    base_comp, plan_leaves[s.index], leaves[s.index],
+                    ef_leaves[s.index], k)
+            else:
+                q, ne = X.exchange_leaf(
+                    base_comp, plan_leaves[s.index], leaves[s.index],
+                    ef_leaves[s.index], k, axes, W, dq.error_feedback,
+                    widx=widx)
+            out_leaves[s.index] = q
+            skipped_new[s.index] = ne if ne else None
+
+        qhat = jax.tree.unflatten(treedef, out_leaves)
+        if ef is None and not dq.error_feedback and dq.exchange != "two_phase":
+            return qhat, None
+
+        in_bucket = {s.index for b in layout.buckets for s in b.slots}
+        new_leaf_ef = []
+        for i in range(len(leaves)):
+            if i in skipped_new:
+                new_leaf_ef.append(skipped_new[i])
+            elif i in in_bucket and dq.error_feedback:
+                new_leaf_ef.append({"e1": new_e1_leaves[i]})
+            else:
+                new_leaf_ef.append(None)
+        return qhat, {"leaf": jax.tree.unflatten(treedef, new_leaf_ef),
+                      "bucket": new_bucket_ef}
 
 
 def _is_ef_leaf(x):

@@ -22,6 +22,13 @@ two_phase needs an axis of the tensor that is (a) divisible by the worker
 count and (b) not sharded over a mesh axis (so the reshape is local). We
 pick it statically from the tensor shape + PartitionSpec; tensors with no
 such axis fall back to `sim` (recorded by `plan_for_tree`).
+
+Bucketed fast path (repro.comm, DESIGN.md §3): when DQConfig.comm_plan is
+a planner policy, core.dqgan packs unsharded leaves into flat buckets
+whose padded length is always divisible by the worker count, and calls
+`exchange_leaf` with `plan_bucket` plans (chunk axis 0) — one collective
+per bucket instead of one per tensor, and no two_phase→sim fallbacks.
+Wire cost per strategy is accounted by comm.ledger.CommLedger.
 """
 from __future__ import annotations
 
@@ -63,6 +70,16 @@ def plan_leaf(strategy: str, shape, spec, n_workers: int) -> dict:
     return {"strategy": strategy, "chunk_axis": None, "fallback": False}
 
 
+def plan_bucket(strategy: str, size: int, n_workers: int) -> dict:
+    """Plan for a flat comm bucket. Bucket sizes are padded to a multiple
+    of n_workers (buckets.build_layout), so two_phase always chunks on
+    axis 0 and never falls back."""
+    if strategy == "two_phase":
+        assert size % max(n_workers, 1) == 0, (size, n_workers)
+        return {"strategy": "two_phase", "chunk_axis": 0, "fallback": False}
+    return {"strategy": strategy, "chunk_axis": None, "fallback": False}
+
+
 def plan_for_tree(strategy, shapes_tree, specs_tree, n_workers):
     return jax.tree.map(
         lambda sh, sp: plan_leaf(strategy, sh, sp, n_workers),
@@ -90,10 +107,35 @@ def ef_state_zeros(plan: dict, shape, dtype, n_workers: int, use_ef: bool):
 
 
 # --------------------------------------------------------------------------- #
-# per-leaf exchange (inside shard_map)
+# collectives (with a legacy-jax emulation path)
 # --------------------------------------------------------------------------- #
+_HAS_MODERN_SHARD_MAP = hasattr(jax, "shard_map")
+
+
 def _mean_axes(x, axes):
     return jax.lax.pmean(x, axes)
+
+
+def _all_gather(x, axes, W, widx):
+    """all_gather over the worker axes. On old jax (experimental shard_map
+    with partial-auto), the real all-gather trips an XLA partitioner CHECK;
+    when a worker index is provided we emulate it as psum(onehot ⊗ x) —
+    W× the traffic, correctness-only (the CI/CPU regime)."""
+    if _HAS_MODERN_SHARD_MAP or widx is None:
+        return jax.lax.all_gather(x, axes)
+    onehot = (jnp.arange(W) == widx).astype(x.dtype)
+    return jax.lax.psum(onehot.reshape((W,) + (1,) * x.ndim) * x[None], axes)
+
+
+def _all_to_all(c, axes, W, widx):
+    """all_to_all with leading source-worker dim (split/concat axis 0).
+    Legacy emulation: gather everyone's chunks, keep own column."""
+    if _HAS_MODERN_SHARD_MAP or widx is None:
+        return jax.lax.all_to_all(c, axes, split_axis=0, concat_axis=0,
+                                  tiled=False)
+    gathered = _all_gather(c, axes, W, widx)  # (src, chunk, ...)
+    return jax.lax.dynamic_index_in_dim(gathered, widx, axis=1,
+                                        keepdims=False)
 
 
 def exchange_leaf(
@@ -105,8 +147,11 @@ def exchange_leaf(
     axes: Tuple[str, ...],
     n_workers: int,
     use_ef: bool,
+    widx=None,
 ):
-    """Return (q̂, new_ef_state) for one tensor. Runs under shard_map(axes)."""
+    """Return (q̂, new_ef_state) for one tensor. Runs under shard_map(axes).
+    ``widx`` (this worker's index over `axes`) enables the legacy-jax
+    collective emulation; optional when running on modern jax."""
     strategy = plan["strategy"]
     new_state = dict(ef_state)
 
@@ -126,7 +171,8 @@ def exchange_leaf(
         payload, p_hat, e_new = compress_with_ef(compressor, p, e1, key, use_ef=use_ef)
         if use_ef:
             new_state["e1"] = e_new
-        gathered = jax.tree.map(lambda x: jax.lax.all_gather(x, axes), payload)
+        gathered = jax.tree.map(
+            lambda x: _all_gather(x, axes, n_workers, widx), payload)
         deq = jax.vmap(
             lambda pl: compressor.decompress(pl, p.shape, jnp.float32)
         )(gathered)
@@ -134,12 +180,13 @@ def exchange_leaf(
 
     if strategy == "two_phase":
         return _two_phase(compressor, plan, p, ef_state, new_state, key, axes,
-                          n_workers, use_ef)
+                          n_workers, use_ef, widx)
 
     raise ValueError(f"unknown strategy {strategy!r}")
 
 
-def _two_phase(compressor, plan, p, ef_state, new_state, key, axes, W, use_ef):
+def _two_phase(compressor, plan, p, ef_state, new_state, key, axes, W, use_ef,
+               widx=None):
     ax = plan["chunk_axis"]
     orig_shape = p.shape
     # ---- phase 1: worker-side compress + all-to-all ------------------------ #
@@ -154,11 +201,7 @@ def _two_phase(compressor, plan, p, ef_state, new_state, key, axes, W, use_ef):
         e_new = (x - x_hat).reshape((orig_shape[ax],) + _rest(orig_shape, ax))
         new_state["e1"] = jnp.moveaxis(e_new, 0, ax).astype(e1.dtype)
     # all-to-all: leading dim becomes the source-worker index, int8 on the wire
-    moved = jax.tree.map(
-        lambda c: jax.lax.all_to_all(c, axes, split_axis=0, concat_axis=0,
-                                     tiled=False),
-        payload,
-    )
+    moved = jax.tree.map(lambda c: _all_to_all(c, axes, W, widx), payload)
     contrib = jax.vmap(
         lambda pl: compressor.decompress(pl, x.shape[1:], jnp.float32)
     )(moved)
@@ -170,7 +213,7 @@ def _two_phase(compressor, plan, p, ef_state, new_state, key, axes, W, use_ef):
     )
     del chunk_hat
     new_state["e2"] = e2_new.reshape(ef_state["e2"].shape).astype(ef_state["e2"].dtype)
-    gathered = jax.tree.map(lambda c: jax.lax.all_gather(c, axes), payload2)
+    gathered = jax.tree.map(lambda c: _all_gather(c, axes, W, widx), payload2)
     chunks = jax.vmap(
         lambda pl: compressor.decompress(pl, chunk_mean.shape, jnp.float32)
     )(gathered)

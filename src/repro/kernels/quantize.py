@@ -73,3 +73,32 @@ def quantize_ef_blocked(g, e, rand, *, levels: int = 127, block_rows: int = 256,
         ],
         interpret=interpret,
     )(g, e, rand)
+
+
+def bucket_tile_shape(n: int):
+    """(R, C, block_rows) tiling for a flat comm bucket of n elements.
+    buckets.build_layout pads every bucket to a multiple of
+    n_workers·LANE·SUBLANE = n_workers·1024, so C = 1024 always divides; the
+    block-row count is the largest divisor of R up to 256."""
+    C = 1024 if n % 1024 == 0 else 128
+    assert n % C == 0, f"bucket size {n} not lane-aligned"
+    R = n // C
+    br = min(256, R)
+    while R % br:
+        br -= 1
+    return R, C, br
+
+
+def quantize_ef_flat(g, e, rand, *, levels: int = 127, interpret: bool = True):
+    """Fused quantize+EF over a flat comm bucket (1-D, lane-aligned size).
+
+    Tiles the bucket as (R, 1024) rows — each row is one scale block, i.e.
+    the bucket-shaped equivalent of StochasticQuant(bits=8, per_block=1024)
+    with the residual update fused into the same VMEM pass.
+    Returns (codes (n,) int8, scales (R,) f32, e_new (n,))."""
+    n = g.shape[0]
+    R, C, br = bucket_tile_shape(n)
+    codes, scale, e_new = quantize_ef_blocked(
+        g.reshape(R, C), e.reshape(R, C), rand.reshape(R, C),
+        levels=levels, block_rows=br, interpret=interpret)
+    return codes.reshape(n), scale.reshape(R), e_new.reshape(n)

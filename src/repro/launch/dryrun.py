@@ -159,7 +159,8 @@ def run_combo(arch: str, shape_name: str, multi_pod: bool, *,
     rec["chips"] = n_chips
     t0 = time.time()
     try:
-        with jax.set_mesh(mesh):
+        from repro.parallel.compat import set_mesh
+        with set_mesh(mesh):
             max_seq = shape.seq_len if not cfg.use_rope else 0
             params_sds, pspecs = S.abstract_params(cfg, mesh, layout,
                                                    max_seq or 8)

@@ -2,8 +2,7 @@
 module never touches jax device state."""
 from __future__ import annotations
 
-import jax
-from jax.sharding import AxisType
+from repro.parallel.compat import AxisType, make_mesh as _make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False, override: str = ""):
@@ -24,16 +23,16 @@ def make_production_mesh(*, multi_pod: bool = False, override: str = ""):
     else:
         shape = (2, 16, 16) if multi_pod else (16, 16)
         axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
 
 
 def make_test_mesh(shape=(2, 2, 2), axes=("pod", "data", "model")):
     """Small mesh for unit tests (requires xla_force_host_platform_device_count)."""
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
 
 
 def worker_axes_for(layout: str, multi_pod: bool):
-    """DQGAN worker axes by parameter layout (DESIGN.md §3):
+    """DQGAN worker axes by parameter layout (DESIGN.md §4):
     dp   -> every data-parallel rank is a paper-worker;
     fsdp -> each pod is a paper-worker (params sharded inside)."""
     if layout == "dp":

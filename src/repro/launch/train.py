@@ -4,6 +4,20 @@ the local device set (CPU smoke / real TPU alike).
     PYTHONPATH=src python -m repro.launch.train --arch gemma-2b --smoke \
         --steps 100 --compressor qsgd8_linf --exchange sim
 
+Communication planning (repro.comm, DESIGN.md §3): pass ``--comm-plan`` to
+bucket the gradient pytree into flat worker-divisible buckets and assign a
+compressor per bucket; each log line then carries the wire-telemetry
+fields ``wire_mb_step`` / ``cum_wire_mb`` / ``comm_ratio``:
+
+    # DDP-style bucketing, one compressor everywhere (paper semantics):
+    ... --comm-plan uniform --exchange two_phase --compressor qsgd8_linf
+
+    # keep small buckets (biases/norms) full precision:
+    ... --comm-plan size_tiered --bucket-mb 4
+
+    # fit a byte budget by per-bucket bit-width descent:
+    ... --comm-plan delta_budget --comm-budget-mb 2.5
+
 For the paper's own experiment (DCGAN), use examples/train_gan.py which
 adds the WGAN weight clipping + evaluation metrics.
 """
@@ -23,6 +37,7 @@ from repro.core.dqgan import DQGAN
 from repro.data import lm_batch_iterator
 from repro.models import build
 from repro.parallel import sharding as shd
+from repro.parallel.compat import set_mesh
 
 
 def main(argv=None):
@@ -38,10 +53,19 @@ def main(argv=None):
     ap.add_argument("--compressor", default="qsgd8_linf")
     ap.add_argument("--exchange", default="sim")
     ap.add_argument("--no-error-feedback", action="store_true")
+    ap.add_argument("--comm-plan", default="none",
+                    choices=("none", "uniform", "size_tiered", "delta_budget"),
+                    help="repro.comm bucketing + layer-wise planner policy")
+    ap.add_argument("--bucket-mb", type=float, default=4.0,
+                    help="f32 MiB per gradient bucket")
+    ap.add_argument("--comm-budget-mb", type=float, default=0.0,
+                    help="delta_budget policy: payload MiB/step target")
     ap.add_argument("--checkpoint", default="")
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
+    if args.comm_plan == "delta_budget" and args.comm_budget_mb <= 0:
+        ap.error("--comm-plan delta_budget requires --comm-budget-mb > 0")
 
     cfg = cfgs.get(args.arch)
     if args.smoke:
@@ -54,10 +78,11 @@ def main(argv=None):
     pspecs = None
     bspec = None
     if n_dev > 1:
-        from jax.sharding import AxisType, PartitionSpec as P
+        from jax.sharding import PartitionSpec as P
+
+        from repro.parallel.compat import make_mesh
         model_n = 2 if n_dev % 2 == 0 and n_dev > 2 else 1
-        mesh = jax.make_mesh((n_dev // model_n, model_n), ("data", "model"),
-                             axis_types=(AxisType.Auto,) * 2)
+        mesh = make_mesh((n_dev // model_n, model_n), ("data", "model"))
         worker_axes = ("data",)
         bspec = P(("data",))
 
@@ -66,6 +91,8 @@ def main(argv=None):
         error_feedback=not args.no_error_feedback,
         optimizer=args.optimizer, lr=args.lr, worker_axes=worker_axes,
         message="update" if args.optimizer == "omd" else "grad",
+        comm_plan=args.comm_plan, bucket_mb=args.bucket_mb,
+        comm_budget_mb=args.comm_budget_mb,
     )
     key = jax.random.key(args.seed)
     params = bundle.init(key, max_seq=args.seq)
@@ -79,22 +106,38 @@ def main(argv=None):
     state = trainer.init(params)
     step = jax.jit(trainer.step, donate_argnums=0)
 
-    enc_shape = ((cfg.encdec.enc_seq, cfg.d_model) if cfg.is_encdec else None)
-    it = lm_batch_iterator(args.seed, args.batch, args.seq, cfg.vocab_size,
-                           enc_shape)
+    ledger = trainer.comm_ledger(params)
+    if args.comm_plan != "none":
+        layout, cplan = trainer._comm(params)
+        print(f"# comm: {layout.describe()}", flush=True)
+        print(f"# comm: {cplan.describe()}", flush=True)
+
+    if getattr(cfg, "arch_type", "") == "gan":
+        it = gan_batch_iterator(args.seed, args.batch, cfg)
+    else:
+        enc_shape = ((cfg.encdec.enc_seq, cfg.d_model) if cfg.is_encdec
+                     else None)
+        it = lm_batch_iterator(args.seed, args.batch, args.seq,
+                               cfg.vocab_size, enc_shape)
     history = []
     t0 = time.time()
-    ctx = jax.set_mesh(mesh) if mesh is not None else _null()
+    ctx = set_mesh(mesh) if mesh is not None else _null()
     with ctx:
         for i in range(args.steps):
             batch = next(it)
             out = step(state, batch, key)
             state = out.state
+            ledger.tick()
             if i % args.log_every == 0 or i == args.steps - 1:
                 m = jax.device_get(out.metrics)
                 rec = {"step": i, "loss": float(m["loss"]),
                        "grad_norm": float(m["grad_norm"]),
                        "error_norm": float(m["error_norm"]),
+                       "wire_mb_step": round(
+                           ledger.wire_bytes_per_step / 1e6, 3),
+                       "cum_wire_mb": round(
+                           ledger.cumulative_wire_bytes / 1e6, 2),
+                       "comm_ratio": round(ledger.compression_ratio, 2),
                        "elapsed_s": round(time.time() - t0, 1)}
                 history.append(rec)
                 print(json.dumps(rec), flush=True)
@@ -103,6 +146,18 @@ def main(argv=None):
                         step=int(jax.device_get(state.step)))
         print(f"saved params to {args.checkpoint}")
     return history
+
+
+def gan_batch_iterator(seed, batch, cfg):
+    """Procedural-image batches for GANConfig archs (dcgan32)."""
+    from repro.data import procedural_images
+
+    key = jax.random.key(seed)
+    i = 0
+    while True:
+        yield {"real": procedural_images(jax.random.fold_in(key, i), batch,
+                                         cfg.image_size, cfg.channels)}
+        i += 1
 
 
 class _null:

@@ -1,0 +1,69 @@
+"""jax SPMD API compatibility shims.
+
+The repo targets the modern surface (``jax.shard_map``, ``jax.set_mesh``,
+``jax.make_mesh(..., axis_types=...)``); older jax (< 0.5, e.g. a 0.4.x
+CPU CI image) spells these ``jax.experimental.shard_map.shard_map`` (with
+``auto=`` instead of ``axis_names=``), mesh-as-context-manager, and
+meshes without axis types. Import from here instead of feature-detecting
+at each call site.
+"""
+from __future__ import annotations
+
+import jax
+
+try:
+    from jax.sharding import AxisType  # noqa: F401  (jax >= 0.5)
+    _HAS_AXIS_TYPES = True
+except ImportError:
+    _HAS_AXIS_TYPES = False
+
+    class AxisType:  # minimal stand-in; only the names are consumed
+        Auto = "auto"
+        Explicit = "explicit"
+        Manual = "manual"
+
+
+def make_mesh(shape, axes, axis_types=None):
+    """jax.make_mesh that tolerates missing axis_types support."""
+    if _HAS_AXIS_TYPES:
+        if axis_types is None:
+            axis_types = (AxisType.Auto,) * len(axes)
+        return jax.make_mesh(shape, axes, axis_types=axis_types)
+    return jax.make_mesh(shape, axes)
+
+
+def set_mesh(mesh):
+    """Context manager making `mesh` ambient. New jax: jax.set_mesh; old
+    jax: the Mesh object itself is the context manager."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh
+
+
+def key_across_boundary(key):
+    """(key_to_pass, was_converted). On old jax, typed PRNG keys (extended
+    dtype, u32[2] data) fail XLA's sharding validation when crossing a
+    partial-auto shard_map boundary; raw uint32 data passes. The body must
+    jax.random.wrap_key_data the converted key back."""
+    import jax.numpy as jnp
+
+    if hasattr(jax, "shard_map"):
+        return key, False
+    if jnp.issubdtype(key.dtype, jax.dtypes.prng_key):
+        return jax.random.key_data(key), True
+    return key, False
+
+
+def shard_map(f, mesh, in_specs, out_specs, axis_names):
+    """shard_map manual over `axis_names`, auto over the rest, replication
+    checking off (our worker bodies mix collectives with auto-sharded
+    compute, which the checker cannot type)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, axis_names=set(axis_names),
+                             check_vma=False)
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    auto = frozenset(mesh.axis_names) - set(axis_names)
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=False, auto=auto)

@@ -1,6 +1,6 @@
 """PartitionSpec rules for every parameter/cache/batch tensor.
 
-Two layouts (DESIGN.md §3):
+Two layouts (DESIGN.md §4):
 
   mode "dp"   (Mode A): params replicated over the data axes, tensor-
                parallel over 'model'. Used when the DQGAN worker axes are

@@ -7,7 +7,8 @@ pytestmark = pytest.mark.multidevice
 
 DELTA1_SCRIPT = r"""
 import jax, jax.numpy as jnp, numpy as np
-from jax.sharding import PartitionSpec as P, AxisType
+from jax.sharding import PartitionSpec as P
+from repro.parallel.compat import make_mesh, set_mesh, shard_map
 from repro.configs.base import DQConfig
 from repro.core.dqgan import DQGAN
 
@@ -16,7 +17,7 @@ def field(params, batch, rng):
     x, y = params["x"], params["y"]
     return {"x": A @ y, "y": -(A.T @ x)}, {"loss": x @ A @ y}
 
-mesh = jax.make_mesh((2,2,2), ("pod","data","model"), axis_types=(AxisType.Auto,)*3)
+mesh = make_mesh((2,2,2), ("pod","data","model"))
 params = {"x": jnp.ones(4), "y": jnp.ones(4)}
 pspecs = {"x": P(), "y": P()}
 batch = jnp.zeros((8,1))
@@ -26,7 +27,7 @@ def run(exchange, compressor):
                   lr=0.05, worker_axes=("pod","data"))
     tr = DQGAN(field_fn=field, dq=dq, mesh=mesh, param_specs=pspecs,
                batch_spec=P(("pod","data")))
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         st = tr.init(params)
         step = jax.jit(tr.step)
         for i in range(25):
@@ -54,11 +55,12 @@ def test_delta1_equivalence_and_strategies(multidevice):
 
 EXCHANGE_SEMANTICS_SCRIPT = r"""
 import jax, jax.numpy as jnp, numpy as np
-from jax.sharding import PartitionSpec as P, AxisType
+from jax.sharding import PartitionSpec as P
+from repro.parallel.compat import make_mesh, set_mesh, shard_map
 from repro.core import compressors as C
 from repro.core import exchange as X
 
-mesh = jax.make_mesh((8,), ("data",), axis_types=(AxisType.Auto,))
+mesh = make_mesh((8,), ("data",))
 W = 8
 comp = C.get("qsgd8_linf")
 shape = (16, 32)
@@ -82,9 +84,9 @@ def worker(p, key):
                            ("data",), W, True)
     return q[None]
 
-f = jax.shard_map(worker, mesh=mesh, in_specs=(P("data"), P()),
-                  out_specs=P("data"), axis_names={"data"}, check_vma=False)
-with jax.set_mesh(mesh):
+f = shard_map(worker, mesh=mesh, in_specs=(P("data"), P()),
+              out_specs=P("data"), axis_names=("data",))
+with set_mesh(mesh):
     q = f(ps, key)
 np.testing.assert_allclose(np.asarray(q[0]), np.asarray(ref_mean("allgather")),
                            rtol=1e-5, atol=1e-5)
@@ -104,9 +106,9 @@ def worker2(p, key):
                            ("data",), W, True)
     return q[None]
 
-f2 = jax.shard_map(worker2, mesh=mesh, in_specs=(P("data"), P()),
-                   out_specs=P("data"), axis_names={"data"}, check_vma=False)
-with jax.set_mesh(mesh):
+f2 = shard_map(worker2, mesh=mesh, in_specs=(P("data"), P()),
+               out_specs=P("data"), axis_names=("data",))
+with set_mesh(mesh):
     q2 = f2(ps, key)
 np.testing.assert_allclose(np.asarray(q2[0]), np.asarray(jnp.mean(ps, 0)),
                            rtol=1e-5, atol=1e-6)
@@ -121,7 +123,8 @@ def test_exchange_semantics(multidevice):
 
 SHARDED_TRAIN_SCRIPT = r"""
 import jax, jax.numpy as jnp, numpy as np
-from jax.sharding import PartitionSpec as P, AxisType, NamedSharding
+from jax.sharding import PartitionSpec as P, NamedSharding
+from repro.parallel.compat import make_mesh, set_mesh
 import repro.configs as cfgs
 from repro.configs.base import DQConfig
 from repro.core.dqgan import DQGAN
@@ -130,7 +133,7 @@ from repro.parallel import sharding as shd
 from repro.data import synthetic_lm_batch
 
 # real (reduced) model trained data-parallel x tensor-parallel on 8 devices
-mesh = jax.make_mesh((2,2,2), ("pod","data","model"), axis_types=(AxisType.Auto,)*3)
+mesh = make_mesh((2,2,2), ("pod","data","model"))
 cfg = cfgs.get("gemma-2b").reduced()
 bundle = build(cfg)
 key = jax.random.key(0)
@@ -142,7 +145,7 @@ dq = DQConfig(optimizer="oadam", compressor="qsgd8_linf", exchange="two_phase",
               message="grad", lr=3e-3, worker_axes=("pod","data"))
 tr = DQGAN(field_fn=bundle.field_fn, dq=dq, mesh=mesh, param_specs=pspecs,
            batch_spec=P(("pod","data")))
-with jax.set_mesh(mesh):
+with set_mesh(mesh):
     st = tr.init(params)
     step = jax.jit(tr.step, donate_argnums=0)
     losses = []
@@ -165,7 +168,8 @@ def test_sharded_model_training(multidevice):
 
 FSDP_LOWER_SCRIPT = r"""
 import jax, jax.numpy as jnp
-from jax.sharding import PartitionSpec as P, AxisType
+from jax.sharding import PartitionSpec as P
+from repro.parallel.compat import make_mesh, set_mesh, shard_map
 import repro.configs as cfgs
 from repro.configs.base import DQConfig, InputShape
 from repro.core.dqgan import DQGAN
@@ -174,10 +178,10 @@ from repro.models import build
 from jax.sharding import NamedSharding
 
 # mode B: FSDP over 'data' + TP over 'model', DQGAN workers = pods.
-mesh = jax.make_mesh((2,2,2), ("pod","data","model"), axis_types=(AxisType.Auto,)*3)
+mesh = make_mesh((2,2,2), ("pod","data","model"))
 cfg = cfgs.get("qwen3-moe-30b-a3b").reduced()
 bundle = build(cfg)
-with jax.set_mesh(mesh):
+with set_mesh(mesh):
     params_sds, pspecs = S.abstract_params(cfg, mesh, "fsdp", 8)
     # shard_map manual-over-pod + FSDP auto axes trips an XLA partitioner
     # CHECK (DESIGN.md §2) -> the vmap worker formulation is used instead.
