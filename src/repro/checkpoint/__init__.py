@@ -62,6 +62,17 @@ def restore(path: str, like: Any, shardings: Any = None) -> Any:
     shard_leaves = None
     if shardings is not None:
         shard_leaves = [s for _, s in _paths(shardings)]
+    want = {n for n, leaf in named if leaf is not None}
+    missing = sorted(want - set(data))
+    if missing:
+        extra = sorted(set(data) - want)
+        raise ValueError(
+            f"checkpoint {path!r} does not match the requested state "
+            f"structure: missing {missing[:5]}{'...' if len(missing) > 5 else ''}"
+            + (f", checkpoint-only {extra[:5]}"
+               f"{'...' if len(extra) > 5 else ''}" if extra else "")
+            + " — restore with the same config (schedule/comm_plan/"
+            "optimizer/...) the checkpoint was saved under")
     out = []
     for i, (name, leaf) in enumerate(named):
         if leaf is None:

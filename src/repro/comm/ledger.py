@@ -83,9 +83,17 @@ class LedgerEntry:
 @dataclass
 class CommLedger:
     """Accumulates per-step wire cost. Register entries once (at plan
-    time), then ``tick()`` each training step; read ``summary()``."""
+    time), then ``tick()`` each training step; read ``summary()``.
+
+    Schedule-aware (repro.sched, DESIGN.md §5): steps and exchange rounds
+    are tracked separately — under ``local_k`` only 1-in-K steps moves
+    bytes, so cumulative wire cost follows ``rounds``, not ``steps``. The
+    host may also feed the simulated wall clock (``sched.clock``) through
+    ``tick(wall_s=...)`` so log rows carry a time axis."""
     entries: List[LedgerEntry] = field(default_factory=list)
     steps: int = 0
+    rounds: int = 0          # exchange rounds actually executed
+    sim_clock_s: float = 0.0  # accumulated simulated wall clock
 
     # -- registration ------------------------------------------------------- #
     def register(self, tag, strategy, comp: C.Compressor, shape,
@@ -154,8 +162,13 @@ class CommLedger:
         return led
 
     # -- accumulation ------------------------------------------------------- #
-    def tick(self, n: int = 1):
+    def tick(self, n: int = 1, exchanged: bool = True, wall_s: float = 0.0):
+        """Advance `n` steps. ``exchanged=False`` records local (mid-round)
+        steps that moved no bytes; ``wall_s`` adds simulated wall clock."""
         self.steps += n
+        if exchanged:
+            self.rounds += n
+        self.sim_clock_s += wall_s
 
     # -- readouts ----------------------------------------------------------- #
     @property
@@ -177,7 +190,7 @@ class CommLedger:
 
     @property
     def cumulative_wire_bytes(self) -> float:
-        return self.steps * self.wire_bytes_per_step
+        return self.rounds * self.wire_bytes_per_step
 
     @property
     def compression_ratio(self) -> float:
@@ -190,6 +203,8 @@ class CommLedger:
     def summary(self) -> dict:
         return {
             "steps": self.steps,
+            "rounds": self.rounds,
+            "sim_clock_s": round(self.sim_clock_s, 4),
             "wire_bytes_per_step": round(self.wire_bytes_per_step),
             "carried_bytes_per_step": round(self.carried_bytes_per_step),
             "raw_bytes_per_step": round(self.raw_bytes_per_step),

@@ -276,3 +276,16 @@ class DQConfig:
     comm_plan: str = "none"
     bucket_mb: float = 4.0           # f32 MiB per bucket before closing it
     comm_budget_mb: float = 0.0      # delta_budget: payload MiB/step target
+    # ---- repro.sched: execution schedule (DESIGN.md §5) ------------------ #
+    # "every_step" (seed semantics) | "local_k" (exchange every K steps,
+    # message accumulates in DQState.sched["accum"]) | "delayed" (one-step
+    # stale exchange overlapping compute; pending message in
+    # DQState.sched["pending"], staleness correction in the OMD lookahead).
+    schedule: str = "every_step"
+    local_k: int = 1                 # K for schedule="local_k"
+    # fraction of workers sampled per exchange round (count-exact); the
+    # workers sitting out fold their message into the EF residual.
+    participation: float = 1.0
+    # straggler profile name (sched.straggler) — consumed only by the
+    # host-side wall-clock model, never by the jitted step.
+    straggler_profile: str = "none"

@@ -54,6 +54,10 @@ class DQState(NamedTuple):
     ef: Any              # per-worker exchange EF state dicts | None
     m: Any               # Adam first moment | None
     v: Any               # Adam second moment | None
+    # repro.sched per-worker buffers (DESIGN.md §5) | None for every_step:
+    #   {"accum": tree}   local_k  — message accumulated since last round
+    #   {"pending": tree} delayed  — message awaiting next step's exchange
+    sched: Any = None
 
 
 class StepOutput(NamedTuple):
@@ -271,6 +275,16 @@ class DQGAN:
             m = jax.tree.map(param_like, params)
             v = jax.tree.map(param_like, params)
 
+        # repro.sched buffers carry the (float32) exchange message, one per
+        # worker, same sharding discipline as the EF residuals.
+        sched = None
+        if dq.schedule == "local_k":
+            sched = {"accum": jax.tree.map(
+                lambda x: per_worker_like(x, jnp.float32), params)}
+        elif dq.schedule == "delayed":
+            sched = {"pending": jax.tree.map(
+                lambda x: per_worker_like(x, jnp.float32), params)}
+
         return DQState(
             step=jax.ShapeDtypeStruct((), jnp.int32),
             params=params_s,
@@ -279,6 +293,7 @@ class DQGAN:
             ef=ef,
             m=m,
             v=v,
+            sched=sched,
         )
 
     def state_specs(self, params) -> DQState:
@@ -297,9 +312,25 @@ class DQGAN:
     # ------------------------------------------------------------------ #
     # the step
     # ------------------------------------------------------------------ #
-    def step(self, state: DQState, batch, key) -> StepOutput:
-        """One Algorithm-2 iteration. jit me (donate state for in-place)."""
+    def step(self, state: DQState, batch, key,
+             do_exchange: bool = True) -> StepOutput:
+        """One Algorithm-2 iteration. jit me (donate state for in-place).
+
+        ``do_exchange`` is only consulted by the ``local_k`` schedule; it
+        must be a static Python bool (jit it via ``static_argnums=(3,)``)
+        — the host decides the cadence with
+        ``sched.ExchangeSchedule.is_exchange_step(step)``. ``every_step``
+        and ``delayed`` run their collective every call and ignore it.
+        """
         dq = self.dq
+        if dq.schedule == "local_k":
+            if not isinstance(do_exchange, bool):
+                raise TypeError(
+                    "schedule='local_k' needs a static Python bool "
+                    "do_exchange (jit with static_argnums=(3,)); got "
+                    f"{type(do_exchange).__name__}")
+        else:
+            do_exchange = True
         plans = self._plans(state.params)
         axes = tuple(dq.worker_axes)
         W = self.n_workers
@@ -308,13 +339,16 @@ class DQGAN:
             # single worker: per-worker leaves still carry their leading
             # worker axis (of size 1), so squeeze stays on.
             return self._worker_body(
-                state, batch, key, None, plans, axes=(), squeeze=True
+                state, batch, key, None, plans, axes=(), squeeze=True,
+                do_exchange=do_exchange,
             )
 
         if dq.spmd == "vmap":
-            return self._step_vmap(state, batch, key, W)
+            return self._step_vmap(state, batch, key, W,
+                                   do_exchange=do_exchange)
 
-        body = partial(self._worker_body, plans=plans, axes=axes, squeeze=True)
+        body = partial(self._worker_body, plans=plans, axes=axes,
+                       squeeze=True, do_exchange=do_exchange)
 
         # ---- build shard_map specs (manual axes only) -------------------- #
         rep = P()
@@ -324,7 +358,7 @@ class DQGAN:
             sub = getattr(state, name)
             if sub is None:
                 return None
-            lead = wlead if name in ("prev_grad", "ef") else rep
+            lead = wlead if name in ("prev_grad", "ef", "sched") else rep
             return jax.tree.map(lambda _: lead, sub)
 
         state_specs = DQState(
@@ -335,6 +369,7 @@ class DQGAN:
             ef=st_spec("ef"),
             m=st_spec("m"),
             v=st_spec("v"),
+            sched=st_spec("sched"),
         )
         bspec = self.batch_spec
         if bspec is None:
@@ -369,41 +404,65 @@ class DQGAN:
         return fn(state, batch, key, widx_arr)
 
     # ------------------------------------------------------------------ #
-    def _step_vmap(self, state, batch, key, W):
+    def _step_vmap(self, state, batch, key, W, do_exchange=True):
         """Workers as a vmapped leading axis (paper semantics of Algorithm 2,
         exchange = mean over the worker axis, compression via per-worker
         roundtrip — the 'sim' strategy). Pure auto-sharding: the worker axis
         is sharded over dq.worker_axes, everything inside (FSDP 'data',
         tensor 'model') is compiler-managed. Used for the 100B-scale FSDP
-        layout where shard_map-over-pod hits an XLA partitioner CHECK."""
+        layout where shard_map-over-pod hits an XLA partitioner CHECK.
+
+        Schedule dataflow (repro.sched) mirrors `_worker_body`: local_k
+        accumulates the message and only compresses at round ends; delayed
+        compresses the previous step's message with the staleness
+        correction folded into the OMD lookahead; partial participation
+        masks messages/residuals and rescales the mean."""
         from .error_feedback import compress_with_ef
 
         dq = self.dq
         comp = self.compressor
         eta = dq.lr
+        schedule = dq.schedule
 
         batch_w = jax.tree.map(
             lambda x: x.reshape((W, x.shape[0] // W) + x.shape[1:]), batch
         )
         widx = jnp.arange(W)
+        part_setup = self._participation_setup(key, state.step, W)
+        has_part = part_setup is not None
+        mask_vec = part_setup[0] if has_part else jnp.ones((W,), jnp.float32)
+        n_part = part_setup[1] if has_part else W
+        exchanging = not (schedule == "local_k" and not do_exchange)
 
-        def worker(prev_g, ef, b, i):
+        def worker(prev_g, ef, sw, b, i, mask):
             kw = jax.random.fold_in(jax.random.fold_in(key, i), state.step)
             kf, kq = jax.random.split(kw)
+            pending = sw["pending"] if schedule == "delayed" else None
+            stale = self._staleness_correction(pending)
             if dq.optimizer == "omd" and dq.extrapolation == "local":
-                def extrap(w, g_prev, e):
+                def extrap(w, g_prev, e, s):
                     upd = eta * g_prev
                     if e is not None:
                         upd = upd + e["e1"].astype(upd.dtype)
+                    if s is not None:
+                        upd = upd + s.astype(upd.dtype)
                     return w - upd.astype(w.dtype)
-                if dq.error_feedback:
-                    w_half = jax.tree.map(extrap, state.params, prev_g, ef)
-                else:
-                    w_half = jax.tree.map(lambda w, g: extrap(w, g, None),
-                                          state.params, prev_g)
+                leaves_p, tdp = jax.tree.flatten(state.params)
+                gl = tdp.flatten_up_to(prev_g)
+                el = (tdp.flatten_up_to(ef) if dq.error_feedback and ef
+                      is not None else [None] * len(leaves_p))
+                sl = (tdp.flatten_up_to(stale) if stale is not None
+                      else [None] * len(leaves_p))
+                w_half = jax.tree.unflatten(
+                    tdp, [extrap(w, g, e, s)
+                          for w, g, e, s in zip(leaves_p, gl, el, sl)])
             elif dq.optimizer == "omd":
+                upd_tree = state.prev_update
+                if stale is not None:
+                    upd_tree = jax.tree.map(
+                        lambda u, s: u + s.astype(u.dtype), upd_tree, stale)
                 w_half = jax.tree.map(lambda w, u: w - u.astype(w.dtype),
-                                      state.params, state.prev_update)
+                                      state.params, upd_tree)
             else:
                 w_half = state.params
             grads, metrics = self.field_fn(w_half, b, kf)
@@ -413,72 +472,86 @@ class DQGAN:
             else:
                 msg = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
 
-            leaves, treedef = jax.tree.flatten(msg)
-            ef_leaves = (treedef.flatten_up_to(ef) if ef is not None
-                         else [None] * len(leaves))
-            phats, enews = [], []
-            for j, (m, e) in enumerate(zip(leaves, ef_leaves)):
-                e1 = (e["e1"] if e else jnp.zeros_like(m)).astype(jnp.float32)
-                _, p_hat, e_new = compress_with_ef(
-                    comp, m, e1, jax.random.fold_in(kq, j),
-                    use_ef=dq.error_feedback, allow_fused=False)  # vmapped
-                phats.append(p_hat)
-                enews.append({"e1": e_new.astype(jnp.dtype(dq.ef_dtype))}
-                             if dq.error_feedback else None)
-            phat = jax.tree.unflatten(treedef, phats)
-            enew = (jax.tree.unflatten(treedef, enews)
-                    if dq.error_feedback else None)
-            return phat, enew, grads, metrics.get("loss", jnp.zeros(()))
+            exch = msg
+            new_sw = None
+            if schedule == "local_k":
+                if dq.local_k == 1 and do_exchange:
+                    # see _worker_body: keeps the graph (and FMA
+                    # contraction) bit-identical to every_step
+                    new_sw = {"accum": _tree_zeros(sw["accum"])}
+                else:
+                    accum = jax.tree.map(
+                        lambda a, m: (a + m).astype(a.dtype),
+                        sw["accum"], msg)
+                    exch = accum if do_exchange else None
+                    new_sw = {"accum": (_tree_zeros(accum) if do_exchange
+                                        else accum)}
+            elif schedule == "delayed":
+                exch = pending
+                new_sw = {"pending": jax.tree.map(
+                    lambda p, m: m.astype(p.dtype), pending, msg)}
+
+            phat = enew = None
+            if exch is not None:
+                leaves, treedef = jax.tree.flatten(exch)
+                ef_leaves = (treedef.flatten_up_to(ef) if ef is not None
+                             else [None] * len(leaves))
+                phats, enews = [], []
+                for j, (m, e) in enumerate(zip(leaves, ef_leaves)):
+                    e1 = (e["e1"] if e
+                          else jnp.zeros_like(m)).astype(jnp.float32)
+                    m_in = m * mask if has_part else m
+                    e_in = e1 * mask if has_part else e1
+                    _, p_hat, e_new = compress_with_ef(
+                        comp, m_in, e_in, jax.random.fold_in(kq, j),
+                        use_ef=dq.error_feedback, allow_fused=False)  # vmapped
+                    if has_part and dq.error_feedback:
+                        e_new = mask * e_new + (1.0 - mask) * (e1 + m)
+                    phats.append(p_hat)
+                    enews.append({"e1": e_new.astype(jnp.dtype(dq.ef_dtype))}
+                                 if dq.error_feedback else None)
+                phat = jax.tree.unflatten(treedef, phats)
+                enew = (jax.tree.unflatten(treedef, enews)
+                        if dq.error_feedback else None)
+            return phat, enew, new_sw, grads, metrics.get("loss",
+                                                          jnp.zeros(()))
 
         prev_g = state.prev_grad
         ef = state.ef if dq.error_feedback else None
-        phat_w, ef_w, grads_w, loss_w = jax.vmap(
-            worker, in_axes=(0, 0 if ef is not None else None, 0, 0)
-        )(prev_g, ef, batch_w, widx)
-
-        qhat = jax.tree.map(lambda x: jnp.mean(x, axis=0), phat_w)
+        phat_w, ef_w, sched_w, grads_w, loss_w = jax.vmap(
+            worker,
+            in_axes=(0, 0 if ef is not None else None, 0, 0, 0, 0),
+        )(prev_g, ef, state.sched, batch_w, widx, mask_vec)
 
         new_m, new_v, new_prev_update = state.m, state.v, state.prev_update
-        params = state.params
-        if dq.optimizer == "omd":
-            update = qhat if dq.message == "update" else jax.tree.map(
-                lambda q: eta * q, qhat)
-            new_params = jax.tree.map(lambda w, u: w - u.astype(w.dtype),
-                                      params, update)
-            if dq.extrapolation == "global":
-                new_prev_update = update
+        new_ef = state.ef
+        if exchanging:
+            qhat = jax.tree.map(lambda x: jnp.mean(x, axis=0), phat_w)
+            if has_part:
+                scale = W / n_part
+                qhat = jax.tree.map(lambda q: (q * scale).astype(q.dtype),
+                                    qhat)
+            new_params, new_m, new_v, new_prev_update = self._server_update(
+                state, qhat)
+            if dq.error_feedback and ef_w is not None:
+                new_ef = jax.tree.map(
+                    lambda o, n: n.astype(o.dtype), state.ef, ef_w)
         else:
-            t = state.step.astype(jnp.float32) + 1.0
-            b1, b2 = dq.beta1, dq.beta2
-            new_m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g,
-                                 state.m, qhat)
-            new_v = jax.tree.map(
-                lambda v, g: b2 * v + (1 - b2) * jnp.square(g), state.v, qhat)
-            direction = self._scale_groups(jax.tree.map(
-                lambda m, v: (m / (1 - b1**t))
-                / (jnp.sqrt(v / (1 - b2**t)) + dq.eps), new_m, new_v))
-            if dq.optimizer == "oadam":
-                new_params = jax.tree.map(
-                    lambda w, d, dp: w - (eta * (2.0 * d - dp)).astype(w.dtype),
-                    params, direction, state.prev_update)
-                new_prev_update = direction
-            else:
-                new_params = jax.tree.map(
-                    lambda w, d: w - (eta * d).astype(w.dtype),
-                    params, direction)
+            new_params = state.params
 
         new_prev_grad = state.prev_grad
         if state.prev_grad is not None:
             new_prev_grad = jax.tree.map(lambda o, g: g.astype(o.dtype),
                                          state.prev_grad, grads_w)
-        new_ef = state.ef
-        if dq.error_feedback and ef_w is not None:
-            new_ef = jax.tree.map(
-                lambda o, n: n.astype(o.dtype), state.ef, ef_w)
+        new_sched = state.sched
+        if sched_w is not None:
+            new_sched = jax.tree.map(lambda o, n: n.astype(o.dtype),
+                                     state.sched, sched_w)
 
         new_state = DQState(
             step=state.step + 1, params=new_params, prev_grad=new_prev_grad,
-            prev_update=new_prev_update, ef=new_ef, m=new_m, v=new_v)
+            prev_update=new_prev_update, ef=new_ef, m=new_m, v=new_v,
+            sched=new_sched)
         gn = _global_norm(grads_w)
         en = _global_norm(new_ef) if new_ef is not None else jnp.zeros(())
         return StepOutput(state=new_state,
@@ -486,15 +559,16 @@ class DQGAN:
                                    "grad_norm": gn, "error_norm": en})
 
     # ------------------------------------------------------------------ #
-    def _worker_body(self, state, batch, key, widx_arr, plans, axes, squeeze):
+    def _worker_body(self, state, batch, key, widx_arr, plans, axes, squeeze,
+                     do_exchange=True):
         """Per-worker computation. When `squeeze`, per-worker leaves arrive
         with a leading axis of local size 1 (their worker shard).
         `widx_arr` is the (local size 1) slice of arange(W) sharded over
         the worker axes, or None outside shard_map."""
         dq = self.dq
-        comp = self.compressor
         W = self.n_workers
         eta = dq.lr
+        schedule = dq.schedule
 
         def takew(tree):
             if tree is None or not squeeze:
@@ -506,6 +580,10 @@ class DQGAN:
                 return tree
             return jax.tree.map(lambda x: x[None], tree)
 
+        # participation mask from the shared (pre-worker-fold) key so every
+        # worker draws the same round permutation.
+        part_setup = self._participation_setup(key, state.step, W)
+
         widx = None
         if axes:
             widx = (widx_arr[0] if widx_arr is not None
@@ -516,33 +594,47 @@ class DQGAN:
         params = state.params
         prev_grad = takew(state.prev_grad)
         ef = takew(state.ef)
+        sched_st = takew(state.sched)
+        pending = sched_st["pending"] if schedule == "delayed" else None
+        part = None
+        if part_setup is not None and widx is not None:
+            part = (part_setup[0][widx], part_setup[1])
 
         # ---------- extrapolation to w_{t-1/2} ---------------------------- #
+        # delayed schedule: w_{t-1} is one applied update stale, so the OMD
+        # lookahead additionally subtracts the worker's own pending
+        # (in-flight) message as the staleness-correction proxy for q̂.
+        stale = self._staleness_correction(pending)
         ef_leaf_tree = ef["leaf"] if (self.bucketed and ef is not None) else ef
         if dq.optimizer == "omd":
             if dq.extrapolation == "local":
                 e_term = ef_leaf_tree if dq.error_feedback else None
 
-                def extrap(w, g_prev, e_leaf):
+                def extrap(w, g_prev, e_leaf, s):
                     upd = eta * g_prev
                     if e_leaf is not None and "e1" in e_leaf:
                         upd = upd + e_leaf["e1"].astype(w.dtype)
+                    if s is not None:
+                        upd = upd + s.astype(w.dtype)
                     return w - upd.astype(w.dtype)
 
-                if e_term is not None:
-                    w_half = jax.tree.map(
-                        extrap, params, prev_grad, e_term,
-                        is_leaf=lambda x: _is_ef_leaf(x),
-                    )
-                else:
-                    w_half = jax.tree.map(
-                        lambda w, g: w - (eta * g).astype(w.dtype),
-                        params, prev_grad,
-                    )
+                leaves_p, tdp = jax.tree.flatten(params)
+                gl = tdp.flatten_up_to(prev_grad)
+                el = (tdp.flatten_up_to(e_term) if e_term is not None
+                      else [None] * len(leaves_p))
+                sl = (tdp.flatten_up_to(stale) if stale is not None
+                      else [None] * len(leaves_p))
+                w_half = jax.tree.unflatten(
+                    tdp, [extrap(w, g, e, s)
+                          for w, g, e, s in zip(leaves_p, gl, el, sl)])
             else:  # global: lookahead with the previously applied update
+                upd_tree = state.prev_update
+                if stale is not None:
+                    upd_tree = jax.tree.map(lambda u, s: u + s.astype(u.dtype),
+                                            upd_tree, stale)
                 w_half = jax.tree.map(
                     lambda w, u: w - u.astype(w.dtype),
-                    params, state.prev_update,
+                    params, upd_tree,
                 )
         else:
             w_half = params  # adam/oadam/sgd evaluate at current params
@@ -550,16 +642,109 @@ class DQGAN:
         # ---------- local stochastic field -------------------------------- #
         grads, metrics = self.field_fn(w_half, batch, kfield)
 
-        # ---------- message + exchange ------------------------------------ #
+        # ---------- message + schedule dataflow --------------------------- #
         if dq.message == "update" and dq.optimizer == "omd":
             message = jax.tree.map(lambda g: (eta * g).astype(jnp.float32), grads)
         else:
             message = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
 
-        qhat, new_ef = self._exchange_tree(message, ef, plans, kq, axes,
-                                           widx=widx)
+        exch_msg = message
+        new_sched = None
+        if schedule == "local_k":
+            if dq.local_k == 1 and do_exchange:
+                # length-1 rounds: the accumulator is identically zero at
+                # every exchange; skipping the add keeps the compiled graph
+                # (hence XLA's FMA contraction) bit-identical to every_step.
+                new_sched = {"accum": _tree_zeros(sched_st["accum"])}
+            else:
+                accum = jax.tree.map(lambda a, m: (a + m).astype(a.dtype),
+                                     sched_st["accum"], message)
+                if do_exchange:
+                    exch_msg = accum
+                    new_sched = {"accum": _tree_zeros(accum)}
+                else:
+                    exch_msg = None  # mid-round: nothing on the wire
+                    new_sched = {"accum": accum}
+        elif schedule == "delayed":
+            exch_msg = pending  # exchange the PREVIOUS step's message
+            new_sched = {"pending": jax.tree.map(
+                lambda p, m: m.astype(p.dtype), pending, message)}
 
-        # ---------- server-side update ------------------------------------ #
+        # ---------- exchange + server-side update ------------------------- #
+        if exch_msg is not None:
+            qhat, new_ef = self._exchange_tree(exch_msg, ef, plans, kq, axes,
+                                               widx=widx, part=part)
+            new_params, new_m, new_v, new_prev_update = self._server_update(
+                state, qhat)
+        else:
+            new_params = params
+            new_m, new_v, new_prev_update = state.m, state.v, state.prev_update
+            new_ef = ef
+
+        new_prev_grad = None
+        if state.prev_grad is not None:
+            new_prev_grad = jax.tree.map(
+                lambda o, g: g.astype(o.dtype), prev_grad, grads
+            )
+
+        # ---------- metrics ------------------------------------------------ #
+        gn = _global_norm(grads)
+        en = _global_norm(new_ef) if new_ef is not None else jnp.zeros(())
+        loss = metrics.get("loss", jnp.zeros(()))
+        if axes:
+            loss = jax.lax.pmean(loss, axes)
+            gn = jax.lax.pmean(gn, axes)
+            en = jax.lax.pmean(en, axes)
+
+        new_state = DQState(
+            step=state.step + 1,
+            params=new_params,
+            prev_grad=putw(new_prev_grad),
+            prev_update=new_prev_update,
+            ef=putw(new_ef),
+            m=new_m,
+            v=new_v,
+            sched=putw(new_sched),
+        )
+        return StepOutput(
+            state=new_state,
+            metrics={"loss": loss, "grad_norm": gn, "error_norm": en},
+        )
+
+    # ------------------------------------------------------------------ #
+    # schedule/participation helpers (repro.sched, DESIGN.md §5)
+    # ------------------------------------------------------------------ #
+    def _staleness_correction(self, pending):
+        """The pending (delayed-schedule) message in update units — the
+        worker's best local estimate of the in-flight global update."""
+        if pending is None:
+            return None
+        if self.dq.message == "update":
+            return pending
+        return jax.tree.map(lambda p: self.dq.lr * p, pending)
+
+    def _participation_setup(self, key, step, W):
+        """(mask_vec (W,), n_part) for this round, or None for full
+        participation / single worker. Must be called with the shared key
+        (before the per-worker fold_in)."""
+        dq = self.dq
+        if dq.participation >= 1.0 or W <= 1:
+            return None
+        from repro.sched import participation as SP
+
+        n_part = SP.n_participants(dq.participation, W)
+        if n_part >= W:
+            return None
+        period = dq.local_k if dq.schedule == "local_k" else 1
+        round_idx = step // period
+        return SP.round_mask(key, round_idx, W, n_part), n_part
+
+    def _server_update(self, state, qhat):
+        """Apply the averaged message q̂ on (replicated) server state.
+        Shared by the shard_map and vmap paths."""
+        dq = self.dq
+        eta = dq.lr
+        params = state.params
         new_m, new_v, new_prev_update = state.m, state.v, state.prev_update
         if dq.optimizer == "omd":
             if dq.message == "update":
@@ -572,7 +757,10 @@ class DQGAN:
             if dq.extrapolation == "global":
                 new_prev_update = update
         elif dq.optimizer in ("adam", "oadam"):
-            t = state.step.astype(jnp.float32) + 1.0
+            # bias correction counts applied updates, not raw steps — with
+            # local_k this runs only at round ends ((step+1) % K == 0).
+            period = dq.local_k if dq.schedule == "local_k" else 1
+            t = ((state.step + 1) // period).astype(jnp.float32)
             b1, b2 = dq.beta1, dq.beta2
             new_m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state.m, qhat)
             new_v = jax.tree.map(
@@ -603,38 +791,14 @@ class DQGAN:
             )
         else:
             raise ValueError(dq.optimizer)
-
-        new_prev_grad = None
-        if state.prev_grad is not None:
-            new_prev_grad = jax.tree.map(
-                lambda o, g: g.astype(o.dtype), prev_grad, grads
-            )
-
-        # ---------- metrics ------------------------------------------------ #
-        gn = _global_norm(grads)
-        en = _global_norm(new_ef) if new_ef is not None else jnp.zeros(())
-        loss = metrics.get("loss", jnp.zeros(()))
-        if axes:
-            loss = jax.lax.pmean(loss, axes)
-            gn = jax.lax.pmean(gn, axes)
-            en = jax.lax.pmean(en, axes)
-
-        new_state = DQState(
-            step=state.step + 1,
-            params=new_params,
-            prev_grad=putw(new_prev_grad),
-            prev_update=new_prev_update,
-            ef=putw(new_ef),
-            m=new_m,
-            v=new_v,
-        )
-        return StepOutput(
-            state=new_state,
-            metrics={"loss": loss, "grad_norm": gn, "error_norm": en},
-        )
+        return new_params, new_m, new_v, new_prev_update
 
     # ------------------------------------------------------------------ #
-    def _exchange_tree(self, message, ef, plans, key, axes, widx=None):
+    def _exchange_tree(self, message, ef, plans, key, axes, widx=None,
+                       part=None):
+        if part is not None:
+            return self._exchange_with_participation(
+                message, ef, plans, key, axes, widx, part)
         if self.bucketed:
             return self._exchange_bucketed(message, ef, plans, key, axes,
                                            widx=widx)
@@ -667,6 +831,61 @@ class DQGAN:
         if ef is None and not dq.error_feedback and dq.exchange != "two_phase":
             return qhat, None
         return qhat, jax.tree.unflatten(treedef, new_ef)
+
+    def _exchange_with_participation(self, message, ef, plans, key, axes,
+                                     widx, part):
+        """Partial participation (sched.participation, DESIGN.md §5.3):
+        this worker's message and worker-side residual are masked to zero
+        when it sits the round out — every registry compressor maps 0 to a
+        zero payload, so masked workers ride through the unmodified
+        collectives contributing nothing. The averaged q̂ is rescaled from
+        1/W to 1/n_participants (a static constant), and non-participants
+        fold the would-have-been message into their EF residual instead.
+        """
+        mask, n_part = part  # mask: this worker's 0/1 flag; n_part: static
+        W = self.n_workers
+        leaves, treedef = jax.tree.flatten(message)
+        msg_in = jax.tree.unflatten(treedef, [l * mask for l in leaves])
+
+        def mask_e1(tree):
+            out = []
+            for e in treedef.flatten_up_to(tree):
+                if e and "e1" in e:
+                    e = dict(e)
+                    e["e1"] = e["e1"] * mask.astype(e["e1"].dtype)
+                out.append(e)
+            return jax.tree.unflatten(treedef, out)
+
+        if ef is None:
+            ef_in = None
+        elif self.bucketed:
+            ef_in = {"leaf": mask_e1(ef["leaf"]), "bucket": ef["bucket"]}
+        else:
+            ef_in = mask_e1(ef)
+
+        qhat, new_ef = self._exchange_tree(msg_in, ef_in, plans, key, axes,
+                                           widx=widx)
+        scale = W / n_part
+        qhat = jax.tree.map(lambda q: (q * scale).astype(q.dtype), qhat)
+
+        if not self.dq.error_feedback or ef is None:
+            return qhat, new_ef
+        # EF merge: participants keep the exchange's residual, the rest
+        # accumulate the unsent message on top of their old residual.
+        old_leaf = ef["leaf"] if self.bucketed else ef
+        new_leaf = new_ef["leaf"] if self.bucketed else new_ef
+        olds = treedef.flatten_up_to(old_leaf)
+        news = [dict(n) if n else n
+                for n in treedef.flatten_up_to(new_leaf)]
+        for m_leaf, o, n in zip(leaves, olds, news):
+            if o and "e1" in o:
+                keep = o["e1"].astype(jnp.float32) + m_leaf
+                n["e1"] = (mask * n["e1"].astype(jnp.float32)
+                           + (1.0 - mask) * keep).astype(o["e1"].dtype)
+        merged = jax.tree.unflatten(treedef, news)
+        if self.bucketed:
+            return qhat, {"leaf": merged, "bucket": new_ef["bucket"]}
+        return qhat, merged
 
     def _single_worker_leaf(self, comp, plan, p, e, key):
         from .error_feedback import compress_with_ef

@@ -5,7 +5,7 @@
 * 2-D Gaussian mixtures: the classic GAN mode-coverage benchmark.
 * Procedural images: CIFAR-shaped structured images (colored oriented
   blobs) giving the DCGAN a non-trivial distribution; stands in for
-  CIFAR10/CelebA (DESIGN.md §6).
+  CIFAR10/CelebA (DESIGN.md §7).
 """
 from __future__ import annotations
 

@@ -18,8 +18,26 @@ fields ``wire_mb_step`` / ``cum_wire_mb`` / ``comm_ratio``:
     # fit a byte budget by per-bucket bit-width descent:
     ... --comm-plan delta_budget --comm-budget-mb 2.5
 
-For the paper's own experiment (DCGAN), use examples/train_gan.py which
-adds the WGAN weight clipping + evaluation metrics.
+Execution schedule (repro.sched, DESIGN.md §5): ``--schedule`` picks when
+workers exchange; log rows then carry ``round`` and the simulated wall
+clock (``sim_clock_s``) from the straggler-aware cost model:
+
+    # exchange every 4 steps, message accumulates between rounds:
+    ... --schedule local_k --local-k 4
+
+    # one-step-stale exchange overlapping compute, heterogeneous workers:
+    ... --schedule delayed --straggler-profile mild
+
+    # each round only half the workers report; the rest accumulate EF:
+    ... --participation 0.5
+
+Checkpointing: ``--checkpoint PATH`` saves the FULL ``DQState`` (params,
+optimizer moments, prev_grad, EF residuals incl. comm-plan bucket
+entries, schedule buffers) at the end and every ``--checkpoint-every N``
+steps; ``--resume PATH`` restores it and continues from the saved step.
+
+For the paper's own experiment (DCGAN), use examples/train_gan_images.py
+which adds the WGAN weight clipping + evaluation metrics.
 """
 from __future__ import annotations
 
@@ -32,12 +50,15 @@ import jax.numpy as jnp
 
 import repro.configs as cfgs
 from repro import checkpoint
+from repro import sched as schedlib
 from repro.configs.base import DQConfig
 from repro.core.dqgan import DQGAN
 from repro.data import lm_batch_iterator
 from repro.models import build
 from repro.parallel import sharding as shd
 from repro.parallel.compat import set_mesh
+from repro.sched import clock as sclock
+from repro.sched import straggler as sstrag
 
 
 def main(argv=None):
@@ -60,12 +81,29 @@ def main(argv=None):
                     help="f32 MiB per gradient bucket")
     ap.add_argument("--comm-budget-mb", type=float, default=0.0,
                     help="delta_budget policy: payload MiB/step target")
-    ap.add_argument("--checkpoint", default="")
+    ap.add_argument("--schedule", default="every_step",
+                    choices=schedlib.SCHEDULES,
+                    help="repro.sched exchange schedule")
+    ap.add_argument("--local-k", type=int, default=1,
+                    help="local_k schedule: exchange every K steps")
+    ap.add_argument("--participation", type=float, default=1.0,
+                    help="fraction of workers sampled per exchange round")
+    ap.add_argument("--straggler-profile", default="none",
+                    choices=sorted(sstrag.PROFILES),
+                    help="heterogeneity profile for the wall-clock model")
+    ap.add_argument("--checkpoint", default="",
+                    help="save the full DQState here (end of run + "
+                         "--checkpoint-every)")
+    ap.add_argument("--checkpoint-every", type=int, default=0,
+                    help="also save every N steps (0 = only at the end)")
+    ap.add_argument("--resume", default="",
+                    help="restore a full DQState checkpoint and continue")
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
     if args.comm_plan == "delta_budget" and args.comm_budget_mb <= 0:
         ap.error("--comm-plan delta_budget requires --comm-budget-mb > 0")
+    sched = schedlib.get(args.schedule, args.local_k)
 
     cfg = cfgs.get(args.arch)
     if args.smoke:
@@ -93,6 +131,9 @@ def main(argv=None):
         message="update" if args.optimizer == "omd" else "grad",
         comm_plan=args.comm_plan, bucket_mb=args.bucket_mb,
         comm_budget_mb=args.comm_budget_mb,
+        schedule=args.schedule, local_k=args.local_k,
+        participation=args.participation,
+        straggler_profile=args.straggler_profile,
     )
     key = jax.random.key(args.seed)
     params = bundle.init(key, max_seq=args.seq)
@@ -103,14 +144,35 @@ def main(argv=None):
 
     trainer = DQGAN(field_fn=bundle.field_fn, dq=dq, mesh=mesh,
                     param_specs=pspecs, batch_spec=bspec)
+
+    def state_shardings():
+        if mesh is None:
+            return None
+        from jax.sharding import NamedSharding
+        return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                            trainer.state_specs(params))
+
+    start = 0
     state = trainer.init(params)
-    step = jax.jit(trainer.step, donate_argnums=0)
+    if args.resume:
+        state = checkpoint.restore(args.resume, state, state_shardings())
+        start = int(jax.device_get(state.step))
+        print(f"# resumed from {args.resume} at step {start}", flush=True)
+    step = jax.jit(trainer.step, static_argnums=(3,), donate_argnums=(0,))
 
     ledger = trainer.comm_ledger(params)
     if args.comm_plan != "none":
         layout, cplan = trainer._comm(params)
         print(f"# comm: {layout.describe()}", flush=True)
         print(f"# comm: {cplan.describe()}", flush=True)
+    profile = sstrag.get_profile(args.straggler_profile)
+    link = sclock.LinkModel()
+    W = max(trainer.n_workers, 1)
+    t_ex = link.exchange_time(ledger.wire_bytes_per_step) if W > 1 else 0.0
+    if args.schedule != "every_step" or args.straggler_profile != "none":
+        print(f"# sched: {sched.describe()} participation="
+              f"{args.participation} profile={profile.describe()}",
+              flush=True)
 
     if getattr(cfg, "arch_type", "") == "gan":
         it = gan_batch_iterator(args.seed, args.batch, cfg)
@@ -119,18 +181,42 @@ def main(argv=None):
                      else None)
         it = lm_batch_iterator(args.seed, args.batch, args.seq,
                                cfg.vocab_size, enc_shape)
+    for _ in range(start):  # keep the data stream aligned across resumes
+        next(it)
+
     history = []
     t0 = time.time()
+    wall_series = None
+    warm_variants = set()  # do_exchange values whose jit variant compiled
     ctx = set_mesh(mesh) if mesh is not None else _null()
     with ctx:
-        for i in range(args.steps):
+        for i in range(start, args.steps):
             batch = next(it)
-            out = step(state, batch, key)
+            do_exchange = sched.is_exchange_step(i)
+            it_t0 = time.perf_counter()
+            out = step(state, batch, key, do_exchange)
             state = out.state
-            ledger.tick()
+            if wall_series is None and (do_exchange in warm_variants
+                                        or i == args.steps - 1):
+                # base compute time from the first step whose jit variant
+                # already compiled (holds across resumes too); feeds the
+                # simulated (straggler-aware) wall-clock series
+                jax.block_until_ready(out.metrics)
+                base = time.perf_counter() - it_t0
+                times = sstrag.step_times(profile, W, args.steps, args.seed,
+                                          base=base)
+                wall_series = sclock.simulate(
+                    sched, times, t_ex, args.participation,
+                    args.seed)["per_step_s"]
+                if i > start:  # backfill the steps already run
+                    ledger.tick(0, wall_s=float(wall_series[start:i].sum()))
+            warm_variants.add(do_exchange)
+            wall = float(wall_series[i]) if wall_series is not None else 0.0
+            ledger.tick(exchanged=do_exchange, wall_s=wall)
             if i % args.log_every == 0 or i == args.steps - 1:
                 m = jax.device_get(out.metrics)
-                rec = {"step": i, "loss": float(m["loss"]),
+                rec = {"step": i, "round": sched.round_index(i),
+                       "loss": float(m["loss"]),
                        "grad_norm": float(m["grad_norm"]),
                        "error_norm": float(m["error_norm"]),
                        "wire_mb_step": round(
@@ -138,13 +224,18 @@ def main(argv=None):
                        "cum_wire_mb": round(
                            ledger.cumulative_wire_bytes / 1e6, 2),
                        "comm_ratio": round(ledger.compression_ratio, 2),
+                       "sim_clock_s": round(ledger.sim_clock_s, 3),
                        "elapsed_s": round(time.time() - t0, 1)}
                 history.append(rec)
                 print(json.dumps(rec), flush=True)
+            if (args.checkpoint and args.checkpoint_every
+                    and (i + 1) % args.checkpoint_every == 0
+                    and i != args.steps - 1):
+                checkpoint.save(args.checkpoint, state, step=i + 1)
     if args.checkpoint:
-        checkpoint.save(args.checkpoint, state.params,
+        checkpoint.save(args.checkpoint, state,
                         step=int(jax.device_get(state.step)))
-        print(f"saved params to {args.checkpoint}")
+        print(f"saved DQState to {args.checkpoint}")
     return history
 
 

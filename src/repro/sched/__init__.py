@@ -1,0 +1,31 @@
+"""repro.sched — the execution-schedule runtime (DESIGN.md §5).
+
+Decouples "compute a step" from "exchange gradients":
+
+  schedule.py      : ExchangeSchedule — every_step | local_k | delayed.
+  participation.py : count-exact partial worker participation per round,
+                     with EF accumulation for the workers sitting out.
+  straggler.py     : seeded per-worker heterogeneity profiles.
+  clock.py         : simulated wall clock composing schedule dataflow,
+                     straggler compute times and comm.ledger wire bytes.
+
+`core.dqgan` implements the in-step dataflow for each schedule (state
+under `DQState.sched`); `launch.train` drives the host-side cadence and
+telemetry; `benchmarks.run --only sched` sweeps schedule × compressor ×
+workers under stragglers into experiments/sched.json.
+"""
+from .clock import LinkModel, simulate, speedup_vs_M, time_per_step  # noqa: F401
+from .participation import (  # noqa: F401
+    host_round_participants,
+    n_participants,
+    round_key,
+    round_mask,
+)
+from .schedule import SCHEDULES, ExchangeSchedule, get  # noqa: F401
+from .straggler import (  # noqa: F401
+    PROFILES,
+    StragglerProfile,
+    get_profile,
+    step_times,
+    worker_slowdowns,
+)

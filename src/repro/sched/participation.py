@@ -1,0 +1,59 @@
+"""Partial worker participation per exchange round (DESIGN.md §5.3).
+
+Each round, the server averages only a sampled subset of the M workers;
+the rest skip the collective entirely and fold their message into the
+error-feedback residual instead (so nothing is lost, it just arrives
+compressed later — the federated-averaging move, composed with EF).
+
+Sampling is *count-exact*: exactly `n = max(1, round(p·M))` participants
+per round, drawn as the first n entries of a seeded permutation. Every
+worker derives the identical permutation from the shared round key, so
+the mask is consistent across the mesh with no extra collective, and the
+rescale `q̂ ← q̂ · M/n` is a static constant.
+
+In-step semantics (implemented by `core.dqgan._exchange_tree`):
+
+    participant     : p̂ = Q(m + e1),  e1 ← m + e1 − p̂      (usual EF)
+    non-participant : p̂ = 0,          e1 ← e1 + m          (accumulate)
+    server          : q̂ = (M/n) · (1/M) Σ_m p̂^m = (1/n) Σ_participants p̂
+
+Every compressor in the registry maps the zero tensor to a zero payload
+(`Q(0) = 0` bitwise), which is what lets non-participants ride through
+the unmodified collectives as masked zeros.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PARTICIPATION_SALT = 0x5CED  # keeps the round key clear of other fold_ins
+
+
+def n_participants(participation: float, n_workers: int) -> int:
+    """Static per-round participant count for rate `participation`."""
+    if not 0.0 < participation <= 1.0:
+        raise ValueError(f"participation must be in (0, 1], got {participation}")
+    return max(1, int(round(participation * n_workers)))
+
+
+def round_key(key, round_idx):
+    """The shared (worker-independent) key for one exchange round. Must be
+    derived from the pre-worker-fold key so all workers agree."""
+    return jax.random.fold_in(jax.random.fold_in(key, PARTICIPATION_SALT),
+                              round_idx)
+
+
+def round_mask(key, round_idx, n_workers: int, n_part: int):
+    """(W,) float32 0/1 participation mask for one round — identical on
+    every worker. Traceable (round_idx may be a traced step count)."""
+    perm = jax.random.permutation(round_key(key, round_idx), n_workers)
+    return jnp.zeros((n_workers,), jnp.float32).at[perm[:n_part]].set(1.0)
+
+
+def host_round_participants(rng: np.random.RandomState, n_workers: int,
+                            n_part: int) -> np.ndarray:
+    """Host-side sampling for the wall-clock model (numpy, independent of
+    the jax draw — the clock only needs *a* count-exact sample, not the
+    same one the training step used). Returns sorted participant indices."""
+    return np.sort(rng.permutation(n_workers)[:n_part])

@@ -1,0 +1,88 @@
+"""Exchange schedules: WHEN the workers of Algorithm 2 talk (DESIGN.md §5).
+
+The seed repo ran one lockstep compressed exchange per step. That is one
+point in a schedule space that QODA (layer-wise quantized optimistic dual
+averaging) and delayed/overlapped extra-gradient methods show is as
+decisive for wall-clock time as the bits on the wire. `ExchangeSchedule`
+names the point; `core.dqgan` implements the per-step dataflow; this
+module holds the host-side arithmetic (which step exchanges, how many
+rounds a run has) used by the launcher, the ledger and the wall-clock
+model.
+
+Schedules
+---------
+every_step : exchange at every step — the seed semantics, the default.
+local_k    : exchange every K steps. Between rounds the per-worker message
+             (η·g, plus EF at compression time) accumulates into
+             `DQState.sched["accum"]`; params and server-side state only
+             move at round boundaries. `local_k=1` is bit-exact
+             `every_step` (the accumulator is 0 + message).
+delayed    : one-step-stale exchange. Step t compresses and averages the
+             message produced at step t-1 (`DQState.sched["pending"]`)
+             while step t's field evaluation proceeds — on hardware the
+             collective overlaps compute; in the wall-clock model the
+             step cost is max(compute, comm) instead of their sum. The
+             OMD extrapolation subtracts the worker's own pending
+             (not-yet-applied) message as the staleness correction.
+
+`is_exchange_step` takes the 0-based step index; with `local_k` the
+exchange fires on steps K-1, 2K-1, ... so every round closes with one.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+SCHEDULES = ("every_step", "local_k", "delayed")
+
+
+@dataclass(frozen=True)
+class ExchangeSchedule:
+    """A named point in (exchange cadence × staleness) space."""
+    name: str
+    local_k: int = 1
+
+    def __post_init__(self):
+        if self.name not in SCHEDULES:
+            raise ValueError(
+                f"unknown schedule {self.name!r}; choose from {SCHEDULES}")
+        if self.local_k < 1:
+            raise ValueError(f"local_k must be >= 1, got {self.local_k}")
+        if self.name != "local_k" and self.local_k != 1:
+            raise ValueError(
+                f"local_k={self.local_k} only meaningful with the "
+                f"'local_k' schedule, not {self.name!r}")
+
+    # ------------------------------------------------------------------ #
+    @property
+    def staleness(self) -> int:
+        """Steps between producing a message and applying its average."""
+        return 1 if self.name == "delayed" else 0
+
+    @property
+    def period(self) -> int:
+        """Steps per exchange round."""
+        return self.local_k if self.name == "local_k" else 1
+
+    def is_exchange_step(self, step: int) -> bool:
+        """Does 0-based step `step` run the collective?"""
+        return (step + 1) % self.period == 0
+
+    def round_index(self, step: int) -> int:
+        """Which exchange round 0-based step `step` belongs to."""
+        return step // self.period
+
+    def exchanges_in(self, steps: int) -> int:
+        """Number of collectives over `steps` training steps."""
+        return steps // self.period
+
+    def describe(self) -> str:
+        if self.name == "local_k":
+            return f"local_k(K={self.local_k})"
+        return self.name
+
+
+def get(name: str, local_k: int = 1) -> ExchangeSchedule:
+    """Resolve a schedule by name (+ K for 'local_k')."""
+    if name == "local_k":
+        return ExchangeSchedule("local_k", local_k)
+    return ExchangeSchedule(name)

@@ -1,0 +1,425 @@
+"""repro.sched: exchange schedules, straggler/participation simulation and
+the wall-clock model (DESIGN.md §5), plus their core.dqgan integration —
+local_k=1 must be bit-exact every_step, delayed must match the reference
+staleness recursion, on 1 device here and on 8 forced-host devices via
+the `multidevice` subprocess fixture."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import sched as S
+from repro.configs.base import DQConfig
+from repro.core.dqgan import DQGAN
+
+KEY = jax.random.key(0)
+
+A = jnp.array(np.linalg.qr(np.random.RandomState(3).randn(6, 6))[0],
+              jnp.float32)
+
+
+def bilinear_field(params, batch, rng):
+    del batch, rng
+    x, y = params["x"], params["y"]
+    return ({"x": A @ y, "y": -(A.T @ x)}, {"loss": x @ A @ y})
+
+
+BASE = DQConfig(optimizer="omd", compressor="qsgd8_linf", exchange="sim",
+                error_feedback=True, lr=0.05, worker_axes=())
+
+
+def _run(dq, steps, field=bilinear_field, ret_state=False):
+    tr = DQGAN(field_fn=field, dq=dq)
+    st = tr.init({"x": jnp.ones(6), "y": jnp.ones(6)})
+    step = jax.jit(tr.step, static_argnums=(3,))
+    sched = S.get(dq.schedule, dq.local_k)
+    for i in range(steps):
+        st = step(st, None, KEY, sched.is_exchange_step(i)).state
+    return jax.device_get(st if ret_state else st.params)
+
+
+# --------------------------------------------------------------------------- #
+# schedule arithmetic
+# --------------------------------------------------------------------------- #
+def test_schedule_helpers():
+    es = S.get("every_step")
+    assert es.period == 1 and es.staleness == 0
+    assert all(es.is_exchange_step(i) for i in range(5))
+    assert es.exchanges_in(7) == 7
+
+    lk = S.get("local_k", 3)
+    assert [lk.is_exchange_step(i) for i in range(7)] == [
+        False, False, True, False, False, True, False]
+    assert lk.exchanges_in(7) == 2
+    assert [lk.round_index(i) for i in range(7)] == [0, 0, 0, 1, 1, 1, 2]
+
+    dl = S.get("delayed")
+    assert dl.staleness == 1 and dl.period == 1
+
+    with pytest.raises(ValueError):
+        S.get("bogus")
+    with pytest.raises(ValueError):
+        S.get("local_k", 0)
+    with pytest.raises(ValueError):
+        S.ExchangeSchedule("delayed", local_k=4)
+
+
+# --------------------------------------------------------------------------- #
+# local_k
+# --------------------------------------------------------------------------- #
+def test_local_k1_is_bitexact_every_step():
+    """K=1 rounds ARE every_step — bit-for-bit, through jit, with a
+    stochastic compressor and EF in the loop."""
+    p0 = _run(BASE, steps=25)
+    p1 = _run(dataclasses.replace(BASE, schedule="local_k", local_k=1),
+              steps=25)
+    np.testing.assert_array_equal(p0["x"], p1["x"])
+    np.testing.assert_array_equal(p0["y"], p1["y"])
+
+
+def test_local_k_matches_accumulation_reference():
+    """K=3 with the identity compressor + exact exchange must follow the
+    hand-rolled recursion: messages accumulate locally, params move only
+    at round ends by the accumulated update."""
+    K, steps, eta = 3, 10, 0.05
+    dq = dataclasses.replace(BASE, compressor="identity", exchange="exact",
+                             schedule="local_k", local_k=K, lr=eta)
+    got = _run(dq, steps=steps)
+
+    w = {"x": np.ones(6, np.float32), "y": np.ones(6, np.float32)}
+    gp = {"x": np.zeros(6, np.float32), "y": np.zeros(6, np.float32)}
+    acc = {"x": np.zeros(6, np.float32), "y": np.zeros(6, np.float32)}
+    An = np.asarray(A)
+    for t in range(steps):
+        wh = {k: w[k] - eta * gp[k] for k in w}
+        g = {"x": An @ wh["y"], "y": -(An.T @ wh["x"])}
+        for k in w:
+            acc[k] += eta * g[k]
+        if (t + 1) % K == 0:
+            for k in w:
+                w[k] -= acc[k]
+                acc[k] = 0.0
+        gp = g
+    np.testing.assert_allclose(got["x"], w["x"], rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(got["y"], w["y"], rtol=1e-5, atol=1e-6)
+
+
+def test_local_k_moves_params_only_at_round_ends():
+    dq = dataclasses.replace(BASE, schedule="local_k", local_k=4)
+    tr = DQGAN(field_fn=bilinear_field, dq=dq)
+    st = tr.init({"x": jnp.ones(6), "y": jnp.ones(6)})
+    step = jax.jit(tr.step, static_argnums=(3,))
+    sched = S.get("local_k", 4)
+    for i in range(4):
+        prev = jax.device_get(st.params)
+        st = step(st, None, KEY, sched.is_exchange_step(i)).state
+        moved = not np.array_equal(jax.device_get(st.params)["x"], prev["x"])
+        assert moved == sched.is_exchange_step(i), i
+    # accumulator drained at the round end
+    acc = jax.device_get(st.sched["accum"])
+    assert all(np.all(a == 0) for a in jax.tree.leaves(acc))
+
+
+def test_local_k_requires_static_do_exchange():
+    dq = dataclasses.replace(BASE, schedule="local_k", local_k=2)
+    tr = DQGAN(field_fn=bilinear_field, dq=dq)
+    st = tr.init({"x": jnp.ones(6), "y": jnp.ones(6)})
+    with pytest.raises(TypeError):
+        jax.jit(tr.step)(st, None, KEY, jnp.array(True))
+
+
+# --------------------------------------------------------------------------- #
+# delayed
+# --------------------------------------------------------------------------- #
+def test_delayed_matches_reference_staleness_recursion():
+    """Identity compressor + exact exchange: the delayed schedule must
+    follow    w_half_t = w_{t-1} − P_t − η g_{t-1}
+              w_t      = w_{t-1} − P_t          (apply the stale message)
+              P_{t+1}  = η g_t                  (this step's message waits)
+    where P is the pending buffer and the −P_t term in the lookahead is
+    the staleness correction folded into the OMD extrapolation."""
+    steps, eta = 12, 0.05
+    dq = dataclasses.replace(BASE, compressor="identity", exchange="exact",
+                             schedule="delayed", lr=eta)
+    got = _run(dq, steps=steps)
+
+    w = {"x": np.ones(6, np.float32), "y": np.ones(6, np.float32)}
+    gp = {"x": np.zeros(6, np.float32), "y": np.zeros(6, np.float32)}
+    P = {"x": np.zeros(6, np.float32), "y": np.zeros(6, np.float32)}
+    An = np.asarray(A)
+    for t in range(steps):
+        wh = {k: w[k] - (eta * gp[k] + P[k]) for k in w}
+        g = {"x": An @ wh["y"], "y": -(An.T @ wh["x"])}
+        for k in w:
+            w[k] -= P[k]
+            P[k] = eta * g[k]
+        gp = g
+    np.testing.assert_allclose(got["x"], w["x"], rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(got["y"], w["y"], rtol=1e-5, atol=1e-6)
+
+
+def test_delayed_first_step_applies_nothing():
+    dq = dataclasses.replace(BASE, schedule="delayed")
+    tr = DQGAN(field_fn=bilinear_field, dq=dq)
+    st = tr.init({"x": jnp.ones(6), "y": jnp.ones(6)})
+    out = jax.jit(tr.step, static_argnums=(3,))(st, None, KEY, True)
+    np.testing.assert_array_equal(
+        jax.device_get(out.state.params)["x"], np.ones(6, np.float32))
+    pend = jax.device_get(out.state.sched["pending"])
+    assert any(np.any(p != 0) for p in jax.tree.leaves(pend))
+
+
+def test_delayed_still_converges_on_bilinear():
+    """One step of staleness must not break the OMD contraction (the
+    corrected lookahead keeps the extragradient structure)."""
+    dq = dataclasses.replace(BASE, compressor="identity", exchange="exact",
+                             schedule="delayed", lr=0.1,
+                             error_feedback=False)
+    p = _run(dq, steps=3000)
+    dist = float(np.linalg.norm(p["x"]) + np.linalg.norm(p["y"]))
+    assert dist < 0.05, dist
+
+
+# --------------------------------------------------------------------------- #
+# participation (host-side pieces; in-step semantics tested multidevice)
+# --------------------------------------------------------------------------- #
+def test_participation_counts_and_mask():
+    assert S.n_participants(1.0, 8) == 8
+    assert S.n_participants(0.5, 8) == 4
+    assert S.n_participants(0.01, 8) == 1
+    with pytest.raises(ValueError):
+        S.n_participants(0.0, 8)
+    with pytest.raises(ValueError):
+        S.n_participants(1.5, 8)
+
+    m0 = np.asarray(S.round_mask(KEY, 0, 8, 3))
+    assert m0.sum() == 3 and set(np.unique(m0)) <= {0.0, 1.0}
+    # deterministic per round, varies across rounds
+    np.testing.assert_array_equal(m0, np.asarray(S.round_mask(KEY, 0, 8, 3)))
+    masks = [tuple(np.asarray(S.round_mask(KEY, r, 8, 3))) for r in range(6)]
+    assert len(set(masks)) > 1
+
+
+# --------------------------------------------------------------------------- #
+# stragglers + wall clock
+# --------------------------------------------------------------------------- #
+def test_straggler_profiles_deterministic():
+    none = S.step_times(S.get_profile("none"), 8, 16, seed=0)
+    np.testing.assert_array_equal(none, np.ones((16, 8)))
+    a = S.step_times(S.get_profile("heavy"), 8, 16, seed=0)
+    b = S.step_times(S.get_profile("heavy"), 8, 16, seed=0)
+    np.testing.assert_array_equal(a, b)
+    c = S.step_times(S.get_profile("heavy"), 8, 16, seed=1)
+    assert not np.array_equal(a, c)
+    assert (a > 0).all()
+    with pytest.raises(ValueError):
+        S.get_profile("nope")
+
+
+def test_clock_schedule_ordering_under_stragglers():
+    """The acceptance-criterion inequality: local_k and delayed beat
+    every_step per step once comm costs anything, and stragglers widen
+    the local_k gap (max-of-sums < sum-of-maxes)."""
+    prof = S.get_profile("mild")
+    for M in (4, 8, 16):
+        times = S.step_times(prof, M, 64, seed=0, base=1e-3)
+        t_ex = 2e-3
+        every = S.simulate(S.get("every_step"), times, t_ex)
+        local = S.simulate(S.get("local_k", 4), times, t_ex)
+        delay = S.simulate(S.get("delayed"), times, t_ex)
+        assert local["mean_step_s"] < every["mean_step_s"], M
+        assert delay["mean_step_s"] < every["mean_step_s"], M
+        assert every["n_exchanges"] == 64 and local["n_exchanges"] == 16
+
+
+def test_clock_delayed_hides_comm_under_compute():
+    times = np.ones((32, 8)) * 1e-3
+    # comm far cheaper than compute: delayed pays (almost) compute only
+    out = S.simulate(S.get("delayed"), times, 1e-5)
+    assert out["mean_step_s"] == pytest.approx(1e-3, rel=0.05)
+    # comm dominating: delayed pays (almost) comm only, every_step both
+    slow = S.simulate(S.get("delayed"), times, 1e-1)
+    every = S.simulate(S.get("every_step"), times, 1e-1)
+    assert slow["mean_step_s"] == pytest.approx(1e-1, rel=0.05)
+    assert every["mean_step_s"] == pytest.approx(1e-1 + 1e-3, rel=0.01)
+
+
+def test_clock_participation_gates_barrier_on_fewer_workers():
+    prof = S.get_profile("heavy")
+    times = S.step_times(prof, 8, 64, seed=3, base=1e-3)
+    full = S.simulate(S.get("every_step"), times, 1e-3, participation=1.0)
+    half = S.simulate(S.get("every_step"), times, 1e-3, participation=0.5)
+    assert half["mean_step_s"] < full["mean_step_s"]
+
+
+def test_speedup_vs_M_monotone_compute_term():
+    prof = S.get_profile("none")
+    rows = S.speedup_vs_M(S.get("delayed"), prof, (1, 2, 4, 8), steps=32,
+                          t_compute_single=1e-2,
+                          bytes_fn=lambda M: 1e5)
+    sp = [r["speedup"] for r in rows]
+    assert sp[0] == pytest.approx(1.0)
+    assert sp[-1] > sp[0]
+
+
+# --------------------------------------------------------------------------- #
+# ledger schedule columns
+# --------------------------------------------------------------------------- #
+def test_ledger_counts_rounds_not_steps():
+    from repro.comm import CommLedger
+    from repro.core import compressors as C
+
+    led = CommLedger()
+    led.register("t", "sim", C.get("qsgd8_linf"), (64, 64), 8)
+    per = led.wire_bytes_per_step
+    sched = S.get("local_k", 4)
+    for i in range(8):
+        led.tick(exchanged=sched.is_exchange_step(i), wall_s=0.5)
+    assert led.steps == 8 and led.rounds == 2
+    assert led.cumulative_wire_bytes == pytest.approx(2 * per)
+    assert led.sim_clock_s == pytest.approx(4.0)
+    s = led.summary()
+    assert s["rounds"] == 2 and s["sim_clock_s"] == pytest.approx(4.0)
+
+
+# --------------------------------------------------------------------------- #
+# multidevice: 8 forced-host workers, shard_map + vmap SPMD paths
+# --------------------------------------------------------------------------- #
+SCHED_EQUIV_SCRIPT = r"""
+import dataclasses
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P
+from repro.parallel.compat import make_mesh, set_mesh
+from repro.configs.base import DQConfig
+from repro.core.dqgan import DQGAN
+from repro import sched as S
+
+A = jnp.array(np.random.RandomState(0).randn(4,4), jnp.float32)
+def field(params, batch, rng):
+    x, y = params["x"], params["y"]
+    s = 1.0 + jnp.mean(batch)           # worker-dependent data
+    return {"x": s * (A @ y), "y": -s * (A.T @ x)}, {"loss": x @ A @ y}
+
+mesh = make_mesh((8,), ("data",))
+params = {"x": jnp.ones(4), "y": jnp.ones(4)}
+pspecs = {"x": P(), "y": P()}
+batch = jnp.arange(8, dtype=jnp.float32).reshape(8, 1) / 8.0
+
+def run(dq, steps=16):
+    tr = DQGAN(field_fn=field, dq=dq, mesh=mesh, param_specs=pspecs,
+               batch_spec=P(("data",)))
+    sched = S.get(dq.schedule, dq.local_k)
+    with set_mesh(mesh):
+        st = tr.init(params)
+        step = jax.jit(tr.step, static_argnums=(3,))
+        for i in range(steps):
+            st = step(st, batch, jax.random.key(7),
+                      sched.is_exchange_step(i)).state
+        return jax.device_get(st.params)
+
+base = DQConfig(optimizer="omd", compressor="qsgd8_linf", exchange="sim",
+                lr=0.05, worker_axes=("data",))
+for spmd in ("shard_map", "vmap"):
+    b = dataclasses.replace(base, spmd=spmd)
+    p0 = run(b)
+    p1 = run(dataclasses.replace(b, schedule="local_k", local_k=1))
+    np.testing.assert_array_equal(p0["x"], p1["x"])
+    np.testing.assert_array_equal(p0["y"], p1["y"])
+
+# delayed, exact+identity, against the M-worker reference recursion
+dq = dataclasses.replace(base, compressor="identity", exchange="exact",
+                         schedule="delayed", error_feedback=False)
+got = run(dq, steps=10)
+
+An = np.asarray(A); eta = 0.05; M = 8
+scales = 1.0 + np.arange(M) / 8.0   # mean of each worker's batch slice
+w = {k: np.ones(4, np.float32) for k in "xy"}
+gp = [{k: np.zeros(4, np.float32) for k in "xy"} for _ in range(M)]
+Pd = [{k: np.zeros(4, np.float32) for k in "xy"} for _ in range(M)]
+for t in range(10):
+    gs = []
+    for m in range(M):
+        wh = {k: w[k] - (eta * gp[m][k] + Pd[m][k]) for k in w}
+        gs.append({"x": scales[m] * (An @ wh["y"]),
+                   "y": -scales[m] * (An.T @ wh["x"])})
+    qh = {k: np.mean([Pd[m][k] for m in range(M)], axis=0) for k in w}
+    for k in w:
+        w[k] = w[k] - qh[k]
+    for m in range(M):
+        Pd[m] = {k: eta * gs[m][k] for k in w}
+        gp[m] = gs[m]
+np.testing.assert_allclose(got["x"], w["x"], rtol=1e-4, atol=1e-5)
+np.testing.assert_allclose(got["y"], w["y"], rtol=1e-4, atol=1e-5)
+print("OK")
+"""
+
+
+@pytest.mark.multidevice
+def test_sched_equivalences_8dev(multidevice):
+    out = multidevice(SCHED_EQUIV_SCRIPT)
+    assert "OK" in out
+
+
+PARTICIPATION_SCRIPT = r"""
+import dataclasses
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P
+from repro.parallel.compat import make_mesh, set_mesh
+from repro.configs.base import DQConfig
+from repro.core.dqgan import DQGAN
+from repro import sched as S
+
+A = jnp.array(np.random.RandomState(0).randn(4,4), jnp.float32)
+def field(params, batch, rng):
+    x, y = params["x"], params["y"]
+    s = 1.0 + jnp.mean(batch)
+    return {"x": s * (A @ y), "y": -s * (A.T @ x)}, {"loss": x @ A @ y}
+
+mesh = make_mesh((8,), ("data",))
+params = {"x": jnp.ones(4), "y": jnp.ones(4)}
+batch = jnp.arange(8, dtype=jnp.float32).reshape(8, 1) / 8.0
+key = jax.random.key(7)
+M, eta = 8, 0.05
+
+dq = DQConfig(optimizer="omd", compressor="identity", exchange="exact",
+              error_feedback=True, lr=eta, worker_axes=("data",),
+              participation=0.5)
+tr = DQGAN(field_fn=field, dq=dq, mesh=mesh,
+           param_specs={"x": P(), "y": P()}, batch_spec=P(("data",)))
+with set_mesh(mesh):
+    st = tr.init(params)
+    out = jax.jit(tr.step, static_argnums=(3,))(st, batch, key, True)
+st1 = jax.device_get(out.state)
+
+# reference: q_hat = mean over the round's participants only; the workers
+# sitting out keep their message in the EF residual.
+mask = np.asarray(S.round_mask(key, 0, M, S.n_participants(0.5, M)))
+assert mask.sum() == 4
+An = np.asarray(A)
+scales = 1.0 + np.arange(M) / 8.0
+gs = [{"x": scales[m] * (An @ np.ones(4, np.float32)),
+       "y": -scales[m] * (An.T @ np.ones(4, np.float32))} for m in range(M)]
+part = [m for m in range(M) if mask[m] == 1.0]
+qh = {k: np.mean([eta * gs[m][k] for m in part], axis=0) for k in "xy"}
+np.testing.assert_allclose(st1.params["x"], 1.0 - qh["x"], rtol=1e-5,
+                           atol=1e-6)
+np.testing.assert_allclose(st1.params["y"], 1.0 - qh["y"], rtol=1e-5,
+                           atol=1e-6)
+
+# EF: participants untouched (identity => zero residual), absentees carry
+# their unsent message eta*g
+for m in range(M):
+    for k in "xy":
+        e1 = np.asarray(st1.ef[k]["e1"])[m]
+        want = np.zeros(4) if mask[m] == 1.0 else eta * gs[m][k]
+        np.testing.assert_allclose(e1, want, rtol=1e-5, atol=1e-6)
+print("OK")
+"""
+
+
+@pytest.mark.multidevice
+def test_participation_semantics_8dev(multidevice):
+    out = multidevice(PARTICIPATION_SCRIPT)
+    assert "OK" in out
