@@ -34,7 +34,8 @@ METHOD_LR = {"CPOAdam": 1e-3, "CPOAdam-GQ": 1e-3, "DQGAN": 3e-3,
              "DQGAN-noEF": 3e-3}
 
 
-def make_trainer(method: str, cfg: GANConfig, lr: float):
+def make_trainer(method: str, cfg: GANConfig, lr: float,
+                 dq_overrides: dict | None = None):
     opt, comp, ef, msg = METHODS[method]
     # Adam preconditioning normalizes the field-level critic boost away;
     # restore the n_critic=5 ratio post-preconditioning (TTUR).
@@ -42,6 +43,9 @@ def make_trainer(method: str, cfg: GANConfig, lr: float):
     dq = DQConfig(optimizer=opt, compressor=comp, error_feedback=ef,
                   message=msg, exchange="sim", lr=lr, worker_axes=(),
                   lr_mults=mults)
+    if dq_overrides:
+        import dataclasses
+        dq = dataclasses.replace(dq, **dq_overrides)
     return DQGAN(field_fn=gan_field_fn(cfg), dq=dq)
 
 
@@ -79,21 +83,26 @@ def eval_mixture_gan(params, cfg, sample_real, centers, key, n=2000):
 
 
 def train_mixture_gan(method: str, steps=1500, batch=256, lr=None, seed=0,
-                      eval_every=0):
+                      eval_every=0, dq_overrides: dict | None = None):
+    """Train the 2-D mixture GAN; `dq_overrides` patches the DQConfig
+    (e.g. {"schedule": "delayed", "staleness_tau": 4} for the
+    convergence-vs-staleness frontier of `benchmarks.run --only sched`)."""
     lr = METHOD_LR.get(method, 1e-3) if lr is None else lr
     cfg = GANConfig(name="mix", image_size=0, data_dim=2, latent_dim=16,
                     hidden=128, weight_clip=0.1)
     sample_real, centers = gaussian_mixture_sampler(n_modes=8)
     key = jax.random.key(seed)
     params = mlp_gan_init(key, cfg)
-    tr = make_trainer(method, cfg, lr)
+    tr = make_trainer(method, cfg, lr, dq_overrides)
     st = tr.init(params)
-    step = jax.jit(tr.step, donate_argnums=0)
+    step = jax.jit(tr.step, static_argnums=(3,), donate_argnums=0)
+    from repro import sched as S
+    sched = S.get(tr.dq.schedule, tr.dq.local_k, tr.dq.staleness_tau)
     curve = []
     for i in range(steps):
         k = jax.random.fold_in(key, i)
         batch_data = {"real": sample_real(k, batch)}
-        out = step(st, batch_data, k)
+        out = step(st, batch_data, k, sched.is_exchange_step(i))
         st = out.state
         st = st._replace(params=clip_disc(st.params, cfg))
         if eval_every and (i + 1) % eval_every == 0:

@@ -15,13 +15,22 @@ Sections:
                 per-tensor planner vs bucketed, on dcgan32 + gemma-2b smoke
   sched       : repro.sched — speedup-vs-M per exchange schedule
                 (every_step / local_k / delayed) × compressor (f32 / 8-bit)
-                under a straggler profile (experiments/sched.json)
+                under a straggler profile, plus the bounded-staleness
+                τ∈{1,2,4,8} convergence-vs-staleness-vs-wall-clock
+                frontier on the mixture benchmark (experiments/sched.json)
+
+Regression gate (CI): ``--check-against experiments/baselines/sched_quick.json``
+re-runs the sched wall-clock model with the baseline's recorded compute
+time and parameter count (so the model is fully deterministic across
+hosts) and fails the run when any (schedule, compressor, M) row or any
+τ-frontier row regresses >10% in modeled seconds/step or wire bytes.
 """
 from __future__ import annotations
 
 import argparse
 import json
 import os
+import sys
 import time
 
 import jax
@@ -124,7 +133,8 @@ def bench_speedup(quick: bool):
 
     # -- schedule-aware wall-clock model (homogeneous workers) -------------- #
     profile = S.get_profile("none")
-    steps = 64 if quick else 256
+    steps = SCHED_MODEL_STEPS[quick]
+    base = S.baseline_mean_step(profile, steps, t_compute)
     rows = []
     for sname, sch in (("every_step", S.get("every_step")),
                        ("local_k", S.get("local_k", 4)),
@@ -133,7 +143,7 @@ def bench_speedup(quick: bool):
         for cname, bfn in wire.items():
             per[cname] = {r["M"]: r for r in S.speedup_vs_M(
                 sch, profile, Ms, steps, t_compute,
-                lambda M, b=bfn: b(max(M, 2)))}
+                lambda M, b=bfn: b(max(M, 2)), base=base)}
         for M in Ms:
             rows.append({"M": M, "schedule": sname,
                          "speedup_f32": round(per["f32"][M]["speedup"], 2),
@@ -155,28 +165,56 @@ def bench_speedup(quick: bool):
 
 
 # --------------------------------------------------------------------------- #
-def bench_sched(quick: bool):
+# simulated steps per tier — the gate refuses cross-tier comparisons (wire
+# bytes scale with steps), so this mapping is shared with main()'s check
+SCHED_MODEL_STEPS = {True: 64, False: 256}
+
+
+def bench_sched(quick: bool, model_inputs=None, convergence: bool = True,
+                out_path: str = "experiments/sched.json"):
     """repro.sched: simulated speedup-vs-M per exchange schedule ×
-    compressor under the 'mild' straggler profile. The acceptance
-    inequality — local_k and delayed strictly cheaper per step than
-    every_step once M ≥ 4 — is asserted, not just reported."""
+    compressor under the 'mild' straggler profile, plus the bounded-
+    staleness τ∈{1,2,4,8} frontier — server-dataflow wall clock AND real
+    mixture-GAN convergence under delayed(τ). The acceptance
+    inequalities — local_k and delayed strictly cheaper per step than
+    every_step once M ≥ 4, cumulative wire bytes monotone over the τ
+    sweep — are asserted, not just reported.
+
+    ``model_inputs`` = (t_compute_seconds, d) overrides the measured
+    DCGAN field time, making every wall-clock number deterministic —
+    the ``--check-against`` regression gate passes the baseline's
+    recorded values here so CI hosts of different speeds compare equal
+    models. ``convergence=False`` skips the frontier's mixture-GAN
+    training (gate mode: convergence metrics are never gated, so the
+    CI run keeps only the deterministic model)."""
+    from benchmarks.gan_common import train_mixture_gan
+
     from repro import sched as S
 
-    t_compute, d = _dcgan_compute_time(quick)
+    t_compute, d = model_inputs or _dcgan_compute_time(quick)
     wire = _wire_models(d)
     profile = S.get_profile("mild")
     K = 4
-    steps = 64 if quick else 256
+    steps = SCHED_MODEL_STEPS[quick]
     Ms = (1, 2, 4, 8, 16, 32)
     schedules = (("every_step", S.get("every_step")),
                  ("local_k", S.get("local_k", K)),
                  ("delayed", S.get("delayed")))
+    # The M=1 baseline is schedule- and compressor-independent (no comm):
+    # simulate it ONCE here; speedup_vs_M reuses it both as the reference
+    # and as the Ms[0] row (the quick tier previously simulated it twice
+    # per schedule × compressor sweep).
+    base = S.baseline_mean_step(profile, steps, t_compute)
     rows = []
     for sname, sch in schedules:
         for cname, bfn in wire.items():
             for r in S.speedup_vs_M(sch, profile, Ms, steps, t_compute,
-                                    lambda M, b=bfn: b(max(M, 2))):
-                r.update({"schedule": sname, "compressor": cname})
+                                    lambda M, b=bfn: b(max(M, 2)),
+                                    base=base):
+                wire_mb = (bfn(max(r["M"], 2)) * r["n_exchanges"] / 1e6
+                           if r["M"] > 1 else 0.0)
+                r.update({"schedule": sname, "compressor": cname,
+                          "wire_mb": round(wire_mb, 3)})
                 rows.append(r)
                 row(f"sched/{sname}/{cname}/M={r['M']}",
                     r["mean_step_s"] * 1e6,
@@ -194,13 +232,69 @@ def bench_sched(quick: bool):
             assert mean_step("local_k", c, M) < mean_step("every_step", c, M)
             assert mean_step("delayed", c, M) < mean_step("every_step", c, M)
 
-    with open("experiments/sched.json", "w") as f:
-        json.dump({"d": d, "t_compute_us": t_compute * 1e6,
-                   "profile": profile.name, "local_k": K, "steps": steps,
-                   "link": {"bandwidth_Bps": S.LinkModel().bandwidth_Bps,
-                            "latency_s": S.LinkModel().latency_s},
-                   "rows": rows}, f, indent=1)
-    return rows
+    # ---- bounded-staleness frontier: τ vs wall clock vs convergence ------- #
+    taus = (1, 2, 4, 8)
+    M_f = 8
+    conv_steps = 300 if quick else 1500
+    frontier = []
+    cum_wire_mb = 0.0
+    for tau in taus:
+        sim = S.time_per_step(S.get("delayed", tau=tau), profile, M_f, steps,
+                              t_compute, wire["8bit"](M_f),
+                              dataflow="server")
+        wire_mb = wire["8bit"](M_f) * sim["n_exchanges"] / 1e6
+        cum_wire_mb += wire_mb
+        f_row = {
+            # clock_M labels the wall-clock/wire MODEL only; the
+            # convergence run below is single-worker (sim-compressed, the
+            # staleness effect isolated from worker averaging)
+            "tau": tau, "clock_M": M_f,
+            "mean_step_s": sim["mean_step_s"],
+            "total_s": sim["total_s"],
+            "n_exchanges": sim["n_exchanges"],
+            "staleness_max": sim["staleness_max"],
+            "staleness_mean": round(sim["staleness_mean"], 3),
+            "wire_mb": round(wire_mb, 3),
+            "cum_wire_mb": round(cum_wire_mb, 3),
+        }
+        derived = f"stale_max={sim['staleness_max']:.0f}"
+        if convergence:
+            final, _, _ = train_mixture_gan(
+                "DQGAN", steps=conv_steps,
+                dq_overrides={"schedule": "delayed", "staleness_tau": tau})
+            f_row.update({"conv_steps": conv_steps, "conv_workers": 1,
+                          "modes": final["modes"],
+                          "hq_frac": final["hq_frac"], "fid": final["fid"]})
+            derived += (f" modes={final['modes']}/8 hq={final['hq_frac']} "
+                        f"fid={final['fid']}")
+        frontier.append(f_row)
+        row(f"sched/tau_frontier/tau={tau}", sim["mean_step_s"] * 1e6,
+            derived)
+    # wire accounting is monotone: staleness changes WHEN bytes move, not
+    # how many — every τ point must report the same per-run bytes (this
+    # catches n_exchanges drift in the server model), the cumulative
+    # ledger must agree with the per-row sum, and more slack must not
+    # slow the modeled clock.
+    for a, b in zip(frontier, frontier[1:]):
+        assert b["wire_mb"] == a["wire_mb"], (a, b)
+        assert b["cum_wire_mb"] > a["cum_wire_mb"], (a, b)
+        assert b["total_s"] <= a["total_s"] * (1 + 1e-9), \
+            "more staleness slack must not slow the modeled clock"
+    total_mb = sum(f_row["wire_mb"] for f_row in frontier)
+    assert abs(frontier[-1]["cum_wire_mb"] - total_mb) < 0.01, \
+        (frontier[-1]["cum_wire_mb"], total_mb)
+    for f_row in frontier:
+        assert f_row["staleness_max"] <= f_row["tau"], f_row
+
+    out = {"d": d, "t_compute_us": t_compute * 1e6,
+           "profile": profile.name, "local_k": K, "steps": steps,
+           "link": {"bandwidth_Bps": S.LinkModel().bandwidth_Bps,
+                    "latency_s": S.LinkModel().latency_s},
+           "rows": rows,
+           "tau_frontier": frontier}
+    with open(out_path, "w") as f:
+        json.dump(out, f, indent=1)
+    return out
 
 
 # --------------------------------------------------------------------------- #
@@ -309,6 +403,43 @@ def bench_comm(quick: bool, sim_steps: int = 0):
 
 
 # --------------------------------------------------------------------------- #
+# benchmark-regression gate (CI)
+# --------------------------------------------------------------------------- #
+_GATED_FIELDS = ("mean_step_s", "wire_mb")   # wall-clock model + wire bytes
+
+
+def check_sched_regression(current: dict, baseline: dict,
+                           tol: float = 0.10) -> list:
+    """Compare a bench_sched result dict against a committed baseline.
+    Returns a list of human-readable failures: any row present in both
+    whose modeled seconds/step or wire bytes grew by more than `tol`
+    (improvements and new rows pass; convergence metrics are not gated —
+    they are host-independent but jax-version sensitive)."""
+    fails = []
+
+    def gate(cur_rows, base_rows, key_fields, label):
+        base_by_key = {tuple(r[k] for k in key_fields): r for r in base_rows}
+        for r in cur_rows:
+            b = base_by_key.get(tuple(r[k] for k in key_fields))
+            if b is None:
+                continue
+            for f in _GATED_FIELDS:
+                if f not in r or not b.get(f):
+                    continue
+                if r[f] > b[f] * (1 + tol):
+                    fails.append(
+                        f"{label}[{', '.join(f'{k}={r[k]}' for k in key_fields)}] "
+                        f"{f}: {r[f]:.6g} vs baseline {b[f]:.6g} "
+                        f"(+{(r[f] / b[f] - 1) * 100:.1f}% > {tol * 100:.0f}%)")
+
+    gate(current.get("rows", []), baseline.get("rows", []),
+         ("schedule", "compressor", "M"), "sched")
+    gate(current.get("tau_frontier", []), baseline.get("tau_frontier", []),
+         ("tau",), "tau_frontier")
+    return fails
+
+
+# --------------------------------------------------------------------------- #
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
@@ -316,8 +447,14 @@ def main(argv=None):
     ap.add_argument("--only", default="",
                     help="comma list: convergence,speedup,compression,"
                          "kernels,comm,sched")
+    ap.add_argument("--check-against", default="",
+                    help="baseline JSON (a committed experiments/sched.json) "
+                         "to gate the sched section against: >10% regression "
+                         "in modeled step time or wire bytes fails the run")
     args = ap.parse_args(argv)
     only = set(args.only.split(",")) if args.only else None
+    if args.check_against and (only is None or "sched" not in only):
+        ap.error("--check-against gates the sched section; add --only sched")
     print("name,us_per_call,derived")
     os.makedirs("experiments", exist_ok=True)
     if not only or "compression" in only:
@@ -327,7 +464,40 @@ def main(argv=None):
     if not only or "kernels" in only:
         bench_kernels(args.quick)
     if not only or "sched" in only:
-        bench_sched(args.quick)
+        model_inputs = None
+        baseline = None
+        if args.check_against:
+            with open(args.check_against) as f:
+                baseline = json.load(f)
+            # replay the model on the baseline's machine constants so the
+            # comparison is model-vs-model, not runner-vs-runner
+            model_inputs = (baseline["t_compute_us"] / 1e6, baseline["d"])
+            print(f"# sched: gating against {args.check_against} "
+                  f"(t_compute={baseline['t_compute_us']:.0f}us "
+                  f"d={baseline['d']})", flush=True)
+            if SCHED_MODEL_STEPS[args.quick] != baseline.get("steps"):
+                print(f"ERROR: tier mismatch — this run would simulate "
+                      f"steps={SCHED_MODEL_STEPS[args.quick]} but the "
+                      f"baseline was generated with "
+                      f"steps={baseline.get('steps')}; run the gate with "
+                      f"the baseline's tier (--quick for sched_quick.json)"
+                      f", or regenerate the baseline", flush=True)
+                sys.exit(2)
+        current = bench_sched(
+            args.quick, model_inputs=model_inputs,
+            convergence=baseline is None,
+            # keep the gate's replayed-constants output apart from a real
+            # benchmark result (it would otherwise clobber a full-tier
+            # experiments/sched.json generated on this machine)
+            out_path=("experiments/sched_gate.json" if baseline is not None
+                      else "experiments/sched.json"))
+        if baseline is not None:
+            fails = check_sched_regression(current, baseline)
+            for f_msg in fails:
+                print(f"REGRESSION: {f_msg}", flush=True)
+            if fails:
+                sys.exit(1)
+            print("# sched: regression gate passed", flush=True)
     if not only or "speedup" in only:
         bench_speedup(args.quick)
     if not only or "convergence" in only:

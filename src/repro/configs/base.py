@@ -276,13 +276,18 @@ class DQConfig:
     comm_plan: str = "none"
     bucket_mb: float = 4.0           # f32 MiB per bucket before closing it
     comm_budget_mb: float = 0.0      # delta_budget: payload MiB/step target
-    # ---- repro.sched: execution schedule (DESIGN.md §5) ------------------ #
+    # ---- repro.sched: execution schedule (DESIGN.md §5, §8) -------------- #
     # "every_step" (seed semantics) | "local_k" (exchange every K steps,
-    # message accumulates in DQState.sched["accum"]) | "delayed" (one-step
-    # stale exchange overlapping compute; pending message in
+    # message accumulates in DQState.sched["accum"]) | "delayed" (bounded-
+    # staleness exchange overlapping compute; pending message(s) in
     # DQState.sched["pending"], staleness correction in the OMD lookahead).
     schedule: str = "every_step"
     local_k: int = 1                 # K for schedule="local_k"
+    # pipeline depth τ for schedule="delayed": the message exchanged at
+    # step t was produced at step t−τ. τ=1 keeps PR 2's single-slot
+    # layout bit-exactly; τ>1 carries a (τ, ...) ring buffer plus the
+    # per-worker version vector DQState.sched["versions"] (DESIGN.md §8).
+    staleness_tau: int = 1
     # fraction of workers sampled per exchange round (count-exact); the
     # workers sitting out fold their message into the EF residual.
     participation: float = 1.0

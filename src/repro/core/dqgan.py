@@ -54,9 +54,15 @@ class DQState(NamedTuple):
     ef: Any              # per-worker exchange EF state dicts | None
     m: Any               # Adam first moment | None
     v: Any               # Adam second moment | None
-    # repro.sched per-worker buffers (DESIGN.md §5) | None for every_step:
-    #   {"accum": tree}   local_k  — message accumulated since last round
-    #   {"pending": tree} delayed  — message awaiting next step's exchange
+    # repro.sched per-worker buffers (DESIGN.md §5, §8) | None for every_step:
+    #   {"accum": tree}   local_k — message accumulated since last round
+    #   {"pending": tree, "versions": (W,) int32}   delayed(τ) —
+    #       pending: the in-flight message(s) awaiting exchange. τ=1 keeps
+    #       PR 2's single-slot layout (leaf (W, *shape)); τ>1 is a ring
+    #       buffer (leaf (W, τ, *shape), index 0 = oldest = next on the
+    #       wire). versions: per-worker step index of the last message
+    #       this worker had applied at the server (the parameter-server
+    #       push/pull version vector; staleness at step t = t − version).
     sched: Any = None
 
 
@@ -194,16 +200,32 @@ class DQGAN:
     # ------------------------------------------------------------------ #
     def init(self, params) -> DQState:
         """Concrete zero state (small-scale runs/tests)."""
-        return jax.tree.map(
+        st = jax.tree.map(
             lambda s: jnp.zeros(s.shape, s.dtype) if hasattr(s, "shape") else s,
             self.init_abstract(params),
             is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct),
         )._replace(params=params, step=jnp.zeros((), jnp.int32))
+        if self.dq.schedule == "delayed":
+            # nothing applied yet: version −τ makes the staleness metric
+            # (step − version) read exactly τ from the first exchange on
+            st = st._replace(sched={
+                **st.sched,
+                "versions": jnp.full((max(self.n_workers, 1),),
+                                     -self.dq.staleness_tau, jnp.int32),
+            })
+        return st
 
     def init_abstract(self, params) -> DQState:
         """ShapeDtypeStruct state with correct shardings (dry-run path)."""
         W = self.n_workers
         dq = self.dq
+        if dq.staleness_tau < 1:
+            raise ValueError(
+                f"staleness_tau must be >= 1, got {dq.staleness_tau}")
+        if dq.staleness_tau != 1 and dq.schedule != "delayed":
+            raise ValueError(
+                f"staleness_tau={dq.staleness_tau} only meaningful with "
+                f"schedule='delayed', not {dq.schedule!r}")
         plans = self._plans(params)
         ef_dtype = jnp.dtype(dq.ef_dtype)
 
@@ -282,8 +304,21 @@ class DQGAN:
             sched = {"accum": jax.tree.map(
                 lambda x: per_worker_like(x, jnp.float32), params)}
         elif dq.schedule == "delayed":
-            sched = {"pending": jax.tree.map(
-                lambda x: per_worker_like(x, jnp.float32), params)}
+            tau = dq.staleness_tau
+
+            def ring_like(x):
+                # (W, τ, *shape): τ in-flight messages per worker, oldest
+                # first. τ=1 keeps PR 2's (W, *shape) single-slot layout
+                # (and its compiled graph) bit-exactly.
+                if tau == 1:
+                    return per_worker_like(x, jnp.float32)
+                return sds((W, tau) + tuple(x.shape), jnp.float32,
+                           P(dq.worker_axes, None, *pspec(x)))
+
+            sched = {
+                "pending": jax.tree.map(ring_like, params),
+                "versions": sds((W,), jnp.int32, P(dq.worker_axes)),
+            }
 
         return DQState(
             step=jax.ShapeDtypeStruct((), jnp.int32),
@@ -378,7 +413,8 @@ class DQGAN:
 
         out_specs = StepOutput(
             state=state_specs,
-            metrics={"loss": rep, "grad_norm": rep, "error_norm": rep},
+            metrics={"loss": rep, "grad_norm": rep, "error_norm": rep,
+                     "staleness_max": rep, "staleness_mean": rep},
         )
         from repro.parallel.compat import key_across_boundary, shard_map
 
@@ -423,6 +459,7 @@ class DQGAN:
         comp = self.compressor
         eta = dq.lr
         schedule = dq.schedule
+        tau = dq.staleness_tau
 
         batch_w = jax.tree.map(
             lambda x: x.reshape((W, x.shape[0] // W) + x.shape[1:]), batch
@@ -437,8 +474,12 @@ class DQGAN:
         def worker(prev_g, ef, sw, b, i, mask):
             kw = jax.random.fold_in(jax.random.fold_in(key, i), state.step)
             kf, kq = jax.random.split(kw)
-            pending = sw["pending"] if schedule == "delayed" else None
-            stale = self._staleness_correction(pending)
+            pending_buf = sw["pending"] if schedule == "delayed" else None
+            pending = None
+            if pending_buf is not None:
+                pending = (pending_buf if tau == 1
+                           else jax.tree.map(lambda r: r[0], pending_buf))
+            stale = self._staleness_correction(pending_buf)
             if dq.optimizer == "omd" and dq.extrapolation == "local":
                 def extrap(w, g_prev, e, s):
                     upd = eta * g_prev
@@ -487,9 +528,10 @@ class DQGAN:
                     new_sw = {"accum": (_tree_zeros(accum) if do_exchange
                                         else accum)}
             elif schedule == "delayed":
-                exch = pending
-                new_sw = {"pending": jax.tree.map(
-                    lambda p, m: m.astype(p.dtype), pending, msg)}
+                exch = pending  # ring head: the step-(t−τ) message
+                new_sw = {"pending": self._shift_pending(pending_buf, msg),
+                          "versions": self._advance_version(
+                              sw["versions"], state.step, mask)}
 
             phat = enew = None
             if exch is not None:
@@ -554,9 +596,17 @@ class DQGAN:
             sched=new_sched)
         gn = _global_norm(grads_w)
         en = _global_norm(new_ef) if new_ef is not None else jnp.zeros(())
+        if schedule == "delayed":
+            st_now = (state.step
+                      - new_sched["versions"]).astype(jnp.float32)
+            st_max, st_mean = jnp.max(st_now), jnp.mean(st_now)
+        else:
+            st_max = st_mean = jnp.zeros(())
         return StepOutput(state=new_state,
                           metrics={"loss": jnp.mean(loss_w),
-                                   "grad_norm": gn, "error_norm": en})
+                                   "grad_norm": gn, "error_norm": en,
+                                   "staleness_max": st_max,
+                                   "staleness_mean": st_mean})
 
     # ------------------------------------------------------------------ #
     def _worker_body(self, state, batch, key, widx_arr, plans, axes, squeeze,
@@ -595,16 +645,23 @@ class DQGAN:
         prev_grad = takew(state.prev_grad)
         ef = takew(state.ef)
         sched_st = takew(state.sched)
-        pending = sched_st["pending"] if schedule == "delayed" else None
+        tau = dq.staleness_tau
+        pending = None          # the message on the wire THIS step
+        pending_buf = None      # the raw schedule buffer (ring for τ>1)
+        if schedule == "delayed":
+            pending_buf = sched_st["pending"]
+            pending = (pending_buf if tau == 1
+                       else jax.tree.map(lambda r: r[0], pending_buf))
         part = None
         if part_setup is not None and widx is not None:
             part = (part_setup[0][widx], part_setup[1])
 
         # ---------- extrapolation to w_{t-1/2} ---------------------------- #
-        # delayed schedule: w_{t-1} is one applied update stale, so the OMD
-        # lookahead additionally subtracts the worker's own pending
-        # (in-flight) message as the staleness-correction proxy for q̂.
-        stale = self._staleness_correction(pending)
+        # delayed schedule: w_{t-1} is τ applied updates stale, so the OMD
+        # lookahead additionally subtracts the SUM of the worker's pending
+        # (in-flight) messages as the staleness-correction proxy for the
+        # τ outstanding q̂'s (DESIGN.md §8).
+        stale = self._staleness_correction(pending_buf)
         ef_leaf_tree = ef["leaf"] if (self.bucketed and ef is not None) else ef
         if dq.optimizer == "omd":
             if dq.extrapolation == "local":
@@ -666,9 +723,13 @@ class DQGAN:
                     exch_msg = None  # mid-round: nothing on the wire
                     new_sched = {"accum": accum}
         elif schedule == "delayed":
-            exch_msg = pending  # exchange the PREVIOUS step's message
-            new_sched = {"pending": jax.tree.map(
-                lambda p, m: m.astype(p.dtype), pending, message)}
+            exch_msg = pending  # exchange the step-(t−τ) message (ring head)
+            new_sched = {
+                "pending": self._shift_pending(pending_buf, message),
+                "versions": self._advance_version(
+                    sched_st["versions"], state.step,
+                    part[0] if part is not None else None),
+            }
 
         # ---------- exchange + server-side update ------------------------- #
         if exch_msg is not None:
@@ -691,10 +752,17 @@ class DQGAN:
         gn = _global_norm(grads)
         en = _global_norm(new_ef) if new_ef is not None else jnp.zeros(())
         loss = metrics.get("loss", jnp.zeros(()))
+        if schedule == "delayed":
+            st_now = (state.step - new_sched["versions"]).astype(jnp.float32)
+        else:
+            st_now = jnp.zeros(())
+        st_max = st_mean = st_now
         if axes:
             loss = jax.lax.pmean(loss, axes)
             gn = jax.lax.pmean(gn, axes)
             en = jax.lax.pmean(en, axes)
+            st_max = jax.lax.pmax(st_now, axes)
+            st_mean = jax.lax.pmean(st_now, axes)
 
         new_state = DQState(
             step=state.step + 1,
@@ -708,20 +776,51 @@ class DQGAN:
         )
         return StepOutput(
             state=new_state,
-            metrics={"loss": loss, "grad_norm": gn, "error_norm": en},
+            metrics={"loss": loss, "grad_norm": gn, "error_norm": en,
+                     "staleness_max": st_max, "staleness_mean": st_mean},
         )
 
     # ------------------------------------------------------------------ #
     # schedule/participation helpers (repro.sched, DESIGN.md §5)
     # ------------------------------------------------------------------ #
-    def _staleness_correction(self, pending):
-        """The pending (delayed-schedule) message in update units — the
-        worker's best local estimate of the in-flight global update."""
-        if pending is None:
+    def _shift_pending(self, pending_buf, message):
+        """Next sched["pending"]: overwrite the single slot (τ=1, PR 2's
+        graph kept bit-identical) or shift the ring and append (τ>1).
+        Shared by the shard_map and vmap SPMD paths."""
+        if self.dq.staleness_tau == 1:
+            return jax.tree.map(lambda p, m: m.astype(p.dtype),
+                                pending_buf, message)
+        return jax.tree.map(
+            lambda r, m: jnp.concatenate([r[1:], m[None].astype(r.dtype)],
+                                         axis=0),
+            pending_buf, message)
+
+    def _advance_version(self, old_version, step, mask=None):
+        """Push/pull version after an exchange: a participating worker's
+        applied message was produced τ steps ago; a worker sitting the
+        round out (mask 0) keeps its old version — its staleness keeps
+        growing while the folded message rides the EF residual. Shared by
+        the shard_map and vmap SPMD paths."""
+        v_new = (step - self.dq.staleness_tau).astype(jnp.int32)
+        if mask is None:
+            return v_new
+        return jnp.where(mask > 0, v_new, old_version)
+
+    def _staleness_correction(self, pending_buf):
+        """The pending (delayed-schedule) message(s) in update units — the
+        worker's best local estimate of the in-flight global updates. For
+        τ>1 this sums the whole ring: all τ outstanding messages are
+        updates the server will apply before this worker's current one
+        (the τ-step recursion of DESIGN.md §8)."""
+        if pending_buf is None:
             return None
+        if self.dq.staleness_tau > 1:
+            tot = jax.tree.map(lambda r: r.sum(axis=0), pending_buf)
+        else:
+            tot = pending_buf
         if self.dq.message == "update":
-            return pending
-        return jax.tree.map(lambda p: self.dq.lr * p, pending)
+            return tot
+        return jax.tree.map(lambda p: self.dq.lr * p, tot)
 
     def _participation_setup(self, key, step, W):
         """(mask_vec (W,), n_part) for this round, or None for full

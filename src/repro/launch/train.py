@@ -18,15 +18,19 @@ fields ``wire_mb_step`` / ``cum_wire_mb`` / ``comm_ratio``:
     # fit a byte budget by per-bucket bit-width descent:
     ... --comm-plan delta_budget --comm-budget-mb 2.5
 
-Execution schedule (repro.sched, DESIGN.md §5): ``--schedule`` picks when
-workers exchange; log rows then carry ``round`` and the simulated wall
-clock (``sim_clock_s``) from the straggler-aware cost model:
+Execution schedule (repro.sched, DESIGN.md §5, §8): ``--schedule`` picks
+when workers exchange; log rows then carry ``round`` and the simulated
+wall clock (``sim_clock_s``) from the straggler-aware cost model:
 
     # exchange every 4 steps, message accumulates between rounds:
     ... --schedule local_k --local-k 4
 
     # one-step-stale exchange overlapping compute, heterogeneous workers:
     ... --schedule delayed --straggler-profile mild
+
+    # bounded staleness τ=4: the parameter-server push/pull pipeline —
+    # log rows gain per-step max/mean staleness from the version vector:
+    ... --schedule delayed --staleness-tau 4
 
     # each round only half the workers report; the rest accumulate EF:
     ... --participation 0.5
@@ -86,6 +90,10 @@ def main(argv=None):
                     help="repro.sched exchange schedule")
     ap.add_argument("--local-k", type=int, default=1,
                     help="local_k schedule: exchange every K steps")
+    ap.add_argument("--staleness-tau", type=int, default=1,
+                    help="delayed schedule: bounded-staleness pipeline "
+                         "depth τ (message exchanged at step t was "
+                         "produced at step t−τ)")
     ap.add_argument("--participation", type=float, default=1.0,
                     help="fraction of workers sampled per exchange round")
     ap.add_argument("--straggler-profile", default="none",
@@ -103,7 +111,9 @@ def main(argv=None):
     args = ap.parse_args(argv)
     if args.comm_plan == "delta_budget" and args.comm_budget_mb <= 0:
         ap.error("--comm-plan delta_budget requires --comm-budget-mb > 0")
-    sched = schedlib.get(args.schedule, args.local_k)
+    if args.staleness_tau != 1 and args.schedule != "delayed":
+        ap.error("--staleness-tau requires --schedule delayed")
+    sched = schedlib.get(args.schedule, args.local_k, args.staleness_tau)
 
     cfg = cfgs.get(args.arch)
     if args.smoke:
@@ -132,6 +142,7 @@ def main(argv=None):
         comm_plan=args.comm_plan, bucket_mb=args.bucket_mb,
         comm_budget_mb=args.comm_budget_mb,
         schedule=args.schedule, local_k=args.local_k,
+        staleness_tau=args.staleness_tau,
         participation=args.participation,
         straggler_profile=args.straggler_profile,
     )
@@ -219,6 +230,10 @@ def main(argv=None):
                        "loss": float(m["loss"]),
                        "grad_norm": float(m["grad_norm"]),
                        "error_norm": float(m["error_norm"]),
+                       **({"staleness_max": float(m["staleness_max"]),
+                           "staleness_mean": round(
+                               float(m["staleness_mean"]), 2)}
+                          if args.schedule == "delayed" else {}),
                        "wire_mb_step": round(
                            ledger.wire_bytes_per_step / 1e6, 3),
                        "cum_wire_mb": round(

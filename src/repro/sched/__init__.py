@@ -1,8 +1,10 @@
-"""repro.sched — the execution-schedule runtime (DESIGN.md §5).
+"""repro.sched — the execution-schedule runtime (DESIGN.md §5, §8).
 
 Decouples "compute a step" from "exchange gradients":
 
-  schedule.py      : ExchangeSchedule — every_step | local_k | delayed.
+  schedule.py      : ExchangeSchedule — every_step | local_k | delayed(τ).
+  server.py        : versioned parameter server — bounded-staleness
+                     push/pull semantics + event-driven wall-clock sim.
   participation.py : count-exact partial worker participation per round,
                      with EF accumulation for the workers sitting out.
   straggler.py     : seeded per-worker heterogeneity profiles.
@@ -10,11 +12,20 @@ Decouples "compute a step" from "exchange gradients":
                      straggler compute times and comm.ledger wire bytes.
 
 `core.dqgan` implements the in-step dataflow for each schedule (state
-under `DQState.sched`); `launch.train` drives the host-side cadence and
-telemetry; `benchmarks.run --only sched` sweeps schedule × compressor ×
-workers under stragglers into experiments/sched.json.
+under `DQState.sched`; delayed(τ) carries a τ-deep pending ring buffer
+and a per-worker version vector); `launch.train` drives the host-side
+cadence and telemetry; `benchmarks.run --only sched` sweeps schedule ×
+compressor × workers under stragglers — plus the τ∈{1,2,4,8}
+convergence-vs-staleness-vs-wall-clock frontier — into
+experiments/sched.json.
 """
-from .clock import LinkModel, simulate, speedup_vs_M, time_per_step  # noqa: F401
+from .clock import (  # noqa: F401
+    LinkModel,
+    baseline_mean_step,
+    simulate,
+    speedup_vs_M,
+    time_per_step,
+)
 from .participation import (  # noqa: F401
     host_round_participants,
     n_participants,
@@ -22,6 +33,11 @@ from .participation import (  # noqa: F401
     round_mask,
 )
 from .schedule import SCHEDULES, ExchangeSchedule, get  # noqa: F401
+from .server import (  # noqa: F401
+    StalenessBoundExceeded,
+    VersionedServer,
+    simulate_push_pull,
+)
 from .straggler import (  # noqa: F401
     PROFILES,
     StragglerProfile,

@@ -19,6 +19,11 @@ module composes the three things that actually set the clock:
       delayed    : the collective for step t-1 overlaps compute of step
                    t — cost = max(max_m(compute), T_ex), plus a one-time
                    pipeline fill/drain of T_ex.
+      server     : the bounded-staleness push/pull loop (`sched.server`,
+                   DESIGN.md §8) — no per-step barrier at all; worker m's
+                   step s only waits for round s−1−τ's aggregate. The
+                   default for delayed(τ>1); `dataflow="server"` forces
+                   it for any τ (the τ∈{1,2,4,8} frontier sweep).
 
 Partial participation gates the barrier on the sampled participants only
 (non-participants are assumed to overlap their local work; their later
@@ -36,6 +41,7 @@ import numpy as np
 from . import participation as part
 from . import straggler as strag
 from .schedule import ExchangeSchedule
+from .server import simulate_push_pull
 
 
 @dataclass(frozen=True)
@@ -53,10 +59,28 @@ class LinkModel:
 
 def simulate(schedule: ExchangeSchedule, times: np.ndarray,
              t_exchange: float, participation: float = 1.0,
-             seed: int = 0) -> dict:
+             seed: int = 0, dataflow: str = "auto") -> dict:
     """Walk `times` ((steps, M) per-step per-worker compute seconds)
     through the schedule's dataflow. Returns per-step and total simulated
-    seconds plus the exchange count."""
+    seconds plus the exchange count.
+
+    ``dataflow`` picks the cost model: "auto" keeps the synchronous
+    models below for every_step/local_k/delayed(1) — unchanged from PR 2
+    — and routes delayed(τ>1) to the bounded-staleness push/pull loop;
+    "server" forces the push/pull loop (sched.server) for any τ;
+    "sync" forces the synchronous pipelined model."""
+    if dataflow not in ("auto", "sync", "server"):
+        raise ValueError(f"unknown dataflow {dataflow!r}")
+    if dataflow == "server" and schedule.name != "delayed":
+        raise ValueError(
+            f"dataflow='server' models the bounded-staleness push/pull "
+            f"loop, which only the 'delayed' schedule runs — got "
+            f"{schedule.describe()}")
+    if dataflow == "server" or (dataflow == "auto"
+                                and schedule.name == "delayed"
+                                and schedule.tau > 1):
+        return simulate_push_pull(times, t_exchange, schedule.tau,
+                                  participation, seed)
     steps, M = times.shape
     n_part = part.n_participants(participation, M)
     rng = np.random.RandomState(seed + 2)
@@ -100,7 +124,8 @@ def simulate(schedule: ExchangeSchedule, times: np.ndarray,
 def time_per_step(schedule: ExchangeSchedule, profile: strag.StragglerProfile,
                   M: int, steps: int, t_compute_single: float,
                   bytes_per_exchange: float, link: LinkModel = LinkModel(),
-                  participation: float = 1.0, seed: int = 0) -> dict:
+                  participation: float = 1.0, seed: int = 0,
+                  dataflow: str = "auto") -> dict:
     """Mean simulated seconds/step for M workers splitting a fixed global
     batch (per-worker compute = t_compute_single / M), under `profile`.
     `bytes_per_exchange` is the per-worker wire cost of ONE exchange
@@ -109,25 +134,53 @@ def time_per_step(schedule: ExchangeSchedule, profile: strag.StragglerProfile,
     times = strag.step_times(profile, M, steps, seed,
                              base=t_compute_single / M)
     t_ex = link.exchange_time(bytes_per_exchange) if M > 1 else 0.0
-    out = simulate(schedule, times, t_ex, participation, seed)
+    out = simulate(schedule, times, t_ex, participation, seed, dataflow)
     out["t_exchange_s"] = t_ex
     return out
+
+
+def baseline_mean_step(profile: strag.StragglerProfile, steps: int,
+                       t_compute_single: float,
+                       link: LinkModel = LinkModel(), seed: int = 0) -> float:
+    """Mean seconds/step of the M=1 run (no comm). With one worker every
+    schedule degenerates to the same compute-only walk, so this baseline
+    is shared across schedules AND compressors — compute it once per
+    (profile, steps, t_compute, seed) and pass it to `speedup_vs_M`
+    instead of re-simulating it per sweep (the `benchmarks.run --only
+    sched` quick tier halves its work this way)."""
+    return time_per_step(ExchangeSchedule("every_step"), profile, 1, steps,
+                         t_compute_single, 0.0, link, 1.0,
+                         seed)["mean_step_s"]
 
 
 def speedup_vs_M(schedule: ExchangeSchedule, profile: strag.StragglerProfile,
                  Ms, steps: int, t_compute_single: float, bytes_fn,
                  link: LinkModel = LinkModel(), participation: float = 1.0,
-                 seed: int = 0) -> list:
+                 seed: int = 0, base: float = 0.0,
+                 dataflow: str = "auto") -> list:
     """Speedup rows for a worker-count sweep. `bytes_fn(M)` gives the
     per-worker wire bytes of one exchange at that M. The M=1 run (same
-    profile, no comm) is the baseline."""
-    base = time_per_step(schedule, profile, 1, steps, t_compute_single,
-                         0.0, link, 1.0, seed)["mean_step_s"]
+    profile, no comm) is the baseline; pass it via `base` (from
+    `baseline_mean_step`) when sweeping several schedules/compressors so
+    it is not re-simulated once per sweep."""
+    if not base:
+        base = baseline_mean_step(profile, steps, t_compute_single, link,
+                                  seed)
     rows = []
     for M in Ms:
+        if M == 1:
+            # the baseline IS the M=1 point (no comm, every schedule
+            # walks the same compute times) — reuse it, don't re-simulate
+            rows.append({
+                "M": 1,
+                "mean_step_s": base,
+                "t_exchange_s": 0.0,
+                "n_exchanges": schedule.exchanges_in(steps),
+                "speedup": 1.0,
+            })
+            continue
         sim = time_per_step(schedule, profile, M, steps, t_compute_single,
-                            bytes_fn(M) if M > 1 else 0.0, link,
-                            participation, seed)
+                            bytes_fn(M), link, participation, seed, dataflow)
         rows.append({
             "M": M,
             "mean_step_s": sim["mean_step_s"],

@@ -1,4 +1,4 @@
-"""Exchange schedules: WHEN the workers of Algorithm 2 talk (DESIGN.md §5).
+"""Exchange schedules: WHEN the workers of Algorithm 2 talk (DESIGN.md §5, §8).
 
 The seed repo ran one lockstep compressed exchange per step. That is one
 point in a schedule space that QODA (layer-wise quantized optimistic dual
@@ -17,13 +17,16 @@ local_k    : exchange every K steps. Between rounds the per-worker message
              `DQState.sched["accum"]`; params and server-side state only
              move at round boundaries. `local_k=1` is bit-exact
              `every_step` (the accumulator is 0 + message).
-delayed    : one-step-stale exchange. Step t compresses and averages the
-             message produced at step t-1 (`DQState.sched["pending"]`)
-             while step t's field evaluation proceeds — on hardware the
-             collective overlaps compute; in the wall-clock model the
-             step cost is max(compute, comm) instead of their sum. The
-             OMD extrapolation subtracts the worker's own pending
-             (not-yet-applied) message as the staleness correction.
+delayed    : bounded-staleness exchange with pipeline depth τ (>= 1).
+             Step t compresses and averages the message produced at step
+             t-τ — the oldest slot of the `DQState.sched["pending"]` ring
+             buffer — while step t's field evaluation proceeds; on
+             hardware τ collectives are in flight at once, each with τ
+             steps of compute to hide under. The OMD extrapolation
+             subtracts the SUM of the worker's pending (not-yet-applied)
+             messages as the staleness correction (the τ-step recursion,
+             DESIGN.md §8). τ=1 is PR 2's one-step-stale `delayed`,
+             bit-exact (single-slot layout and dataflow preserved).
 
 `is_exchange_step` takes the 0-based step index; with `local_k` the
 exchange fires on steps K-1, 2K-1, ... so every round closes with one.
@@ -40,6 +43,7 @@ class ExchangeSchedule:
     """A named point in (exchange cadence × staleness) space."""
     name: str
     local_k: int = 1
+    tau: int = 1
 
     def __post_init__(self):
         if self.name not in SCHEDULES:
@@ -51,12 +55,18 @@ class ExchangeSchedule:
             raise ValueError(
                 f"local_k={self.local_k} only meaningful with the "
                 f"'local_k' schedule, not {self.name!r}")
+        if self.tau < 1:
+            raise ValueError(f"tau must be >= 1, got {self.tau}")
+        if self.name != "delayed" and self.tau != 1:
+            raise ValueError(
+                f"tau={self.tau} only meaningful with the 'delayed' "
+                f"schedule, not {self.name!r}")
 
     # ------------------------------------------------------------------ #
     @property
     def staleness(self) -> int:
         """Steps between producing a message and applying its average."""
-        return 1 if self.name == "delayed" else 0
+        return self.tau if self.name == "delayed" else 0
 
     @property
     def period(self) -> int:
@@ -78,11 +88,15 @@ class ExchangeSchedule:
     def describe(self) -> str:
         if self.name == "local_k":
             return f"local_k(K={self.local_k})"
+        if self.name == "delayed" and self.tau > 1:
+            return f"delayed(tau={self.tau})"
         return self.name
 
 
-def get(name: str, local_k: int = 1) -> ExchangeSchedule:
-    """Resolve a schedule by name (+ K for 'local_k')."""
+def get(name: str, local_k: int = 1, tau: int = 1) -> ExchangeSchedule:
+    """Resolve a schedule by name (+ K for 'local_k', τ for 'delayed')."""
     if name == "local_k":
         return ExchangeSchedule("local_k", local_k)
+    if name == "delayed":
+        return ExchangeSchedule("delayed", tau=tau)
     return ExchangeSchedule(name)

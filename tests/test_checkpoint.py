@@ -66,11 +66,14 @@ def test_bucketed_dqstate_roundtrip(tmp_path):
                                       np.asarray(ent["e2"]))
 
 
-@pytest.mark.parametrize("variant", ["bucketed", "delayed", "local_k",
-                                     "oadam"])
+@pytest.mark.parametrize("variant", ["bucketed", "delayed", "delayed_tau",
+                                     "local_k", "oadam"])
 def test_resume_equivalence(tmp_path, variant):
     """train 2N ≡ train N, save, restore, train N — bit-exact even with a
-    stochastic compressor (RNG keys derive from the carried step count)."""
+    stochastic compressor (RNG keys derive from the carried step count).
+    `delayed_tau` covers the τ>1 pending ring buffer + version vector
+    (DESIGN.md §8): a mid-pipeline save must restore all τ in-flight
+    messages and the per-worker staleness bookkeeping."""
     from repro import sched as S
 
     N = 4
@@ -78,6 +81,10 @@ def test_resume_equivalence(tmp_path, variant):
         "bucketed": BUCKETED,
         "delayed": dataclasses.replace(BUCKETED, comm_plan="none",
                                        exchange="sim", schedule="delayed"),
+        "delayed_tau": dataclasses.replace(BUCKETED, comm_plan="none",
+                                           exchange="sim",
+                                           schedule="delayed",
+                                           staleness_tau=3),
         "local_k": dataclasses.replace(BUCKETED, comm_plan="none",
                                        exchange="sim", schedule="local_k",
                                        local_k=2),
@@ -85,7 +92,7 @@ def test_resume_equivalence(tmp_path, variant):
                                      exchange="sim", optimizer="oadam",
                                      message="grad"),
     }[variant]
-    sched = S.get(dq.schedule, dq.local_k)
+    sched = S.get(dq.schedule, dq.local_k, dq.staleness_tau)
     tr = DQGAN(field_fn=field, dq=dq)
     step = jax.jit(tr.step, static_argnums=(3,))
 

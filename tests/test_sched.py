@@ -58,12 +58,23 @@ def test_schedule_helpers():
     dl = S.get("delayed")
     assert dl.staleness == 1 and dl.period == 1
 
+    dl4 = S.get("delayed", tau=4)
+    assert dl4.staleness == 4 and dl4.period == 1
+    assert dl4.describe() == "delayed(tau=4)"
+    assert S.get("delayed").describe() == "delayed"
+
     with pytest.raises(ValueError):
         S.get("bogus")
     with pytest.raises(ValueError):
         S.get("local_k", 0)
     with pytest.raises(ValueError):
         S.ExchangeSchedule("delayed", local_k=4)
+    with pytest.raises(ValueError):
+        S.get("delayed", tau=0)
+    with pytest.raises(ValueError):
+        S.ExchangeSchedule("local_k", 2, tau=3)
+    with pytest.raises(ValueError):
+        S.ExchangeSchedule("every_step", tau=2)
 
 
 # --------------------------------------------------------------------------- #
@@ -183,6 +194,87 @@ def test_delayed_still_converges_on_bilinear():
 
 
 # --------------------------------------------------------------------------- #
+# delayed(tau): the bounded-staleness parameter-server pipeline (DESIGN.md §8)
+# --------------------------------------------------------------------------- #
+def test_delayed_tau1_is_bitexact_delayed():
+    """delayed(tau=1) IS PR 2's delayed — same single-slot layout, same
+    compiled graph — bit-for-bit through jit with a stochastic compressor
+    and EF in the loop."""
+    p0 = _run(dataclasses.replace(BASE, schedule="delayed"), steps=25)
+    p1 = _run(dataclasses.replace(BASE, schedule="delayed", staleness_tau=1),
+              steps=25)
+    np.testing.assert_array_equal(p0["x"], p1["x"])
+    np.testing.assert_array_equal(p0["y"], p1["y"])
+
+
+@pytest.mark.parametrize("tau", [1, 2, 3, 4])
+def test_delayed_tau_matches_reference_recursion(tau):
+    """Identity compressor + exact exchange: delayed(τ) must follow the
+    τ-step recursion (the τ=1 case is PR 2's frozen delayed reference):
+        w_half_t = w_{t-1} − Σ_j R_t[j] − η g_{t-1}
+        w_t      = w_{t-1} − R_t[0]          (apply the τ-stale message)
+        R_{t+1}  = [R_t[1:], η g_t]          (ring shift)
+    """
+    steps, eta = 14, 0.05
+    dq = dataclasses.replace(BASE, compressor="identity", exchange="exact",
+                             schedule="delayed", staleness_tau=tau, lr=eta,
+                             error_feedback=False)
+    got = _run(dq, steps=steps)
+
+    An = np.asarray(A)
+    w = {k: np.ones(6, np.float32) for k in "xy"}
+    gp = {k: np.zeros(6, np.float32) for k in "xy"}
+    R = {k: np.zeros((tau, 6), np.float32) for k in "xy"}
+    for t in range(steps):
+        wh = {k: w[k] - (eta * gp[k] + R[k].sum(0)) for k in w}
+        g = {"x": An @ wh["y"], "y": -(An.T @ wh["x"])}
+        for k in w:
+            w[k] -= R[k][0]
+            R[k] = np.concatenate([R[k][1:], (eta * g[k])[None]], 0)
+        gp = g
+    np.testing.assert_allclose(got["x"], w["x"], rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(got["y"], w["y"], rtol=1e-5, atol=1e-6)
+
+
+def test_delayed_tau_warmup_and_staleness_metrics():
+    """The first τ steps apply zero messages (pipeline fill) and the
+    version vector makes the staleness metric read exactly τ."""
+    tau = 3
+    dq = dataclasses.replace(BASE, schedule="delayed", staleness_tau=tau)
+    tr = DQGAN(field_fn=bilinear_field, dq=dq)
+    st = tr.init({"x": jnp.ones(6), "y": jnp.ones(6)})
+    assert st.sched["pending"]["x"].shape == (1, tau, 6)
+    assert int(st.sched["versions"][0]) == -tau
+    step = jax.jit(tr.step, static_argnums=(3,))
+    for i in range(tau + 2):
+        out = step(st, None, KEY, True)
+        st = out.state
+        m = jax.device_get(out.metrics)
+        assert m["staleness_max"] == tau and m["staleness_mean"] == tau
+        if i < tau:  # pipeline fill: nothing applied yet
+            np.testing.assert_array_equal(
+                jax.device_get(st.params)["x"], np.ones(6, np.float32))
+    assert not np.array_equal(jax.device_get(st.params)["x"],
+                              np.ones(6, np.float32))
+    # every ring slot is a live in-flight message after warmup
+    pend = jax.device_get(st.sched["pending"])
+    assert all(np.all(np.any(p[0] != 0, axis=tuple(range(1, p[0].ndim))))
+               for p in jax.tree.leaves(pend))
+
+
+def test_staleness_tau_config_validation():
+    with pytest.raises(ValueError):
+        DQGAN(field_fn=bilinear_field,
+              dq=dataclasses.replace(BASE, staleness_tau=2)).init(
+                  {"x": jnp.ones(6), "y": jnp.ones(6)})
+    with pytest.raises(ValueError):
+        DQGAN(field_fn=bilinear_field,
+              dq=dataclasses.replace(BASE, schedule="delayed",
+                                     staleness_tau=0)).init(
+                  {"x": jnp.ones(6), "y": jnp.ones(6)})
+
+
+# --------------------------------------------------------------------------- #
 # participation (host-side pieces; in-step semantics tested multidevice)
 # --------------------------------------------------------------------------- #
 def test_participation_counts_and_mask():
@@ -264,6 +356,186 @@ def test_speedup_vs_M_monotone_compute_term():
     assert sp[-1] > sp[0]
 
 
+def test_baseline_mean_step_shared_across_schedules():
+    """The hoisted M=1 baseline (benchmarks.run bugfix): with one worker
+    and no comm every schedule walks the same compute times, so the
+    shared baseline must equal each schedule's own M=1 simulation."""
+    prof = S.get_profile("mild")
+    base = S.baseline_mean_step(prof, 48, 2e-3, seed=3)
+    for sch in (S.get("every_step"), S.get("local_k", 4), S.get("delayed"),
+                S.get("delayed", tau=4)):
+        own = S.time_per_step(sch, prof, 1, 48, 2e-3, 0.0,
+                              seed=3)["mean_step_s"]
+        assert own == pytest.approx(base, rel=1e-12), sch.describe()
+
+
+# --------------------------------------------------------------------------- #
+# versioned parameter server (sched.server, DESIGN.md §8)
+# --------------------------------------------------------------------------- #
+def test_versioned_server_semantics():
+    srv = S.VersionedServer(n_workers=4, tau=2)
+    assert [srv.pull(m) for m in range(4)] == [0, 0, 0, 0]
+    for m in range(4):
+        assert srv.push(m) == 0
+    assert srv.version == 1          # one round = n_workers pushes
+    # worker 0 never re-pulls: staleness grows one version per round; its
+    # round-3 push lands exactly AT the bound (staleness 2), then trips it
+    for _ in range(2):
+        for m in range(4):
+            if m:
+                srv.pull(m)
+            srv.push(m)
+    assert srv.staleness(0) == 3 and not srv.can_push(0)
+    with pytest.raises(S.StalenessBoundExceeded):
+        srv.push(0)                  # 3 versions behind: bound trips
+    srv.pull(0)
+    assert srv.push(0) == 0          # re-pull resets the staleness
+    with pytest.raises(ValueError):
+        S.VersionedServer(n_workers=4, tau=0)
+
+
+def test_server_partial_rounds():
+    srv = S.VersionedServer(n_workers=4, tau=1, n_round=2)
+    srv.pull(0), srv.pull(1)
+    srv.push(0)
+    assert srv.version == 0
+    srv.push(0)                      # duplicate: same round, not a close
+    assert srv.version == 0
+    srv.push(1)
+    assert srv.version == 1          # 2 DISTINCT participants close a round
+
+
+ADVERSARIAL = S.StragglerProfile("adversarial", slowdown_sigma=1.0,
+                                 jitter_sigma=0.3, spike_prob=0.3,
+                                 spike_factor=20.0)
+
+
+@pytest.mark.parametrize("profile",
+                         [S.get_profile("heavy"), ADVERSARIAL])
+def test_push_pull_staleness_bounded(profile):
+    """The SSP gate: whatever the stragglers do, no applied contribution
+    is ever more than τ versions stale — and the extra slack makes the
+    modeled clock monotone non-increasing in τ."""
+    times = S.step_times(profile, 8, 96, seed=11, base=1e-3)
+    prev_total = None
+    for tau in (1, 2, 4, 8):
+        out = S.simulate_push_pull(times, 2e-3, tau)
+        assert out["staleness_max"] <= tau, (tau, out["staleness_max"])
+        assert out["staleness_mean"] <= out["staleness_max"]
+        assert out["n_exchanges"] == 96
+        if prev_total is not None:
+            assert out["total_s"] <= prev_total * (1 + 1e-9), tau
+        prev_total = out["total_s"]
+    # determinism
+    a = S.simulate_push_pull(times, 2e-3, 4)
+    b = S.simulate_push_pull(times, 2e-3, 4)
+    np.testing.assert_array_equal(a["per_step_s"], b["per_step_s"])
+
+
+def test_push_pull_participation_staleness_consistent():
+    """Under partial participation a round's aggregate can be *ready*
+    before a straggler-gated earlier round — the server still applies
+    versions in order, so the staleness bookkeeping stays valid and the
+    participant bound ≤ τ holds."""
+    times = S.step_times(ADVERSARIAL, 8, 96, seed=5, base=1e-3)
+    for tau in (1, 2, 4):
+        out = S.simulate_push_pull(times, 2e-3, tau, participation=0.5)
+        assert out["staleness_max"] <= tau, (tau, out["staleness_max"])
+        assert 0.0 <= out["staleness_mean"] <= out["staleness_max"]
+        full = S.simulate_push_pull(times, 2e-3, tau)
+        assert out["total_s"] <= full["total_s"] * (1 + 1e-9)
+
+
+def test_clock_routes_delayed_tau_to_server_dataflow():
+    times = S.step_times(S.get_profile("mild"), 8, 32, seed=0, base=1e-3)
+    auto = S.simulate(S.get("delayed", tau=4), times, 2e-3)
+    forced = S.simulate_push_pull(times, 2e-3, 4)
+    assert auto["tau"] == 4
+    np.testing.assert_array_equal(auto["per_step_s"], forced["per_step_s"])
+    # delayed(1) default stays on PR 2's synchronous pipelined model ...
+    sync = S.simulate(S.get("delayed"), times, 2e-3)
+    assert "tau" not in sync
+    # ... unless the server dataflow is forced (the τ-frontier sweep)
+    srv1 = S.simulate(S.get("delayed"), times, 2e-3, dataflow="server")
+    assert srv1["tau"] == 1 and srv1["staleness_max"] <= 1
+    with pytest.raises(ValueError):
+        S.simulate(S.get("delayed"), times, 2e-3, dataflow="bogus")
+    # only delayed has a push/pull loop to model
+    with pytest.raises(ValueError):
+        S.simulate(S.get("local_k", 4), times, 2e-3, dataflow="server")
+    with pytest.raises(ValueError):
+        S.simulate(S.get("every_step"), times, 2e-3, dataflow="server")
+
+
+def test_benchmark_regression_gate():
+    from benchmarks.run import check_sched_regression
+
+    base = {"rows": [{"schedule": "delayed", "compressor": "8bit", "M": 8,
+                      "mean_step_s": 1.0, "wire_mb": 10.0}],
+            "tau_frontier": [{"tau": 4, "mean_step_s": 0.5,
+                              "wire_mb": 5.0}]}
+    ok = {"rows": [{"schedule": "delayed", "compressor": "8bit", "M": 8,
+                    "mean_step_s": 1.05, "wire_mb": 10.0}],
+          "tau_frontier": [{"tau": 4, "mean_step_s": 0.4, "wire_mb": 5.0}]}
+    assert check_sched_regression(ok, base) == []
+    bad = {"rows": [{"schedule": "delayed", "compressor": "8bit", "M": 8,
+                     "mean_step_s": 1.2, "wire_mb": 10.0}],
+           "tau_frontier": [{"tau": 4, "mean_step_s": 0.5,
+                             "wire_mb": 5.6}]}
+    fails = check_sched_regression(bad, base)
+    assert len(fails) == 2
+    assert any("mean_step_s" in f for f in fails)
+    assert any("tau_frontier" in f and "wire_mb" in f for f in fails)
+    # new rows (no baseline counterpart) never gate
+    extra = {"rows": [{"schedule": "new", "compressor": "8bit", "M": 64,
+                       "mean_step_s": 9.9, "wire_mb": 99.0}]}
+    assert check_sched_regression(extra, base) == []
+
+
+def test_mixture_gan_schedule_overrides_smoke():
+    """The tau-frontier convergence path: train_mixture_gan must accept
+    dq_overrides and drive the schedule-aware step (static do_exchange)
+    for delayed(tau) — a 3-step smoke so CI catches plumbing breaks
+    without paying the full frontier sweep."""
+    from benchmarks.gan_common import train_mixture_gan
+
+    final, curve, st = train_mixture_gan(
+        "DQGAN", steps=3, batch=32,
+        dq_overrides={"schedule": "delayed", "staleness_tau": 2})
+    assert {"modes", "hq_frac", "fid"} <= set(final)
+    # every pending leaf carries the (worker, τ) ring axes
+    assert all(l.shape[:2] == (1, 2)
+               for l in jax.tree.leaves(st.sched["pending"]))
+    assert int(jax.device_get(st.step)) == 3
+
+
+def test_benchmark_gate_rejects_tier_mismatch(tmp_path):
+    """Running the gate at a different tier than the baseline (wire_mb
+    scales with steps) must exit with a config error, not spurious
+    regressions."""
+    import json
+    import os
+    import subprocess
+    import sys as _sys
+
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    with open(os.path.join(repo, "experiments/baselines/"
+                                 "sched_quick.json")) as f:
+        doctored = json.load(f)
+    doctored["steps"] = 256          # pretend the baseline was full-tier
+    bad = tmp_path / "sched_full_baseline.json"
+    bad.write_text(json.dumps(doctored))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (os.path.join(repo, "src") + os.pathsep
+                         + env.get("PYTHONPATH", ""))
+    proc = subprocess.run(
+        [_sys.executable, "-m", "benchmarks.run", "--quick", "--only",
+         "sched", "--check-against", str(bad)],
+        capture_output=True, text=True, timeout=300, cwd=repo, env=env)
+    assert proc.returncode == 2, proc.stdout[-2000:] + proc.stderr[-2000:]
+    assert "tier mismatch" in proc.stdout
+
+
 # --------------------------------------------------------------------------- #
 # ledger schedule columns
 # --------------------------------------------------------------------------- #
@@ -327,31 +599,45 @@ for spmd in ("shard_map", "vmap"):
     p1 = run(dataclasses.replace(b, schedule="local_k", local_k=1))
     np.testing.assert_array_equal(p0["x"], p1["x"])
     np.testing.assert_array_equal(p0["y"], p1["y"])
+    # delayed(tau=1) is bit-exact PR 2 delayed (stochastic compressor + EF)
+    d0 = run(dataclasses.replace(b, schedule="delayed"))
+    d1 = run(dataclasses.replace(b, schedule="delayed", staleness_tau=1))
+    np.testing.assert_array_equal(d0["x"], d1["x"])
+    np.testing.assert_array_equal(d0["y"], d1["y"])
 
-# delayed, exact+identity, against the M-worker reference recursion
-dq = dataclasses.replace(base, compressor="identity", exchange="exact",
-                         schedule="delayed", error_feedback=False)
-got = run(dq, steps=10)
-
+# delayed(tau), exact+identity, against the M-worker reference recursion
+# (tau=1 is PR 2's frozen delayed reference; tau=2 exercises the ring)
 An = np.asarray(A); eta = 0.05; M = 8
 scales = 1.0 + np.arange(M) / 8.0   # mean of each worker's batch slice
-w = {k: np.ones(4, np.float32) for k in "xy"}
-gp = [{k: np.zeros(4, np.float32) for k in "xy"} for _ in range(M)]
-Pd = [{k: np.zeros(4, np.float32) for k in "xy"} for _ in range(M)]
-for t in range(10):
-    gs = []
-    for m in range(M):
-        wh = {k: w[k] - (eta * gp[m][k] + Pd[m][k]) for k in w}
-        gs.append({"x": scales[m] * (An @ wh["y"]),
-                   "y": -scales[m] * (An.T @ wh["x"])})
-    qh = {k: np.mean([Pd[m][k] for m in range(M)], axis=0) for k in w}
-    for k in w:
-        w[k] = w[k] - qh[k]
-    for m in range(M):
-        Pd[m] = {k: eta * gs[m][k] for k in w}
-        gp[m] = gs[m]
-np.testing.assert_allclose(got["x"], w["x"], rtol=1e-4, atol=1e-5)
-np.testing.assert_allclose(got["y"], w["y"], rtol=1e-4, atol=1e-5)
+for spmd in ("shard_map", "vmap"):
+    for tau in (1, 2):
+        dq = dataclasses.replace(base, spmd=spmd, compressor="identity",
+                                 exchange="exact", schedule="delayed",
+                                 staleness_tau=tau, error_feedback=False)
+        got = run(dq, steps=10)
+
+        w = {k: np.ones(4, np.float32) for k in "xy"}
+        gp = [{k: np.zeros(4, np.float32) for k in "xy"} for _ in range(M)]
+        Rd = [{k: np.zeros((tau, 4), np.float32) for k in "xy"}
+              for _ in range(M)]
+        for t in range(10):
+            gs = []
+            for m in range(M):
+                wh = {k: w[k] - (eta * gp[m][k] + Rd[m][k].sum(0))
+                      for k in w}
+                gs.append({"x": scales[m] * (An @ wh["y"]),
+                           "y": -scales[m] * (An.T @ wh["x"])})
+            qh = {k: np.mean([Rd[m][k][0] for m in range(M)], axis=0)
+                  for k in w}
+            for k in w:
+                w[k] = w[k] - qh[k]
+            for m in range(M):
+                Rd[m] = {k: np.concatenate([Rd[m][k][1:],
+                                            (eta * gs[m][k])[None]], 0)
+                         for k in w}
+                gp[m] = gs[m]
+        np.testing.assert_allclose(got["x"], w["x"], rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(got["y"], w["y"], rtol=1e-4, atol=1e-5)
 print("OK")
 """
 
@@ -422,4 +708,105 @@ print("OK")
 @pytest.mark.multidevice
 def test_participation_semantics_8dev(multidevice):
     out = multidevice(PARTICIPATION_SCRIPT)
+    assert "OK" in out
+
+
+PARTICIPATION_TAU_SCRIPT = r"""
+import dataclasses
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P
+from repro.parallel.compat import make_mesh, set_mesh
+from repro.configs.base import DQConfig
+from repro.core.dqgan import DQGAN
+from repro import sched as S
+
+A = jnp.array(np.random.RandomState(0).randn(4,4), jnp.float32)
+def field(params, batch, rng):
+    x, y = params["x"], params["y"]
+    s = 1.0 + jnp.mean(batch)
+    return {"x": s * (A @ y), "y": -s * (A.T @ x)}, {"loss": x @ A @ y}
+
+mesh = make_mesh((8,), ("data",))
+params = {"x": jnp.ones(4), "y": jnp.ones(4)}
+batch = jnp.arange(8, dtype=jnp.float32).reshape(8, 1) / 8.0
+key = jax.random.key(7)
+M, eta, tau, steps = 8, 0.05, 2, 6
+n = S.n_participants(0.5, M)
+
+dq = DQConfig(optimizer="omd", compressor="identity", exchange="sim",
+              error_feedback=True, lr=eta, worker_axes=("data",),
+              schedule="delayed", staleness_tau=tau, participation=0.5)
+tr = DQGAN(field_fn=field, dq=dq, mesh=mesh,
+           param_specs={"x": P(), "y": P()}, batch_spec=P(("data",)))
+with set_mesh(mesh):
+    st = tr.init(params)
+    step = jax.jit(tr.step, static_argnums=(3,))
+    stale_maxes = []
+    for i in range(steps):
+        out = step(st, batch, key, True)
+        st = out.state
+        stale_maxes.append(float(jax.device_get(out.metrics)["staleness_max"]))
+got = jax.device_get(st)
+
+# numpy reference: delayed(tau) ring x count-exact participation. A
+# participant sends its ring head + residual (identity: sent exactly,
+# residual drains); a skipper sends zero and folds the head into e1 —
+# the skipped round extends its staleness (version not advanced) while
+# the ring stays clamped at depth tau.
+masks = [np.asarray(S.round_mask(key, t, M, n)) for t in range(steps)]
+An = np.asarray(A)
+scales = 1.0 + np.arange(M) / 8.0
+w = {k: np.ones(4, np.float32) for k in "xy"}
+gp = [{k: np.zeros(4, np.float32) for k in "xy"} for _ in range(M)]
+Rd = [{k: np.zeros((tau, 4), np.float32) for k in "xy"} for _ in range(M)]
+e1 = [{k: np.zeros(4, np.float32) for k in "xy"} for _ in range(M)]
+ver = np.full(M, -tau)
+ref_stale_max = []
+for t in range(steps):
+    mask = masks[t]
+    gs = []
+    for m in range(M):
+        wh = {k: w[k] - (eta * gp[m][k] + e1[m][k] + Rd[m][k].sum(0))
+              for k in w}
+        gs.append({"x": scales[m] * (An @ wh["y"]),
+                   "y": -scales[m] * (An.T @ wh["x"])})
+    part = [m for m in range(M) if mask[m] == 1.0]
+    qh = {k: np.mean([Rd[m][k][0] + e1[m][k] for m in part], axis=0)
+          for k in w}
+    for k in w:
+        w[k] = w[k] - qh[k]
+    for m in range(M):
+        for k in w:
+            if mask[m] != 1.0:
+                e1[m][k] = e1[m][k] + Rd[m][k][0]   # unsent head rides EF
+            else:
+                e1[m][k] = np.zeros(4, np.float32)  # identity: drained
+            Rd[m][k] = np.concatenate([Rd[m][k][1:],
+                                       (eta * gs[m][k])[None]], 0)
+        if mask[m] == 1.0:
+            ver[m] = t - tau
+        gp[m] = gs[m]
+    ref_stale_max.append(float((t - ver).max()))
+
+np.testing.assert_allclose(got.params["x"], w["x"], rtol=1e-5, atol=1e-6)
+np.testing.assert_allclose(got.params["y"], w["y"], rtol=1e-5, atol=1e-6)
+for m in range(M):
+    for k in "xy":
+        np.testing.assert_allclose(np.asarray(got.ef[k]["e1"])[m],
+                                   e1[m][k], rtol=1e-5, atol=1e-6)
+# version vector: skipped rounds count toward staleness, participants
+# reset to exactly tau
+np.testing.assert_array_equal(np.asarray(got.sched["versions"]), ver)
+assert stale_maxes == ref_stale_max, (stale_maxes, ref_stale_max)
+assert max(stale_maxes) > tau       # someone actually skipped a round
+print("OK")
+"""
+
+
+@pytest.mark.multidevice
+def test_participation_tau_composition_8dev(multidevice):
+    """participation × τ: a skipped round extends that worker's staleness
+    (version vector frozen) while its unsent ring head is preserved in
+    the EF residual — asserted against a full numpy reference."""
+    out = multidevice(PARTICIPATION_TAU_SCRIPT)
     assert "OK" in out
