@@ -17,14 +17,30 @@ from repro.configs.base import DQConfig
 from repro.core.dqgan import DQGAN
 from repro.data import gaussian_mixture_sampler
 from repro.models.gan import GANConfig, clip_disc, gan_field_fn, mlp_gan_init, mlp_generate
+from repro.strategy import Compression, ExchangePlan, Strategy
 
 
+# Per-method distribution strategy (single-process: no worker axes) and
+# optimizer/message pairing. The paper's baselines are points in the
+# strategy lattice; anything schedule/participation-shaped is layered on
+# via `strategy_overrides` below.
+_SINGLE = ExchangePlan(kind="sim", worker_axes=())
+METHOD_STRATEGIES = {
+    "CPOAdam": Strategy(compression=Compression(compressor="identity",
+                                                error_feedback=False),
+                        exchange=_SINGLE),
+    "CPOAdam-GQ": Strategy(compression=Compression(error_feedback=False),
+                           exchange=_SINGLE),
+    "DQGAN": Strategy(exchange=_SINGLE),
+    "DQGAN-noEF": Strategy(compression=Compression(error_feedback=False),
+                           exchange=_SINGLE),
+}
 METHODS = {
-    # name: (optimizer, compressor, error_feedback, message)
-    "CPOAdam": ("oadam", "identity", False, "grad"),
-    "CPOAdam-GQ": ("oadam", "qsgd8_linf", False, "grad"),
-    "DQGAN": ("omd", "qsgd8_linf", True, "update"),
-    "DQGAN-noEF": ("omd", "qsgd8_linf", False, "update"),
+    # name: (optimizer, message)
+    "CPOAdam": ("oadam", "grad"),
+    "CPOAdam-GQ": ("oadam", "grad"),
+    "DQGAN": ("omd", "update"),
+    "DQGAN-noEF": ("omd", "update"),
 }
 
 
@@ -35,14 +51,17 @@ METHOD_LR = {"CPOAdam": 1e-3, "CPOAdam-GQ": 1e-3, "DQGAN": 3e-3,
 
 
 def make_trainer(method: str, cfg: GANConfig, lr: float,
-                 dq_overrides: dict | None = None):
-    opt, comp, ef, msg = METHODS[method]
+                 dq_overrides: dict | None = None,
+                 strategy_overrides: dict | None = None):
+    opt, msg = METHODS[method]
+    strat = METHOD_STRATEGIES[method]
+    if strategy_overrides:
+        strat = strat.evolve(**strategy_overrides)
     # Adam preconditioning normalizes the field-level critic boost away;
     # restore the n_critic=5 ratio post-preconditioning (TTUR).
     mults = (("disc", cfg.disc_grad_mult),) if opt in ("adam", "oadam") else ()
-    dq = DQConfig(optimizer=opt, compressor=comp, error_feedback=ef,
-                  message=msg, exchange="sim", lr=lr, worker_axes=(),
-                  lr_mults=mults)
+    dq = DQConfig.from_strategy(strat, optimizer=opt, message=msg, lr=lr,
+                                lr_mults=mults)
     if dq_overrides:
         import dataclasses
         dq = dataclasses.replace(dq, **dq_overrides)
@@ -83,21 +102,23 @@ def eval_mixture_gan(params, cfg, sample_real, centers, key, n=2000):
 
 
 def train_mixture_gan(method: str, steps=1500, batch=256, lr=None, seed=0,
-                      eval_every=0, dq_overrides: dict | None = None):
-    """Train the 2-D mixture GAN; `dq_overrides` patches the DQConfig
-    (e.g. {"schedule": "delayed", "staleness_tau": 4} for the
-    convergence-vs-staleness frontier of `benchmarks.run --only sched`)."""
+                      eval_every=0, dq_overrides: dict | None = None,
+                      strategy_overrides: dict | None = None):
+    """Train the 2-D mixture GAN; `strategy_overrides` patches the
+    method's distribution strategy by legacy field name (e.g.
+    {"schedule": "delayed", "staleness_tau": 4} for the convergence-vs-
+    staleness frontier of `benchmarks.run --only sched`); `dq_overrides`
+    patches optimizer-side DQConfig fields."""
     lr = METHOD_LR.get(method, 1e-3) if lr is None else lr
     cfg = GANConfig(name="mix", image_size=0, data_dim=2, latent_dim=16,
                     hidden=128, weight_clip=0.1)
     sample_real, centers = gaussian_mixture_sampler(n_modes=8)
     key = jax.random.key(seed)
     params = mlp_gan_init(key, cfg)
-    tr = make_trainer(method, cfg, lr, dq_overrides)
+    tr = make_trainer(method, cfg, lr, dq_overrides, strategy_overrides)
     st = tr.init(params)
     step = jax.jit(tr.step, static_argnums=(3,), donate_argnums=0)
-    from repro import sched as S
-    sched = S.get(tr.dq.schedule, tr.dq.local_k, tr.dq.staleness_tau)
+    sched = tr.strategy.schedule.runtime()
     curve = []
     for i in range(steps):
         k = jax.random.fold_in(key, i)

@@ -95,16 +95,47 @@ def _dcgan_compute_time(quick: bool):
     return _COMPUTE_TIME_CACHE[quick]
 
 
-def _wire_models(d):
-    """Per-worker bytes of ONE exchange by compressor label."""
-    from repro.core import compressors as C
-    from repro.core.exchange import modeled_wire_bytes
+# --------------------------------------------------------------------------- #
+# shared sweep definitions (repro.strategy): the schedule × wire points
+# are Strategy OBJECTS — one spelling for the speedup and sched sections,
+# and the structural identity (strategy.short_hash()) the regression gate
+# keys baselines by.
+# --------------------------------------------------------------------------- #
+def _wire_strategies():
+    from repro.strategy import Strategy
 
-    comp = C.get("qsgd8_linf")
     return {
-        "f32": lambda M: modeled_wire_bytes("exact", comp, (d,), M),
-        "8bit": lambda M: modeled_wire_bytes("two_phase", comp, (d,), M),
+        # f32 on the wire (exact averaging) vs int8 two-phase collectives
+        "f32": Strategy.from_legacy(exchange="exact"),
+        "8bit": Strategy.from_legacy(exchange="two_phase"),
     }
+
+
+def _sched_strategies(K):
+    from repro.strategy import Schedule, Strategy
+
+    return (
+        ("every_step", Strategy()),
+        ("local_k", Strategy(schedule=Schedule.local_k(K))),
+        ("delayed", Strategy(schedule=Schedule.delayed())),
+    )
+
+
+def sweep_points(K):
+    """The full schedule × compressor sweep as composed Strategy objects:
+    yields (schedule_label, wire_label, Strategy)."""
+    import dataclasses
+
+    for sname, s_st in _sched_strategies(K):
+        for cname, w_st in _wire_strategies().items():
+            yield sname, cname, dataclasses.replace(
+                s_st, exchange=w_st.exchange)
+
+
+def _wire_models(d):
+    """Per-worker bytes of ONE exchange by wire label."""
+    return {name: (lambda M, st=st: st.modeled_wire_bytes(d, M))
+            for name, st in _wire_strategies().items()}
 
 
 def bench_speedup(quick: bool):
@@ -136,9 +167,8 @@ def bench_speedup(quick: bool):
     steps = SCHED_MODEL_STEPS[quick]
     base = S.baseline_mean_step(profile, steps, t_compute)
     rows = []
-    for sname, sch in (("every_step", S.get("every_step")),
-                       ("local_k", S.get("local_k", 4)),
-                       ("delayed", S.get("delayed"))):
+    for sname, strat in _sched_strategies(K=4):
+        sch = strat.schedule.runtime()
         per = {}
         for cname, bfn in wire.items():
             per[cname] = {r["M"]: r for r in S.speedup_vs_M(
@@ -197,30 +227,29 @@ def bench_sched(quick: bool, model_inputs=None, convergence: bool = True,
     K = 4
     steps = SCHED_MODEL_STEPS[quick]
     Ms = (1, 2, 4, 8, 16, 32)
-    schedules = (("every_step", S.get("every_step")),
-                 ("local_k", S.get("local_k", K)),
-                 ("delayed", S.get("delayed")))
     # The M=1 baseline is schedule- and compressor-independent (no comm):
     # simulate it ONCE here; speedup_vs_M reuses it both as the reference
     # and as the Ms[0] row (the quick tier previously simulated it twice
     # per schedule × compressor sweep).
     base = S.baseline_mean_step(profile, steps, t_compute)
     rows = []
-    for sname, sch in schedules:
-        for cname, bfn in wire.items():
-            for r in S.speedup_vs_M(sch, profile, Ms, steps, t_compute,
-                                    lambda M, b=bfn: b(max(M, 2)),
-                                    base=base):
-                wire_mb = (bfn(max(r["M"], 2)) * r["n_exchanges"] / 1e6
-                           if r["M"] > 1 else 0.0)
-                r.update({"schedule": sname, "compressor": cname,
-                          "wire_mb": round(wire_mb, 3)})
-                rows.append(r)
-                row(f"sched/{sname}/{cname}/M={r['M']}",
-                    r["mean_step_s"] * 1e6,
-                    f"speedup={r['speedup']:.2f}x "
-                    f"t_ex={r['t_exchange_s']*1e6:.0f}us "
-                    f"exchanges={r['n_exchanges']}")
+    for sname, cname, strat in sweep_points(K):
+        sch = strat.schedule.runtime()
+        bfn = wire[cname]
+        for r in S.speedup_vs_M(sch, profile, Ms, steps, t_compute,
+                                lambda M, b=bfn: b(max(M, 2)),
+                                base=base):
+            wire_mb = (bfn(max(r["M"], 2)) * r["n_exchanges"] / 1e6
+                       if r["M"] > 1 else 0.0)
+            r.update({"schedule": sname, "compressor": cname,
+                      "strategy": strat.short_hash(),
+                      "wire_mb": round(wire_mb, 3)})
+            rows.append(r)
+            row(f"sched/{sname}/{cname}/M={r['M']}",
+                r["mean_step_s"] * 1e6,
+                f"speedup={r['speedup']:.2f}x "
+                f"t_ex={r['t_exchange_s']*1e6:.0f}us "
+                f"exchanges={r['n_exchanges']}")
 
     def mean_step(s, c, M):
         return next(r["mean_step_s"] for r in rows
@@ -239,8 +268,10 @@ def bench_sched(quick: bool, model_inputs=None, convergence: bool = True,
     frontier = []
     cum_wire_mb = 0.0
     for tau in taus:
-        sim = S.time_per_step(S.get("delayed", tau=tau), profile, M_f, steps,
-                              t_compute, wire["8bit"](M_f),
+        strat_tau = _wire_strategies()["8bit"].evolve(
+            schedule="delayed", staleness_tau=tau)
+        sim = S.time_per_step(strat_tau.schedule.runtime(), profile, M_f,
+                              steps, t_compute, wire["8bit"](M_f),
                               dataflow="server")
         wire_mb = wire["8bit"](M_f) * sim["n_exchanges"] / 1e6
         cum_wire_mb += wire_mb
@@ -249,6 +280,7 @@ def bench_sched(quick: bool, model_inputs=None, convergence: bool = True,
             # convergence run below is single-worker (sim-compressed, the
             # staleness effect isolated from worker averaging)
             "tau": tau, "clock_M": M_f,
+            "strategy": strat_tau.short_hash(),
             "mean_step_s": sim["mean_step_s"],
             "total_s": sim["total_s"],
             "n_exchanges": sim["n_exchanges"],
@@ -261,7 +293,8 @@ def bench_sched(quick: bool, model_inputs=None, convergence: bool = True,
         if convergence:
             final, _, _ = train_mixture_gan(
                 "DQGAN", steps=conv_steps,
-                dq_overrides={"schedule": "delayed", "staleness_tau": tau})
+                strategy_overrides={"schedule": "delayed",
+                                    "staleness_tau": tau})
             f_row.update({"conv_steps": conv_steps, "conv_workers": 1,
                           "modes": final["modes"],
                           "hq_frac": final["hq_frac"], "fid": final["fid"]})
@@ -362,9 +395,17 @@ def bench_comm(quick: bool, sim_steps: int = 0):
     import repro.configs as cfgs
     from repro import comm
     from repro.models import build
+    from repro.strategy import Strategy
 
+    # one Strategy object defines both modes' wire: the seed mode drops
+    # its comm plan (per-tensor exchange), the bucketed mode keeps it
+    strat = Strategy.from_legacy(exchange="two_phase",
+                                 compressor="qsgd8_linf",
+                                 comm_plan="uniform", bucket_mb=1.0)
+    kind, comp = strat.exchange.kind, strat.compression.compressor
     sim_steps = sim_steps or (10 if quick else 100)
-    out = {"sim_steps": sim_steps, "configs": {}}
+    out = {"sim_steps": sim_steps, "strategy": strat.to_json(),
+           "configs": {}}
     for arch in ("dcgan32", "gemma-2b"):
         cfg = cfgs.get(arch).reduced()
         bundle = build(cfg)
@@ -376,13 +417,11 @@ def bench_comm(quick: bool, sim_steps: int = 0):
             for mode in ("seed", "bucketed"):
                 if mode == "seed":
                     led = comm.CommLedger.from_tree(
-                        "two_phase", "qsgd8_linf", shapes, None, W)
+                        kind, comp, shapes, None, W)
                 else:
-                    layout = comm.build_layout(shapes, None, W,
-                                               bucket_bytes=1 << 20)
-                    plan = comm.plan_comm(layout, "qsgd8_linf", "uniform")
+                    layout, plan = strat.compression.build(shapes, None, W)
                     led = comm.CommLedger.from_plan(
-                        layout, plan, "two_phase", W, "qsgd8_linf")
+                        layout, plan, kind, W, comp)
                 led.tick(sim_steps)
                 s = led.summary()
                 rec[f"{mode}_W{W}"] = s
@@ -414,28 +453,50 @@ def check_sched_regression(current: dict, baseline: dict,
     Returns a list of human-readable failures: any row present in both
     whose modeled seconds/step or wire bytes grew by more than `tol`
     (improvements and new rows pass; convergence metrics are not gated —
-    they are host-independent but jax-version sensitive)."""
+    they are host-independent but jax-version sensitive).
+
+    Rows are matched by the STRUCTURAL identity of their strategy — the
+    `strategy.short_hash()` recorded per row — not by schedule/compressor
+    label, so a sweep whose "local_k" silently changed meaning (different
+    K, different exchange, ...) is a new row, never a bogus comparison;
+    a baseline predating the hashes is refused outright."""
     fails = []
 
-    def gate(cur_rows, base_rows, key_fields, label):
+    def gate(cur_rows, base_rows, key_fields, human_fields, label):
+        if base_rows and not all("strategy" in r for r in base_rows):
+            fails.append(
+                f"{label}: baseline rows carry no strategy hash "
+                f"(pre-strategy format) — regenerate the baseline with "
+                f"`python -m benchmarks.run --quick --only sched`")
+            return
         base_by_key = {tuple(r[k] for k in key_fields): r for r in base_rows}
+        matched = 0
         for r in cur_rows:
             b = base_by_key.get(tuple(r[k] for k in key_fields))
             if b is None:
                 continue
+            matched += 1
             for f in _GATED_FIELDS:
                 if f not in r or not b.get(f):
                     continue
                 if r[f] > b[f] * (1 + tol):
+                    who = ", ".join(f"{k}={r[k]}" for k in human_fields)
                     fails.append(
-                        f"{label}[{', '.join(f'{k}={r[k]}' for k in key_fields)}] "
+                        f"{label}[{who} @{r['strategy']}] "
                         f"{f}: {r[f]:.6g} vs baseline {b[f]:.6g} "
                         f"(+{(r[f] / b[f] - 1) * 100:.1f}% > {tol * 100:.0f}%)")
+        if base_rows and cur_rows and matched == 0:
+            # a sweep/schema change shifted EVERY hash: that is a stale
+            # baseline, not a clean bill of health
+            fails.append(
+                f"{label}: no current row matches any baseline row by "
+                f"strategy hash — the sweep or strategy schema changed; "
+                f"regenerate the baseline")
 
     gate(current.get("rows", []), baseline.get("rows", []),
-         ("schedule", "compressor", "M"), "sched")
+         ("strategy", "M"), ("schedule", "compressor", "M"), "sched")
     gate(current.get("tau_frontier", []), baseline.get("tau_frontier", []),
-         ("tau",), "tau_frontier")
+         ("strategy",), ("tau",), "tau_frontier")
     return fails
 
 

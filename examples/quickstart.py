@@ -7,14 +7,16 @@ mode coverage and the synthetic Fréchet distance for each.
 
     PYTHONPATH=src:. python examples/quickstart.py [--steps 1500]
 
-Going further — the communication subsystem (DESIGN.md §3): the full
-launcher exposes gradient bucketing + layer-wise compression planning
-and logs actual wire bytes per step:
+Each method is a point in the typed distribution-strategy lattice
+(repro.strategy, DESIGN.md §9) — the table prints each run's Strategy
+alongside its quality. Going further, the full launcher takes the same
+strategies by preset name or JSON and logs actual wire bytes per step:
 
     PYTHONPATH=src python -m repro.launch.train --arch dcgan32 --smoke \
-        --steps 50 --exchange two_phase --comm-plan uniform
+        --steps 50 --preset paper_dqgan
     PYTHONPATH=src python -m repro.launch.train --arch gemma-2b --smoke \
-        --steps 50 --comm-plan delta_budget --comm-budget-mb 1.0
+        --steps 50 --preset byte_budget
+    python -m repro.strategy            # list/validate all presets
 
 and `python -m benchmarks.run --only comm` writes the per-step /
 cumulative wire-byte comparison (seed per-tensor planner vs bucketed)
@@ -25,18 +27,20 @@ import sys
 
 sys.path.insert(0, ".")
 
-from benchmarks.gan_common import train_mixture_gan  # noqa: E402
+from benchmarks.gan_common import METHOD_STRATEGIES, train_mixture_gan  # noqa: E402
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--steps", type=int, default=1500)
     args = ap.parse_args()
-    print(f"{'method':14s} {'modes':>6s} {'hq_frac':>8s} {'fid':>9s}")
+    print(f"{'method':14s} {'modes':>6s} {'hq_frac':>8s} {'fid':>9s}  "
+          f"strategy")
     for method in ("CPOAdam", "CPOAdam-GQ", "DQGAN"):
         final, _, _ = train_mixture_gan(method, steps=args.steps)
+        strat = METHOD_STRATEGIES[method]
         print(f"{method:14s} {final['modes']:>5d}/8 {final['hq_frac']:>8.3f} "
-              f"{final['fid']:>9.4f}")
+              f"{final['fid']:>9.4f}  {strat.describe()}")
     print("\nDQGAN (quantized + EF) should match CPOAdam's quality with "
           "1/4 the gradient bytes; CPOAdam-GQ (no EF) degrades.")
 

@@ -14,7 +14,8 @@ sys.path.insert(0, ".")
 import jax
 import jax.numpy as jnp
 
-from benchmarks.gan_common import frechet_distance, random_features
+from benchmarks.gan_common import (METHOD_STRATEGIES, frechet_distance,
+                                   random_features)
 from repro.configs.base import DQConfig
 from repro.core.dqgan import DQGAN
 from repro.data import procedural_images
@@ -32,13 +33,14 @@ def main():
 
     cfg = GANConfig(name="dcgan32", image_size=32, channels=3, latent_dim=64,
                     base_width=16, weight_clip=0.05)
-    opts = {"DQGAN": ("omd", "qsgd8_linf", True, "update", 5e-4),
-            "CPOAdam": ("oadam", "identity", False, "grad", 2e-4),
-            "CPOAdam-GQ": ("oadam", "qsgd8_linf", False, "grad", 2e-4)}
-    optimizer, compressor, ef, message, lr = opts[args.method]
-    dq = DQConfig(optimizer=optimizer, compressor=compressor,
-                  error_feedback=ef, message=message, exchange="sim", lr=lr,
-                  worker_axes=())
+    # Per-method distribution strategy from the shared table (the typed
+    # repro.strategy API); optimizer knobs + this experiment's LRs here.
+    opts = {"DQGAN": ("omd", "update", 5e-4),
+            "CPOAdam": ("oadam", "grad", 2e-4),
+            "CPOAdam-GQ": ("oadam", "grad", 2e-4)}
+    optimizer, message, lr = opts[args.method]
+    dq = DQConfig.from_strategy(METHOD_STRATEGIES[args.method],
+                                optimizer=optimizer, message=message, lr=lr)
     key = jax.random.key(0)
     params = dcgan_init(key, cfg)
     tr = DQGAN(field_fn=gan_field_fn(cfg), dq=dq)

@@ -30,7 +30,16 @@ def _paths(tree):
     return out
 
 
-def save(path: str, tree: Any, step: Optional[int] = None) -> None:
+def save(path: str, tree: Any, step: Optional[int] = None,
+         meta: Optional[dict] = None) -> None:
+    """Save a pytree; `meta` entries (e.g. the run's serialized
+    distribution strategy under "strategy") are embedded in the archive's
+    __meta__ record and read back with `read_meta`."""
+    reserved = {"step", "names"} & set(meta or {})
+    if reserved:
+        raise ValueError(
+            f"checkpoint meta keys {sorted(reserved)} are reserved for the "
+            f"internal __meta__ record")
     os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
     named = _paths(tree)
     arrays = {}
@@ -42,9 +51,9 @@ def save(path: str, tree: Any, step: Optional[int] = None) -> None:
             arrays["__bf16__" + name] = arr.view(np.uint16)
         else:
             arrays[name] = arr
-    meta = {"step": step, "names": [n for n, _ in named]}
+    record = {"step": step, "names": [n for n, _ in named], **(meta or {})}
     with open(path, "wb") as f:
-        np.savez(f, __meta__=json.dumps(meta), **arrays)
+        np.savez(f, __meta__=json.dumps(record), **arrays)
 
 
 def restore(path: str, like: Any, shardings: Any = None) -> Any:
@@ -87,9 +96,50 @@ def restore(path: str, like: Any, shardings: Any = None) -> Any:
     return jax.tree_util.tree_unflatten(treedef, out)
 
 
+def read_meta(path: str) -> dict:
+    """The checkpoint's __meta__ record (step, names, embedded extras)."""
+    with np.load(path, allow_pickle=False) as z:
+        if "__meta__" not in z.files:
+            raise ValueError(
+                f"{path!r} is not a repro checkpoint: no __meta__ record "
+                f"in the archive")
+        return json.loads(str(z["__meta__"]))
+
+
 def latest_step(path: str) -> Optional[int]:
     if not os.path.exists(path):
         return None
-    with np.load(path, allow_pickle=False) as z:
-        meta = json.loads(str(z["__meta__"]))
-    return meta.get("step")
+    return read_meta(path).get("step")
+
+
+# strategy fields consumed only by the host-side wall-clock model — they
+# affect neither the DQState layout nor the training semantics, so a
+# resume may change them freely.
+_HOST_ONLY_FIELDS = ("participation.straggler_profile",)
+
+
+def verify_strategy(path: str, strategy: Any) -> None:
+    """Fail fast when `path` was saved under a different distribution
+    strategy than the resuming run's — a mismatched resume would silently
+    reinterpret the DQState.sched slots (accum vs pending ring) and EF
+    layout. Raises ValueError with the field-level diff (host-only fields
+    like the straggler profile are exempt). Checkpoints predating the
+    embedded strategy pass with a warning."""
+    from repro.strategy import Strategy
+
+    saved_json = read_meta(path).get("strategy")
+    if saved_json is None:
+        import warnings
+        warnings.warn(
+            f"checkpoint {path!r} has no embedded strategy (pre-strategy "
+            f"format); resume compatibility cannot be verified",
+            stacklevel=2)
+        return
+    saved = Strategy.from_json(saved_json)
+    lines = [ln for ln in saved.diff(strategy)
+             if not ln.startswith(_HOST_ONLY_FIELDS)]
+    if lines:
+        raise ValueError(
+            f"checkpoint {path!r} was saved under a different strategy "
+            f"than this run (saved != current):\n  " + "\n  ".join(lines)
+            + "\n— resume with the saved strategy, or start a fresh run")

@@ -29,6 +29,7 @@ from .ledger import (  # noqa: F401
     strategy_wire_bytes,
 )
 from .planner import (  # noqa: F401
+    ALL_POLICIES,
     BucketAssignment,
     CommPlan,
     POLICIES,

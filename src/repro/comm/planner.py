@@ -33,6 +33,9 @@ from repro.core import compressors as C
 from .buckets import BucketLayout
 
 POLICIES = ("uniform", "size_tiered", "delta_budget")
+# the full DQConfig.comm_plan / Compression.plan domain: "none" keeps the
+# seed per-tensor exchange, any planner policy routes through buckets
+ALL_POLICIES = ("none",) + POLICIES
 
 SMALL_ELEMS = 1 << 16           # size_tiered: "small" bucket threshold
 LADDER = ("qsgd4_linf", "sign")  # delta_budget downgrade rungs after base

@@ -8,6 +8,9 @@ this package exporting ``CONFIG`` (the exact assigned spec) — use
 from __future__ import annotations
 
 import dataclasses
+import sys
+import warnings
+from contextlib import contextmanager
 from dataclasses import dataclass, field
 from typing import Optional, Tuple
 
@@ -244,9 +247,50 @@ LONG_500K = InputShape("long_500k", 524_288, 1, "decode")
 SHAPES = {s.name: s for s in (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)}
 
 
+_STRATEGY_SHIM_DEPTH = 0
+
+
+def _inside_dataclasses_replace() -> bool:
+    """True when the running DQConfig.__init__ was invoked by
+    `dataclasses.replace`. A replace() call re-runs __post_init__, but the
+    caller is patching an already-constructed (already-warned, possibly
+    strategy-built) config — warning again would flag the blessed
+    `replace(dq, lr=...)` spelling as deprecated."""
+    try:
+        # this helper (0) <- __post_init__ (1) <- __init__ (2) <- caller (3)
+        f = sys._getframe(3)
+    except ValueError:
+        return False
+    # 3.13+ routes dataclasses.replace/copy.replace through _replace
+    return (f.f_code.co_name in ("replace", "_replace")
+            and f.f_code.co_filename.endswith("dataclasses.py"))
+
+
+@contextmanager
+def _building_from_strategy():
+    """Suppress the legacy-field deprecation warning while `from_strategy`
+    mirrors a Strategy into the flat fields."""
+    global _STRATEGY_SHIM_DEPTH
+    _STRATEGY_SHIM_DEPTH += 1
+    try:
+        yield
+    finally:
+        _STRATEGY_SHIM_DEPTH -= 1
+
+
 @dataclass(frozen=True)
 class DQConfig:
-    """DQGAN distributed-training settings (the paper's technique)."""
+    """DQGAN training settings: the optimizer/field knobs plus a thin
+    legacy shim over `repro.strategy.Strategy`.
+
+    The distribution axes (compressor, exchange, schedule, participation,
+    comm plan, ...) are owned by the typed `Strategy` API (DESIGN.md §9);
+    the flat fields below mirror it for backward compatibility and are
+    DEPRECATED as an input surface — construct a `Strategy` and use
+    ``DQConfig.from_strategy(strategy, optimizer=..., lr=...)``. Every
+    DQConfig carries a validated `.strategy` (built at construction, so
+    a bad combination raises `StrategyError` here, not at jit time).
+    """
     compressor: str = "qsgd8_linf"   # key into core.compressors.REGISTRY
     exchange: str = "sim"            # exact | sim | allgather | two_phase
     error_feedback: bool = True      # False -> CPOAdam-GQ style baseline
@@ -294,3 +338,44 @@ class DQConfig:
     # straggler profile name (sched.straggler) — consumed only by the
     # host-side wall-clock model, never by the jitted step.
     straggler_profile: str = "none"
+
+    # ------------------------------------------------------------------ #
+    # the strategy shim (repro.strategy, DESIGN.md §9)
+    # ------------------------------------------------------------------ #
+    def __post_init__(self):
+        from repro.strategy import LEGACY_FIELDS, Strategy
+
+        legacy = {k: getattr(self, k) for k in LEGACY_FIELDS}
+        # construction-time validation of the whole distribution lattice:
+        # a bad combination is a StrategyError (a ValueError) HERE.
+        strat = Strategy.from_legacy(**legacy)
+        object.__setattr__(self, "_strategy", strat)
+        if (_STRATEGY_SHIM_DEPTH == 0 and strat != Strategy()
+                and not _inside_dataclasses_replace()):
+            warnings.warn(
+                "passing distribution fields (compressor/exchange/"
+                "schedule/...) to DQConfig directly is deprecated; build "
+                "a repro.strategy.Strategy and use "
+                "DQConfig.from_strategy(strategy, ...)",
+                DeprecationWarning, stacklevel=3)
+
+    @property
+    def strategy(self):
+        """The validated `repro.strategy.Strategy` this config denotes."""
+        return self._strategy
+
+    @classmethod
+    def from_strategy(cls, strategy, **optim_fields) -> "DQConfig":
+        """The blessed constructor: a typed `Strategy` for the
+        distribution axes plus optimizer-side keywords (optimizer, lr,
+        message, extrapolation, lr_mults, betas, eps)."""
+        from repro.strategy import LEGACY_FIELDS
+
+        overlap = sorted(set(optim_fields) & set(LEGACY_FIELDS))
+        if overlap:
+            raise ValueError(
+                f"from_strategy: {overlap} are strategy fields — set them "
+                f"on the Strategy (e.g. strategy.evolve(...)), not as "
+                f"keywords")
+        with _building_from_strategy():
+            return cls(**strategy.legacy_fields(), **optim_fields)

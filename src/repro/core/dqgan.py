@@ -39,6 +39,7 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import DQConfig
+from repro.strategy import Strategy
 from . import compressors as C
 from . import exchange as X
 
@@ -85,29 +86,47 @@ def _is_shape(x):
 
 @dataclasses.dataclass(frozen=True)
 class DQGAN:
-    """Builder. Construct once per (model, mesh, DQConfig); then use
-    `.init(params)` and `.step` (jit the latter)."""
+    """Builder. Construct once per (model, mesh, Strategy/DQConfig); then
+    use `.init(params)` and `.step` (jit the latter).
+
+    The blessed spelling passes a `repro.strategy.Strategy` (optimizer
+    knobs via `dq=DQConfig.from_strategy(...)` when they matter); the
+    legacy flat `dq=DQConfig(...)` flag bag keeps working through the
+    shim. Either way `self.strategy` is the single validated dispatch
+    surface both SPMD paths consume."""
 
     field_fn: Callable  # (params, batch, rng) -> (grad_tree, metrics_dict)
-    dq: DQConfig
+    dq: Optional[DQConfig] = None
     mesh: Any = None                      # jax.sharding.Mesh | None (single proc)
     param_specs: Any = None               # pytree of PartitionSpec (model axes only)
     batch_spec: Any = None                # PartitionSpec for batch leaves
+    strategy: Optional[Strategy] = None   # distribution strategy (DESIGN.md §9)
     # (layout, plan) memo keyed by leaf shapes — _comm is hit several times
     # per trace (plans, EF init, exchange) and is pure host-side planning.
     _comm_cache: dict = dataclasses.field(
         default_factory=dict, compare=False, repr=False)
 
+    def __post_init__(self):
+        if self.dq is None:
+            dq = DQConfig.from_strategy(self.strategy or Strategy())
+            object.__setattr__(self, "dq", dq)
+        elif self.strategy is not None and self.strategy != self.dq.strategy:
+            raise ValueError(
+                "DQGAN: dq and strategy disagree:\n  "
+                + "\n  ".join(self.dq.strategy.diff(self.strategy)))
+        object.__setattr__(self, "strategy", self.dq.strategy)
+
     # ------------------------------------------------------------------ #
     @property
     def n_workers(self) -> int:
-        if not self.dq.worker_axes or self.mesh is None:
+        if not self.strategy.exchange.worker_axes or self.mesh is None:
             return 1
-        return math.prod(self.mesh.shape[a] for a in self.dq.worker_axes)
+        return math.prod(self.mesh.shape[a]
+                         for a in self.strategy.exchange.worker_axes)
 
     @property
     def compressor(self) -> C.Compressor:
-        return C.get(self.dq.compressor)
+        return self.strategy.compression.get()
 
     @property
     def uses_adam(self) -> bool:
@@ -115,46 +134,38 @@ class DQGAN:
 
     @property
     def bucketed(self) -> bool:
-        """True when the repro.comm flat-bucket exchange path is active.
-        The vmap SPMD style keeps the paper's per-tensor semantics (its
-        wire format is compiler-chosen anyway), so bucketing is a no-op
-        there."""
-        return self.dq.comm_plan != "none" and self.dq.spmd != "vmap"
+        """True when the repro.comm flat-bucket exchange path is active."""
+        return self.strategy.compression.bucketing
 
     def _comm(self, tree):
         """(BucketLayout, CommPlan) — static, derived from leaf shapes."""
-        from repro import comm as RC
-
         shapes = jax.tree.map(lambda x: tuple(x.shape), tree)
         cache_key = (jax.tree.structure(shapes, is_leaf=_is_shape),
                      tuple(jax.tree.leaves(shapes, is_leaf=_is_shape)))
         hit = self._comm_cache.get(cache_key)
         if hit is not None:
             return hit
-        layout = RC.build_layout(
-            shapes, self.param_specs, max(self.n_workers, 1),
-            bucket_bytes=int(self.dq.bucket_mb * (1 << 20)))
-        plan = RC.plan_comm(
-            layout, self.dq.compressor, self.dq.comm_plan,
-            budget_bytes=int(self.dq.comm_budget_mb * (1 << 20)))
-        self._comm_cache[cache_key] = (layout, plan)
-        return layout, plan
+        layout_plan = self.strategy.compression.build(
+            shapes, self.param_specs, self.n_workers)
+        self._comm_cache[cache_key] = layout_plan
+        return layout_plan
 
     def comm_ledger(self, params) -> "Any":
         """CommLedger describing this trainer's per-step wire cost (used by
         launch.train logs and benchmarks.run)."""
         from repro.comm import CommLedger
 
+        strat = self.strategy
         shapes = jax.tree.map(lambda x: tuple(x.shape), params)
         if self.bucketed:
             layout, cplan = self._comm(params)
             flat_plans = jax.tree.leaves(self._plans(params), is_leaf=_is_plan)
             leaf_plans = [flat_plans[s.index] for s in layout.skipped]
             return CommLedger.from_plan(
-                layout, cplan, self.dq.exchange, self.n_workers,
-                self.dq.compressor, leaf_plans=leaf_plans)
+                layout, cplan, strat.exchange.kind, self.n_workers,
+                strat.compression.compressor, leaf_plans=leaf_plans)
         return CommLedger.from_tree(
-            self.dq.exchange, self.dq.compressor, shapes,
+            strat.exchange.kind, strat.compression.compressor, shapes,
             self.param_specs, self.n_workers)
 
     def _plans(self, params):
@@ -162,12 +173,8 @@ class DQGAN:
         specs = self.param_specs
         if specs is None:
             specs = jax.tree.map(lambda x: P(), params)
-        plans = jax.tree.map(
-            lambda sh, sp: X.plan_leaf(self.dq.exchange, sh, sp, self.n_workers),
-            shapes, specs,
-            is_leaf=lambda x: isinstance(x, tuple)
-            and all(isinstance(i, int) for i in x),
-        )
+        plans = self.strategy.exchange.leaf_plans(shapes, specs,
+                                                  self.n_workers)
         if not self.bucketed:
             return plans
         # bucketed leaves leave the per-tensor machinery entirely; only the
@@ -200,34 +207,48 @@ class DQGAN:
     # ------------------------------------------------------------------ #
     def init(self, params) -> DQState:
         """Concrete zero state (small-scale runs/tests)."""
+        sched_c = self.strategy.schedule
         st = jax.tree.map(
             lambda s: jnp.zeros(s.shape, s.dtype) if hasattr(s, "shape") else s,
             self.init_abstract(params),
             is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct),
         )._replace(params=params, step=jnp.zeros((), jnp.int32))
-        if self.dq.schedule == "delayed":
+        if sched_c.kind == "delayed":
             # nothing applied yet: version −τ makes the staleness metric
             # (step − version) read exactly τ from the first exchange on
             st = st._replace(sched={
                 **st.sched,
                 "versions": jnp.full((max(self.n_workers, 1),),
-                                     -self.dq.staleness_tau, jnp.int32),
+                                     -sched_c.tau, jnp.int32),
             })
         return st
 
+    def _validate_lr_mults(self, params):
+        """DQConfig.lr_mults names top-level param groups (TTUR); a typo'd
+        group (e.g. "disc_" for "disc") was silently ignored — fail fast
+        against the actual tree instead."""
+        if not self.dq.lr_mults:
+            return
+        flat = jax.tree_util.tree_flatten_with_path(params)[0]
+        groups = {str(p[0].key) for p, _ in flat
+                  if p and hasattr(p[0], "key")}
+        unknown = sorted(k for k, _ in self.dq.lr_mults if k not in groups)
+        if unknown:
+            raise ValueError(
+                f"lr_mults group(s) {unknown} not found in the top-level "
+                f"param groups {sorted(groups)}")
+
     def init_abstract(self, params) -> DQState:
-        """ShapeDtypeStruct state with correct shardings (dry-run path)."""
+        """ShapeDtypeStruct state with correct shardings (dry-run path).
+
+        Strategy composition is validated at DQConfig/Strategy
+        construction, so no flag checks remain here."""
         W = self.n_workers
         dq = self.dq
-        if dq.staleness_tau < 1:
-            raise ValueError(
-                f"staleness_tau must be >= 1, got {dq.staleness_tau}")
-        if dq.staleness_tau != 1 and dq.schedule != "delayed":
-            raise ValueError(
-                f"staleness_tau={dq.staleness_tau} only meaningful with "
-                f"schedule='delayed', not {dq.schedule!r}")
+        strat = self.strategy
+        self._validate_lr_mults(params)
         plans = self._plans(params)
-        ef_dtype = jnp.dtype(dq.ef_dtype)
+        ef_dtype = jnp.dtype(strat.compression.ef_dtype)
 
         def sds(shape, dtype, spec):
             sharding = (
@@ -242,8 +263,10 @@ class DQGAN:
                 return sh.spec
             return P()
 
+        axes = strat.exchange.worker_axes
+
         def worker_spec(spec):
-            return P(dq.worker_axes, *spec)
+            return P(axes, *spec)
 
         def param_like(x):
             return sds(x.shape, x.dtype, pspec(x))
@@ -284,7 +307,7 @@ class DQGAN:
             # views of it), phase-2 owner error is per-bucket.
             layout, _ = self._comm(params)
             bucket_ef = {}
-            if dq.exchange == "two_phase":
+            if strat.exchange.kind == "two_phase":
                 for b in layout.buckets:
                     bucket_ef[str(b.bid)] = {
                         "e2": sds((W, b.size // max(W, 1)), ef_dtype,
@@ -298,27 +321,20 @@ class DQGAN:
             v = jax.tree.map(param_like, params)
 
         # repro.sched buffers carry the (float32) exchange message, one per
-        # worker, same sharding discipline as the EF residuals.
-        sched = None
-        if dq.schedule == "local_k":
-            sched = {"accum": jax.tree.map(
-                lambda x: per_worker_like(x, jnp.float32), params)}
-        elif dq.schedule == "delayed":
-            tau = dq.staleness_tau
-
-            def ring_like(x):
-                # (W, τ, *shape): τ in-flight messages per worker, oldest
-                # first. τ=1 keeps PR 2's (W, *shape) single-slot layout
-                # (and its compiled graph) bit-exactly.
-                if tau == 1:
-                    return per_worker_like(x, jnp.float32)
-                return sds((W, tau) + tuple(x.shape), jnp.float32,
-                           P(dq.worker_axes, None, *pspec(x)))
-
-            sched = {
-                "pending": jax.tree.map(ring_like, params),
-                "versions": sds((W,), jnp.int32, P(dq.worker_axes)),
-            }
+        # worker, same sharding discipline as the EF residuals. The
+        # schedule component owns WHICH slots exist (accum / pending ring /
+        # versions); the closures own shape+sharding.
+        sched = strat.schedule.init_slots(
+            params,
+            worker_like=lambda x: per_worker_like(x, jnp.float32),
+            # (W, τ, *shape): τ in-flight messages per worker, oldest
+            # first. τ=1 keeps PR 2's (W, *shape) single-slot layout
+            # (and its compiled graph) bit-exactly.
+            ring_like=lambda x: sds(
+                (W, strat.schedule.tau) + tuple(x.shape), jnp.float32,
+                P(axes, None, *pspec(x))),
+            versions_like=lambda: sds((W,), jnp.int32, P(axes)),
+        )
 
         return DQState(
             step=jax.ShapeDtypeStruct((), jnp.int32),
@@ -358,7 +374,8 @@ class DQGAN:
         and ``delayed`` run their collective every call and ignore it.
         """
         dq = self.dq
-        if dq.schedule == "local_k":
+        strat = self.strategy
+        if strat.schedule.kind == "local_k":
             if not isinstance(do_exchange, bool):
                 raise TypeError(
                     "schedule='local_k' needs a static Python bool "
@@ -367,7 +384,7 @@ class DQGAN:
         else:
             do_exchange = True
         plans = self._plans(state.params)
-        axes = tuple(dq.worker_axes)
+        axes = tuple(strat.exchange.worker_axes)
         W = self.n_workers
 
         if not axes or self.mesh is None or W == 1:
@@ -378,7 +395,7 @@ class DQGAN:
                 do_exchange=do_exchange,
             )
 
-        if dq.spmd == "vmap":
+        if strat.exchange.spmd == "vmap":
             return self._step_vmap(state, batch, key, W,
                                    do_exchange=do_exchange)
 
@@ -456,16 +473,17 @@ class DQGAN:
         from .error_feedback import compress_with_ef
 
         dq = self.dq
+        sched_c = self.strategy.schedule
         comp = self.compressor
         eta = dq.lr
-        schedule = dq.schedule
-        tau = dq.staleness_tau
+        schedule = sched_c.kind
 
         batch_w = jax.tree.map(
             lambda x: x.reshape((W, x.shape[0] // W) + x.shape[1:]), batch
         )
         widx = jnp.arange(W)
-        part_setup = self._participation_setup(key, state.step, W)
+        part_setup = self.strategy.participation.round_setup(
+            key, state.step, W, sched_c.period)
         has_part = part_setup is not None
         mask_vec = part_setup[0] if has_part else jnp.ones((W,), jnp.float32)
         n_part = part_setup[1] if has_part else W
@@ -474,12 +492,9 @@ class DQGAN:
         def worker(prev_g, ef, sw, b, i, mask):
             kw = jax.random.fold_in(jax.random.fold_in(key, i), state.step)
             kf, kq = jax.random.split(kw)
-            pending_buf = sw["pending"] if schedule == "delayed" else None
-            pending = None
-            if pending_buf is not None:
-                pending = (pending_buf if tau == 1
-                           else jax.tree.map(lambda r: r[0], pending_buf))
-            stale = self._staleness_correction(pending_buf)
+            pending_buf, pending = sched_c.wire_head(sw)
+            stale = sched_c.staleness_correction(pending_buf, dq.message,
+                                                 eta)
             if dq.optimizer == "omd" and dq.extrapolation == "local":
                 def extrap(w, g_prev, e, s):
                     upd = eta * g_prev
@@ -513,25 +528,10 @@ class DQGAN:
             else:
                 msg = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
 
-            exch = msg
-            new_sw = None
-            if schedule == "local_k":
-                if dq.local_k == 1 and do_exchange:
-                    # see _worker_body: keeps the graph (and FMA
-                    # contraction) bit-identical to every_step
-                    new_sw = {"accum": _tree_zeros(sw["accum"])}
-                else:
-                    accum = jax.tree.map(
-                        lambda a, m: (a + m).astype(a.dtype),
-                        sw["accum"], msg)
-                    exch = accum if do_exchange else None
-                    new_sw = {"accum": (_tree_zeros(accum) if do_exchange
-                                        else accum)}
-            elif schedule == "delayed":
-                exch = pending  # ring head: the step-(t−τ) message
-                new_sw = {"pending": self._shift_pending(pending_buf, msg),
-                          "versions": self._advance_version(
-                              sw["versions"], state.step, mask)}
+            # schedule dataflow — one component method shared with the
+            # shard_map path (accumulate / ring-shift / version advance)
+            exch, new_sw = sched_c.fold(sw, msg, pending, do_exchange,
+                                        state.step, mask, _tree_zeros)
 
             phat = enew = None
             if exch is not None:
@@ -597,8 +597,7 @@ class DQGAN:
         gn = _global_norm(grads_w)
         en = _global_norm(new_ef) if new_ef is not None else jnp.zeros(())
         if schedule == "delayed":
-            st_now = (state.step
-                      - new_sched["versions"]).astype(jnp.float32)
+            st_now = sched_c.staleness_now(state.step, new_sched)
             st_max, st_mean = jnp.max(st_now), jnp.mean(st_now)
         else:
             st_max = st_mean = jnp.zeros(())
@@ -616,9 +615,10 @@ class DQGAN:
         `widx_arr` is the (local size 1) slice of arange(W) sharded over
         the worker axes, or None outside shard_map."""
         dq = self.dq
+        sched_c = self.strategy.schedule
         W = self.n_workers
         eta = dq.lr
-        schedule = dq.schedule
+        schedule = sched_c.kind
 
         def takew(tree):
             if tree is None or not squeeze:
@@ -632,7 +632,8 @@ class DQGAN:
 
         # participation mask from the shared (pre-worker-fold) key so every
         # worker draws the same round permutation.
-        part_setup = self._participation_setup(key, state.step, W)
+        part_setup = self.strategy.participation.round_setup(
+            key, state.step, W, sched_c.period)
 
         widx = None
         if axes:
@@ -645,13 +646,9 @@ class DQGAN:
         prev_grad = takew(state.prev_grad)
         ef = takew(state.ef)
         sched_st = takew(state.sched)
-        tau = dq.staleness_tau
-        pending = None          # the message on the wire THIS step
-        pending_buf = None      # the raw schedule buffer (ring for τ>1)
-        if schedule == "delayed":
-            pending_buf = sched_st["pending"]
-            pending = (pending_buf if tau == 1
-                       else jax.tree.map(lambda r: r[0], pending_buf))
+        # pending_buf: the raw delayed-schedule buffer (ring for τ>1);
+        # pending: the message on the wire THIS step (its oldest slot)
+        pending_buf, pending = sched_c.wire_head(sched_st)
         part = None
         if part_setup is not None and widx is not None:
             part = (part_setup[0][widx], part_setup[1])
@@ -661,7 +658,7 @@ class DQGAN:
         # lookahead additionally subtracts the SUM of the worker's pending
         # (in-flight) messages as the staleness-correction proxy for the
         # τ outstanding q̂'s (DESIGN.md §8).
-        stale = self._staleness_correction(pending_buf)
+        stale = sched_c.staleness_correction(pending_buf, dq.message, eta)
         ef_leaf_tree = ef["leaf"] if (self.bucketed and ef is not None) else ef
         if dq.optimizer == "omd":
             if dq.extrapolation == "local":
@@ -705,31 +702,12 @@ class DQGAN:
         else:
             message = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
 
-        exch_msg = message
-        new_sched = None
-        if schedule == "local_k":
-            if dq.local_k == 1 and do_exchange:
-                # length-1 rounds: the accumulator is identically zero at
-                # every exchange; skipping the add keeps the compiled graph
-                # (hence XLA's FMA contraction) bit-identical to every_step.
-                new_sched = {"accum": _tree_zeros(sched_st["accum"])}
-            else:
-                accum = jax.tree.map(lambda a, m: (a + m).astype(a.dtype),
-                                     sched_st["accum"], message)
-                if do_exchange:
-                    exch_msg = accum
-                    new_sched = {"accum": _tree_zeros(accum)}
-                else:
-                    exch_msg = None  # mid-round: nothing on the wire
-                    new_sched = {"accum": accum}
-        elif schedule == "delayed":
-            exch_msg = pending  # exchange the step-(t−τ) message (ring head)
-            new_sched = {
-                "pending": self._shift_pending(pending_buf, message),
-                "versions": self._advance_version(
-                    sched_st["versions"], state.step,
-                    part[0] if part is not None else None),
-            }
+        # schedule dataflow — one component method shared with the vmap
+        # path: accumulate (local_k), ring-shift + version advance
+        # (delayed), or pass the fresh message through (every_step).
+        exch_msg, new_sched = sched_c.fold(
+            sched_st, message, pending, do_exchange, state.step,
+            part[0] if part is not None else None, _tree_zeros)
 
         # ---------- exchange + server-side update ------------------------- #
         if exch_msg is not None:
@@ -752,10 +730,7 @@ class DQGAN:
         gn = _global_norm(grads)
         en = _global_norm(new_ef) if new_ef is not None else jnp.zeros(())
         loss = metrics.get("loss", jnp.zeros(()))
-        if schedule == "delayed":
-            st_now = (state.step - new_sched["versions"]).astype(jnp.float32)
-        else:
-            st_now = jnp.zeros(())
+        st_now = sched_c.staleness_now(state.step, new_sched)
         st_max = st_mean = st_now
         if axes:
             loss = jax.lax.pmean(loss, axes)
@@ -781,63 +756,10 @@ class DQGAN:
         )
 
     # ------------------------------------------------------------------ #
-    # schedule/participation helpers (repro.sched, DESIGN.md §5)
+    # (the schedule/participation dataflow helpers live on the strategy
+    # components — Schedule.wire_head/fold/staleness_correction and
+    # Participation.round_setup — shared by both SPMD paths.)
     # ------------------------------------------------------------------ #
-    def _shift_pending(self, pending_buf, message):
-        """Next sched["pending"]: overwrite the single slot (τ=1, PR 2's
-        graph kept bit-identical) or shift the ring and append (τ>1).
-        Shared by the shard_map and vmap SPMD paths."""
-        if self.dq.staleness_tau == 1:
-            return jax.tree.map(lambda p, m: m.astype(p.dtype),
-                                pending_buf, message)
-        return jax.tree.map(
-            lambda r, m: jnp.concatenate([r[1:], m[None].astype(r.dtype)],
-                                         axis=0),
-            pending_buf, message)
-
-    def _advance_version(self, old_version, step, mask=None):
-        """Push/pull version after an exchange: a participating worker's
-        applied message was produced τ steps ago; a worker sitting the
-        round out (mask 0) keeps its old version — its staleness keeps
-        growing while the folded message rides the EF residual. Shared by
-        the shard_map and vmap SPMD paths."""
-        v_new = (step - self.dq.staleness_tau).astype(jnp.int32)
-        if mask is None:
-            return v_new
-        return jnp.where(mask > 0, v_new, old_version)
-
-    def _staleness_correction(self, pending_buf):
-        """The pending (delayed-schedule) message(s) in update units — the
-        worker's best local estimate of the in-flight global updates. For
-        τ>1 this sums the whole ring: all τ outstanding messages are
-        updates the server will apply before this worker's current one
-        (the τ-step recursion of DESIGN.md §8)."""
-        if pending_buf is None:
-            return None
-        if self.dq.staleness_tau > 1:
-            tot = jax.tree.map(lambda r: r.sum(axis=0), pending_buf)
-        else:
-            tot = pending_buf
-        if self.dq.message == "update":
-            return tot
-        return jax.tree.map(lambda p: self.dq.lr * p, tot)
-
-    def _participation_setup(self, key, step, W):
-        """(mask_vec (W,), n_part) for this round, or None for full
-        participation / single worker. Must be called with the shared key
-        (before the per-worker fold_in)."""
-        dq = self.dq
-        if dq.participation >= 1.0 or W <= 1:
-            return None
-        from repro.sched import participation as SP
-
-        n_part = SP.n_participants(dq.participation, W)
-        if n_part >= W:
-            return None
-        period = dq.local_k if dq.schedule == "local_k" else 1
-        round_idx = step // period
-        return SP.round_mask(key, round_idx, W, n_part), n_part
-
     def _server_update(self, state, qhat):
         """Apply the averaged message q̂ on (replicated) server state.
         Shared by the shard_map and vmap paths."""
@@ -858,8 +780,8 @@ class DQGAN:
         elif dq.optimizer in ("adam", "oadam"):
             # bias correction counts applied updates, not raw steps — with
             # local_k this runs only at round ends ((step+1) % K == 0).
-            period = dq.local_k if dq.schedule == "local_k" else 1
-            t = ((state.step + 1) // period).astype(jnp.float32)
+            t = ((state.step + 1)
+                 // self.strategy.schedule.period).astype(jnp.float32)
             b1, b2 = dq.beta1, dq.beta2
             new_m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state.m, qhat)
             new_v = jax.tree.map(
@@ -927,7 +849,8 @@ class DQGAN:
             out.append(q)
             new_ef.append(ne if ne else None)
         qhat = jax.tree.unflatten(treedef, out)
-        if ef is None and not dq.error_feedback and dq.exchange != "two_phase":
+        if (ef is None and not dq.error_feedback
+                and self.strategy.exchange.kind != "two_phase"):
             return qhat, None
         return qhat, jax.tree.unflatten(treedef, new_ef)
 
@@ -1040,7 +963,7 @@ class DQGAN:
         out_flats, new_e1_flats, new_bucket_ef = [], [], {}
         for b, assign in zip(layout.buckets, cplan.assignments):
             comp_b = C.get(assign.compressor)
-            plan_b = X.plan_bucket(dq.exchange, b.size, max(W, 1))
+            plan_b = self.strategy.exchange.bucket_plan(b.size, W)
             est = {}
             if dq.error_feedback:
                 est["e1"] = e1_flats[b.bid]
@@ -1083,7 +1006,8 @@ class DQGAN:
             skipped_new[s.index] = ne if ne else None
 
         qhat = jax.tree.unflatten(treedef, out_leaves)
-        if ef is None and not dq.error_feedback and dq.exchange != "two_phase":
+        if (ef is None and not dq.error_feedback
+                and self.strategy.exchange.kind != "two_phase"):
             return qhat, None
 
         in_bucket = {s.index for b in layout.buckets for s in b.slots}

@@ -29,6 +29,11 @@ whose padded length is always divisible by the worker count, and calls
 `exchange_leaf` with `plan_bucket` plans (chunk axis 0) — one collective
 per bucket instead of one per tensor, and no two_phase→sim fallbacks.
 Wire cost per strategy is accounted by comm.ledger.CommLedger.
+
+The typed front-end for choosing among these is
+`repro.strategy.ExchangePlan` (DESIGN.md §9): `ExchangePlan.leaf_plans`
+→ `plan_for_tree`, `ExchangePlan.bucket_plan` → `plan_bucket`, with the
+kind validated against `STRATEGIES` at construction.
 """
 from __future__ import annotations
 

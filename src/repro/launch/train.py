@@ -4,6 +4,19 @@ the local device set (CPU smoke / real TPU alike).
     PYTHONPATH=src python -m repro.launch.train --arch gemma-2b --smoke \
         --steps 100 --compressor qsgd8_linf --exchange sim
 
+Distribution strategy (repro.strategy, DESIGN.md §9): the strategy flags
+below are auto-generated from the typed component schemas; start from a
+preset or a serialized strategy and override per flag:
+
+    # the paper's setting by name:
+    ... --preset paper_dqgan
+
+    # a preset with one axis overridden:
+    ... --preset ssp_server --staleness-tau 2
+
+    # an exact strategy from a checkpoint / experiments JSON:
+    ... --strategy-json '{"schedule": {"kind": "delayed", "tau": 4}}'
+
 Communication planning (repro.comm, DESIGN.md §3): pass ``--comm-plan`` to
 bucket the gradient pytree into flat worker-divisible buckets and assign a
 compressor per bucket; each log line then carries the wire-telemetry
@@ -48,13 +61,14 @@ from __future__ import annotations
 import argparse
 import json
 import time
+import zipfile
 
 import jax
 import jax.numpy as jnp
 
 import repro.configs as cfgs
 from repro import checkpoint
-from repro import sched as schedlib
+from repro import strategy as strategy_api
 from repro.configs.base import DQConfig
 from repro.core.dqgan import DQGAN
 from repro.data import lm_batch_iterator
@@ -75,30 +89,11 @@ def main(argv=None):
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--lr", type=float, default=3e-3)
     ap.add_argument("--optimizer", default="oadam")
-    ap.add_argument("--compressor", default="qsgd8_linf")
-    ap.add_argument("--exchange", default="sim")
-    ap.add_argument("--no-error-feedback", action="store_true")
-    ap.add_argument("--comm-plan", default="none",
-                    choices=("none", "uniform", "size_tiered", "delta_budget"),
-                    help="repro.comm bucketing + layer-wise planner policy")
-    ap.add_argument("--bucket-mb", type=float, default=4.0,
-                    help="f32 MiB per gradient bucket")
-    ap.add_argument("--comm-budget-mb", type=float, default=0.0,
-                    help="delta_budget policy: payload MiB/step target")
-    ap.add_argument("--schedule", default="every_step",
-                    choices=schedlib.SCHEDULES,
-                    help="repro.sched exchange schedule")
-    ap.add_argument("--local-k", type=int, default=1,
-                    help="local_k schedule: exchange every K steps")
-    ap.add_argument("--staleness-tau", type=int, default=1,
-                    help="delayed schedule: bounded-staleness pipeline "
-                         "depth τ (message exchanged at step t was "
-                         "produced at step t−τ)")
-    ap.add_argument("--participation", type=float, default=1.0,
-                    help="fraction of workers sampled per exchange round")
-    ap.add_argument("--straggler-profile", default="none",
-                    choices=sorted(sstrag.PROFILES),
-                    help="heterogeneity profile for the wall-clock model")
+    # the distribution-strategy surface is generated from the
+    # repro.strategy component schemas (one definition for the dataclass,
+    # the JSON schema and these flags) — includes --preset/--strategy-json
+    # and the legacy spellings (--compressor, --schedule, ...).
+    strategy_api.add_strategy_args(ap)
     ap.add_argument("--checkpoint", default="",
                     help="save the full DQState here (end of run + "
                          "--checkpoint-every)")
@@ -109,11 +104,6 @@ def main(argv=None):
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
-    if args.comm_plan == "delta_budget" and args.comm_budget_mb <= 0:
-        ap.error("--comm-plan delta_budget requires --comm-budget-mb > 0")
-    if args.staleness_tau != 1 and args.schedule != "delayed":
-        ap.error("--staleness-tau requires --schedule delayed")
-    sched = schedlib.get(args.schedule, args.local_k, args.staleness_tau)
 
     cfg = cfgs.get(args.arch)
     if args.smoke:
@@ -134,17 +124,16 @@ def main(argv=None):
         worker_axes = ("data",)
         bspec = P(("data",))
 
-    dq = DQConfig(
-        compressor=args.compressor, exchange=args.exchange,
-        error_feedback=not args.no_error_feedback,
-        optimizer=args.optimizer, lr=args.lr, worker_axes=worker_axes,
+    try:
+        strat = strategy_api.strategy_from_args(args,
+                                                worker_axes=worker_axes)
+    except strategy_api.StrategyError as e:
+        ap.error(str(e))
+    sched = strat.schedule.runtime()
+
+    dq = DQConfig.from_strategy(
+        strat, optimizer=args.optimizer, lr=args.lr,
         message="update" if args.optimizer == "omd" else "grad",
-        comm_plan=args.comm_plan, bucket_mb=args.bucket_mb,
-        comm_budget_mb=args.comm_budget_mb,
-        schedule=args.schedule, local_k=args.local_k,
-        staleness_tau=args.staleness_tau,
-        participation=args.participation,
-        straggler_profile=args.straggler_profile,
     )
     key = jax.random.key(args.seed)
     params = bundle.init(key, max_seq=args.seq)
@@ -166,24 +155,28 @@ def main(argv=None):
     start = 0
     state = trainer.init(params)
     if args.resume:
+        try:
+            checkpoint.verify_strategy(args.resume, strat)
+        except (ValueError, OSError, zipfile.BadZipFile) as e:
+            # strategy mismatch, missing file, or corrupt archive — all
+            # refuse cleanly instead of a restore-time traceback
+            raise SystemExit(f"--resume refused:\n{e}") from None
         state = checkpoint.restore(args.resume, state, state_shardings())
         start = int(jax.device_get(state.step))
         print(f"# resumed from {args.resume} at step {start}", flush=True)
     step = jax.jit(trainer.step, static_argnums=(3,), donate_argnums=(0,))
 
     ledger = trainer.comm_ledger(params)
-    if args.comm_plan != "none":
+    if strat.compression.bucketing:
         layout, cplan = trainer._comm(params)
         print(f"# comm: {layout.describe()}", flush=True)
         print(f"# comm: {cplan.describe()}", flush=True)
-    profile = sstrag.get_profile(args.straggler_profile)
+    profile = strat.participation.profile()
     link = sclock.LinkModel()
     W = max(trainer.n_workers, 1)
     t_ex = link.exchange_time(ledger.wire_bytes_per_step) if W > 1 else 0.0
-    if args.schedule != "every_step" or args.straggler_profile != "none":
-        print(f"# sched: {sched.describe()} participation="
-              f"{args.participation} profile={profile.describe()}",
-              flush=True)
+    print(f"# strategy: {strat.describe()} [{strat.short_hash()}]",
+          flush=True)
 
     if getattr(cfg, "arch_type", "") == "gan":
         it = gan_batch_iterator(args.seed, args.batch, cfg)
@@ -217,7 +210,7 @@ def main(argv=None):
                 times = sstrag.step_times(profile, W, args.steps, args.seed,
                                           base=base)
                 wall_series = sclock.simulate(
-                    sched, times, t_ex, args.participation,
+                    sched, times, t_ex, strat.participation.fraction,
                     args.seed)["per_step_s"]
                 if i > start:  # backfill the steps already run
                     ledger.tick(0, wall_s=float(wall_series[start:i].sum()))
@@ -233,7 +226,7 @@ def main(argv=None):
                        **({"staleness_max": float(m["staleness_max"]),
                            "staleness_mean": round(
                                float(m["staleness_mean"]), 2)}
-                          if args.schedule == "delayed" else {}),
+                          if strat.schedule.kind == "delayed" else {}),
                        "wire_mb_step": round(
                            ledger.wire_bytes_per_step / 1e6, 3),
                        "cum_wire_mb": round(
@@ -246,10 +239,12 @@ def main(argv=None):
             if (args.checkpoint and args.checkpoint_every
                     and (i + 1) % args.checkpoint_every == 0
                     and i != args.steps - 1):
-                checkpoint.save(args.checkpoint, state, step=i + 1)
+                checkpoint.save(args.checkpoint, state, step=i + 1,
+                                meta={"strategy": strat.to_json()})
     if args.checkpoint:
         checkpoint.save(args.checkpoint, state,
-                        step=int(jax.device_get(state.step)))
+                        step=int(jax.device_get(state.step)),
+                        meta={"strategy": strat.to_json()})
         print(f"saved DQState to {args.checkpoint}")
     return history
 

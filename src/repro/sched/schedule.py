@@ -30,6 +30,12 @@ delayed    : bounded-staleness exchange with pipeline depth τ (>= 1).
 
 `is_exchange_step` takes the 0-based step index; with `local_k` the
 exchange fires on steps K-1, 2K-1, ... so every round closes with one.
+
+The typed front-end is `repro.strategy.Schedule` (DESIGN.md §9) —
+constructors `every_step()`/`local_k(K)`/`delayed(tau)` whose
+`.runtime()` resolves to an `ExchangeSchedule` here; the in-step
+dataflow (accumulate / ring-shift / staleness correction) lives on that
+component, shared by both SPMD paths of `core.dqgan`.
 """
 from __future__ import annotations
 

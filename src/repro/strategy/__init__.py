@@ -1,0 +1,26 @@
+"""repro.strategy — the typed, composable distribution-strategy API
+(DESIGN.md §9).
+
+A `Strategy` composes four frozen components — `Compression` (what goes
+on the wire), `ExchangePlan` (how it moves), `Schedule` (when workers
+talk) and `Participation` (who talks) — with cross-field validation at
+construction (`StrategyError`), a preset registry (`PRESETS`,
+`get_preset`) and an exact canonical-JSON round-trip
+(`Strategy.to_json`/`from_json`, hashed by `short_hash()` for the CI
+regression gate and the checkpoint resume guard).
+
+`core.dqgan.DQGAN` consumes a `Strategy` (directly, or via the
+`configs.base.DQConfig` legacy shim); `strategy.cli` generates
+`launch.train`'s flag surface from the component schemas.
+"""
+from .cli import add_strategy_args, strategy_from_args  # noqa: F401
+from .components import (  # noqa: F401
+    SPMD_STYLES,
+    Compression,
+    ExchangePlan,
+    Participation,
+    Schedule,
+    StrategyError,
+)
+from .presets import PRESETS, get_preset, register_preset  # noqa: F401
+from .strategy import LEGACY_FIELDS, Strategy  # noqa: F401

@@ -1,0 +1,37 @@
+"""Preset-instantiation smoke: ``python -m repro.strategy``.
+
+Constructs every registry preset, asserts the exact JSON round-trip, and
+prints one line per preset (name, structural hash, description). The CI
+matrix runs this next to ``launch.train --help`` so a broken preset or a
+schema/CLI drift fails fast. ``--json NAME`` dumps one preset's JSON.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from . import PRESETS, Strategy, get_preset
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.strategy")
+    ap.add_argument("--json", metavar="NAME", default="",
+                    help="print one preset's canonical JSON and exit")
+    args = ap.parse_args(argv)
+    if args.json:
+        print(get_preset(args.json).to_json())
+        return 0
+    bad = 0
+    for name in sorted(PRESETS):
+        st = PRESETS[name]
+        back = Strategy.from_json(st.to_json())
+        ok = back == st and back.to_json() == st.to_json()
+        bad += not ok
+        print(f"{name:24s} {st.short_hash()} "
+              f"{'ok ' if ok else 'ROUND-TRIP MISMATCH '}{st.describe()}")
+    print(f"{len(PRESETS)} presets, {bad} failures")
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

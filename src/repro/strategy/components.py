@@ -1,0 +1,424 @@
+"""Typed, frozen distribution-strategy components (DESIGN.md §9).
+
+Each component owns one axis of the paper's composition — *what* goes on
+the wire (`Compression`), *how* workers move it (`ExchangePlan`), *when*
+they talk (`Schedule`) and *who* talks (`Participation`) — and validates
+its own fields at construction so a bad spelling is a one-line
+`StrategyError` naming the field, not a jit-time stack trace. The
+components are plain frozen dataclasses: hashable (jit-static safe),
+comparable, and serializable field-by-field (strategy.py holds the JSON
+round-trip and the cross-field validation of the composed `Strategy`).
+
+The runtime dispatch that `core.dqgan` used to do by string-matching
+`DQConfig` flags lives here as component methods: `Schedule.init_slots`/
+`wire_head`/`fold`/`staleness_correction` implement the per-step schedule
+dataflow shared by both SPMD paths, `Compression.build` produces the
+bucket layout + per-bucket compressor plan, `ExchangePlan.leaf_plans`
+plans the per-tensor collectives, and `Participation.round_setup` draws
+the shared round mask.
+
+Every field that is a CLI knob carries ``metadata`` with its legacy flag
+spelling — `strategy.cli` generates the `launch.train` argparse surface
+from these schemas, so the flag set, the dataclass and the JSON schema
+cannot drift apart.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class StrategyError(ValueError):
+    """A mis-composed distribution strategy, raised at construction time.
+
+    Subclasses ValueError so legacy call sites (and tests) that guarded
+    the old jit-time `ValueError`s keep working."""
+
+
+def _cli(legacy: str, help_: str, choices: Optional[Callable] = None) -> dict:
+    """Field metadata for the auto-generated CLI: ``legacy`` is the
+    DQConfig field / argparse dest name (the flag is ``--legacy-name``;
+    booleans additionally get a generated ``--no-`` negation), ``choices``
+    is a thunk evaluated at parser-build time (registries may grow after
+    import)."""
+    return {"legacy": legacy, "help": help_, "choices": choices,
+            "flag": "--" + legacy.replace("_", "-")}
+
+
+def _compressor_names():
+    from repro.core import compressors as C
+    return tuple(sorted(C.REGISTRY))
+
+
+def _plan_policies():
+    from repro.comm.planner import ALL_POLICIES
+    return ALL_POLICIES
+
+
+def _exchange_kinds():
+    from repro.core.exchange import STRATEGIES
+    return STRATEGIES
+
+
+def _schedule_kinds():
+    from repro.sched.schedule import SCHEDULES
+    return SCHEDULES
+
+
+def _straggler_profiles():
+    from repro.sched.straggler import PROFILES
+    return tuple(sorted(PROFILES))
+
+
+SPMD_STYLES = ("shard_map", "vmap")
+
+
+# --------------------------------------------------------------------------- #
+@dataclass(frozen=True)
+class Compression:
+    """WHAT goes on the wire: the δ-approximate compressor, error
+    feedback, and the repro.comm bucket/planner pipeline."""
+
+    compressor: str = field(default="qsgd8_linf", metadata=_cli(
+        "compressor", "key into core.compressors.REGISTRY",
+        _compressor_names))
+    error_feedback: bool = field(default=True, metadata=_cli(
+        "error_feedback", "carry the compression residual (paper EF)"))
+    ef_dtype: str = field(default="float32", metadata=_cli(
+        "ef_dtype", "dtype of the EF residuals (bf16 halves EF memory)"))
+    plan: str = field(default="none", metadata=_cli(
+        "comm_plan", "repro.comm bucketing + layer-wise planner policy",
+        _plan_policies))
+    bucket_mb: float = field(default=4.0, metadata=_cli(
+        "bucket_mb", "f32 MiB per gradient bucket"))
+    budget_mb: float = field(default=0.0, metadata=_cli(
+        "comm_budget_mb", "delta_budget policy: payload MiB/step target"))
+
+    def __post_init__(self):
+        from repro.core import compressors as C
+        if self.compressor not in C.REGISTRY:
+            raise StrategyError(
+                f"compression.compressor: unknown compressor "
+                f"{self.compressor!r}; have {sorted(C.REGISTRY)}")
+        try:
+            dt = jnp.dtype(self.ef_dtype)
+        except TypeError as e:
+            raise StrategyError(
+                f"compression.ef_dtype: {self.ef_dtype!r} is not a dtype "
+                f"({e})") from None
+        if not jnp.issubdtype(dt, jnp.floating):
+            raise StrategyError(
+                f"compression.ef_dtype: residuals need a floating dtype, "
+                f"got {self.ef_dtype!r}")
+        if self.plan not in _plan_policies():
+            raise StrategyError(
+                f"compression.plan: unknown comm plan {self.plan!r}; "
+                f"have {_plan_policies()}")
+        if self.bucket_mb <= 0:
+            raise StrategyError(
+                f"compression.bucket_mb: must be > 0, got {self.bucket_mb}")
+        if self.budget_mb < 0:
+            raise StrategyError(
+                f"compression.budget_mb: must be >= 0, got {self.budget_mb}")
+        if self.plan == "delta_budget" and self.budget_mb <= 0:
+            raise StrategyError(
+                "compression.budget_mb: plan='delta_budget' needs a "
+                "positive per-step byte budget (set budget_mb / "
+                "--comm-budget-mb)")
+        if self.plan != "delta_budget" and self.budget_mb > 0:
+            raise StrategyError(
+                f"compression.budget_mb: a byte budget only applies to "
+                f"plan='delta_budget', not plan={self.plan!r}")
+
+    # ------------------------------------------------------------------ #
+    def get(self):
+        """The base Compressor instance."""
+        from repro.core import compressors as C
+        return C.get(self.compressor)
+
+    @property
+    def bucketing(self) -> bool:
+        """True when the flat-bucket exchange path is active (Strategy
+        construction refuses a plan with spmd='vmap', whose per-tensor
+        semantics cannot bucket)."""
+        return self.plan != "none"
+
+    def build(self, shapes_tree, param_specs, n_workers: int):
+        """(BucketLayout, CommPlan): the planner+compressor pipeline,
+        statically derived from leaf shapes (DESIGN.md §3)."""
+        from repro import comm as RC
+        layout = RC.build_layout(
+            shapes_tree, param_specs, max(n_workers, 1),
+            bucket_bytes=int(self.bucket_mb * (1 << 20)))
+        plan = RC.plan_comm(
+            layout, self.compressor, self.plan,
+            budget_bytes=int(self.budget_mb * (1 << 20)))
+        return layout, plan
+
+
+# --------------------------------------------------------------------------- #
+@dataclass(frozen=True)
+class ExchangePlan:
+    """HOW the message moves: the collective strategy, the SPMD style
+    implementing it, and the mesh axes acting as the paper's M workers."""
+
+    kind: str = field(default="sim", metadata=_cli(
+        "exchange", "collective strategy", _exchange_kinds))
+    spmd: str = field(default="shard_map", metadata=_cli(
+        "spmd", "worker SPMD style (DESIGN.md §2)", lambda: SPMD_STYLES))
+    worker_axes: Tuple[str, ...] = ("data",)
+
+    def __post_init__(self):
+        if self.kind not in _exchange_kinds():
+            raise StrategyError(
+                f"exchange.kind: unknown exchange {self.kind!r}; "
+                f"have {_exchange_kinds()}")
+        if self.spmd not in SPMD_STYLES:
+            raise StrategyError(
+                f"exchange.spmd: unknown SPMD style {self.spmd!r}; "
+                f"have {SPMD_STYLES}")
+        axes = self.worker_axes
+        if isinstance(axes, list):
+            axes = tuple(axes)
+            object.__setattr__(self, "worker_axes", axes)
+        if not isinstance(axes, tuple) or not all(
+                isinstance(a, str) and a for a in axes):
+            raise StrategyError(
+                f"exchange.worker_axes: need a tuple of mesh-axis names, "
+                f"got {self.worker_axes!r}")
+
+    # ------------------------------------------------------------------ #
+    def leaf_plans(self, shapes_tree, specs_tree, n_workers: int):
+        """Per-tensor collective plans (core.exchange.plan_leaf over the
+        tree)."""
+        from repro.core import exchange as X
+        return X.plan_for_tree(self.kind, shapes_tree, specs_tree,
+                               n_workers)
+
+    def bucket_plan(self, size: int, n_workers: int) -> dict:
+        from repro.core import exchange as X
+        return X.plan_bucket(self.kind, size, max(n_workers, 1))
+
+    def modeled_wire_bytes(self, compressor: str, n_elems: int,
+                           n_workers: int) -> int:
+        """Analytic per-worker bytes of one exchange of `n_elems` floats."""
+        from repro.core import compressors as C
+        from repro.core import exchange as X
+        return X.modeled_wire_bytes(self.kind, C.get(compressor),
+                                    (n_elems,), n_workers)
+
+
+# --------------------------------------------------------------------------- #
+@dataclass(frozen=True)
+class Schedule:
+    """WHEN workers talk: exchange cadence (k) × staleness (tau). Use the
+    constructors — `Schedule.every_step()`, `Schedule.local_k(K)`,
+    `Schedule.delayed(tau)` — rather than spelling kind/k/tau by hand."""
+
+    kind: str = field(default="every_step", metadata=_cli(
+        "schedule", "repro.sched exchange schedule", _schedule_kinds))
+    k: int = field(default=1, metadata=_cli(
+        "local_k", "local_k schedule: exchange every K steps"))
+    tau: int = field(default=1, metadata=_cli(
+        "staleness_tau", "delayed schedule: bounded-staleness pipeline "
+                         "depth τ"))
+
+    def __post_init__(self):
+        if self.kind not in _schedule_kinds():
+            raise StrategyError(
+                f"schedule.kind: unknown schedule {self.kind!r}; "
+                f"have {_schedule_kinds()}")
+        if self.k < 1:
+            raise StrategyError(f"schedule.k: must be >= 1, got {self.k}")
+        if self.kind != "local_k" and self.k != 1:
+            raise StrategyError(
+                f"schedule.k: k={self.k} only meaningful with "
+                f"kind='local_k', not {self.kind!r}")
+        if self.tau < 1:
+            raise StrategyError(
+                f"schedule.tau: must be >= 1, got {self.tau}")
+        if self.kind != "delayed" and self.tau != 1:
+            raise StrategyError(
+                f"schedule.tau: tau={self.tau} only meaningful with "
+                f"kind='delayed', not {self.kind!r}")
+
+    # ---- constructors ------------------------------------------------- #
+    @classmethod
+    def every_step(cls) -> "Schedule":
+        """Seed semantics: one lockstep exchange per step."""
+        return cls("every_step")
+
+    @classmethod
+    def local_k(cls, K: int) -> "Schedule":  # noqa: N802 (K is the paper's)
+        """Exchange every K steps; the message accumulates in between."""
+        return cls("local_k", k=K)
+
+    @classmethod
+    def delayed(cls, tau: int = 1) -> "Schedule":
+        """Bounded-staleness exchange overlapping compute: step t applies
+        the message produced at step t−τ (DESIGN.md §8)."""
+        return cls("delayed", tau=tau)
+
+    # ---- host-side arithmetic (delegated to sched.ExchangeSchedule) --- #
+    def runtime(self):
+        """The repro.sched.ExchangeSchedule engine for this point."""
+        from repro import sched as S
+        return S.get(self.kind, self.k, self.tau)
+
+    @property
+    def period(self) -> int:
+        return self.k if self.kind == "local_k" else 1
+
+    @property
+    def staleness(self) -> int:
+        return self.tau if self.kind == "delayed" else 0
+
+    def describe(self) -> str:
+        return self.runtime().describe()
+
+    # ---- in-step dataflow (shared by both SPMD paths of core.dqgan) --- #
+    def init_slots(self, params, worker_like, ring_like, versions_like):
+        """The DQState.sched buffers for this schedule, or None.
+
+        `worker_like(leaf)` makes a per-worker (W, *shape) f32 slot,
+        `ring_like(leaf)` a (W, τ, *shape) ring, `versions_like()` the
+        (W,) int32 version vector — the caller owns shape/sharding."""
+        if self.kind == "every_step":
+            return None
+        if self.kind == "local_k":
+            return {"accum": jax.tree.map(worker_like, params)}
+        pending = jax.tree.map(
+            worker_like if self.tau == 1 else ring_like, params)
+        return {"pending": pending, "versions": versions_like()}
+
+    def wire_head(self, sched_state):
+        """(pending_buf, head): the raw delayed-schedule ring buffer and
+        the message on the wire THIS step (its oldest slot), or
+        (None, None) for the other schedules."""
+        if self.kind != "delayed":
+            return None, None
+        buf = sched_state["pending"]
+        head = buf if self.tau == 1 else jax.tree.map(lambda r: r[0], buf)
+        return buf, head
+
+    def staleness_correction(self, pending_buf, message: str, lr: float):
+        """The delayed worker's in-flight messages in update units — the
+        staleness-correction proxy added to the OMD lookahead. For τ>1
+        this sums the whole ring: all τ outstanding messages land at the
+        server before the current one (the τ-step recursion of
+        DESIGN.md §8)."""
+        if pending_buf is None:
+            return None
+        if self.tau > 1:
+            tot = jax.tree.map(lambda r: r.sum(axis=0), pending_buf)
+        else:
+            tot = pending_buf
+        if message == "update":
+            return tot
+        return jax.tree.map(lambda p: lr * p, tot)
+
+    def shift(self, pending_buf, new_message):
+        """Next pending buffer: overwrite the single slot (τ=1, PR 2's
+        compiled graph kept bit-identical) or shift the ring and append
+        (τ>1)."""
+        if self.tau == 1:
+            return jax.tree.map(lambda p, m: m.astype(p.dtype),
+                                pending_buf, new_message)
+        return jax.tree.map(
+            lambda r, m: jnp.concatenate(
+                [r[1:], m[None].astype(r.dtype)], axis=0),
+            pending_buf, new_message)
+
+    def advance_version(self, old_version, step, mask=None):
+        """Push/pull version after an exchange: a participating worker's
+        applied message was produced τ steps ago; a worker sitting the
+        round out (mask 0) keeps its old version — its staleness keeps
+        growing while the folded message rides the EF residual."""
+        v_new = (step - self.tau).astype(jnp.int32)
+        if mask is None:
+            return v_new
+        return jnp.where(mask > 0, v_new, old_version)
+
+    def fold(self, sched_state, message, head, do_exchange, step, mask,
+             zeros: Callable[[Any], Any]):
+        """One step of schedule dataflow: (exchange_message | None,
+        new_sched_state | None). `message` is this step's fresh message,
+        `head` the delayed ring head from `wire_head`, `zeros(tree)` the
+        caller's zero-like."""
+        if self.kind == "every_step":
+            return message, None
+        if self.kind == "local_k":
+            if self.k == 1 and do_exchange:
+                # length-1 rounds: the accumulator is identically zero at
+                # every exchange; skipping the add keeps the compiled
+                # graph (hence XLA's FMA contraction) bit-identical to
+                # every_step.
+                return message, {"accum": zeros(sched_state["accum"])}
+            accum = jax.tree.map(lambda a, m: (a + m).astype(a.dtype),
+                                 sched_state["accum"], message)
+            if do_exchange:
+                return accum, {"accum": zeros(accum)}
+            return None, {"accum": accum}  # mid-round: nothing on the wire
+        # delayed: exchange the step-(t−τ) message (ring head)
+        return head, {
+            "pending": self.shift(sched_state["pending"], message),
+            "versions": self.advance_version(
+                sched_state["versions"], step, mask),
+        }
+
+    def staleness_now(self, step, new_sched):
+        """Per-worker staleness (step − version) after this step's
+        exchange, or scalar 0 for staleness-free schedules."""
+        if self.kind != "delayed":
+            return jnp.zeros(())
+        return (step - new_sched["versions"]).astype(jnp.float32)
+
+
+# --------------------------------------------------------------------------- #
+@dataclass(frozen=True)
+class Participation:
+    """WHO talks each round: the sampled worker fraction, plus the
+    heterogeneity profile consumed by the host-side wall-clock model
+    (never by the jitted step)."""
+
+    fraction: float = field(default=1.0, metadata=_cli(
+        "participation", "fraction of workers sampled per exchange round"))
+    straggler_profile: str = field(default="none", metadata=_cli(
+        "straggler_profile", "heterogeneity profile for the wall-clock "
+                             "model", _straggler_profiles))
+
+    def __post_init__(self):
+        if not 0.0 < self.fraction <= 1.0:
+            raise StrategyError(
+                f"participation.fraction: must be in (0, 1], got "
+                f"{self.fraction}")
+        if self.straggler_profile not in _straggler_profiles():
+            raise StrategyError(
+                f"participation.straggler_profile: unknown profile "
+                f"{self.straggler_profile!r}; have {_straggler_profiles()}")
+
+    # ------------------------------------------------------------------ #
+    @property
+    def partial(self) -> bool:
+        return self.fraction < 1.0
+
+    def profile(self):
+        from repro.sched import straggler as strag
+        return strag.get_profile(self.straggler_profile)
+
+    def round_setup(self, key, step, n_workers: int, period: int):
+        """(mask_vec (W,), n_participants) for this round, or None for
+        full participation / a single worker. Must be called with the
+        shared key (before the per-worker fold_in) so every worker draws
+        the same round permutation."""
+        if not self.partial or n_workers <= 1:
+            return None
+        from repro.sched import participation as SP
+        n_part = SP.n_participants(self.fraction, n_workers)
+        if n_part >= n_workers:
+            return None
+        return SP.round_mask(key, step // period, n_workers, n_part), n_part

@@ -1,0 +1,77 @@
+"""Named strategy presets — the registry behind ``--preset`` and the
+preset-instantiation CI smoke job.
+
+Each preset is a full `Strategy` (constructed, hence validated, at import
+time) covering one regime the repo's experiments exercise. Presets are
+mesh-agnostic: `worker_axes` stays at the default ``("data",)`` and is
+overridden by the launcher from the actual mesh.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+from .components import (
+    Compression,
+    ExchangePlan,
+    Participation,
+    Schedule,
+    StrategyError,
+)
+from .strategy import Strategy
+
+PRESETS: Dict[str, Strategy] = {
+    # The paper's Algorithm 2: 8-bit stochastic quantization + error
+    # feedback, lockstep exchange every step.
+    "paper_dqgan": Strategy(),
+    # Full-precision exact averaging (the CPOAdam baseline's wire).
+    "exact_baseline": Strategy(
+        compression=Compression(compressor="identity",
+                                error_feedback=False),
+        exchange=ExchangePlan(kind="exact")),
+    # Quantized-but-no-EF ablation (CPOAdam-GQ).
+    "quantized_no_ef": Strategy(
+        compression=Compression(error_feedback=False)),
+    # Constrained uplink: two-phase int8 collectives over size-tiered
+    # buckets, exchanging only every 4th step.
+    "low_bandwidth": Strategy(
+        compression=Compression(plan="size_tiered"),
+        exchange=ExchangePlan(kind="two_phase"),
+        schedule=Schedule.local_k(4)),
+    # Hard byte budget: greedy per-bucket bit-width descent to 1 MiB/step.
+    "byte_budget": Strategy(
+        compression=Compression(plan="delta_budget", budget_mb=1.0),
+        exchange=ExchangePlan(kind="two_phase")),
+    # One-step-stale exchange overlapping compute (PR 2's delayed).
+    "overlap": Strategy(schedule=Schedule.delayed(1)),
+    # Bounded-staleness parameter server: τ=4 push/pull pipeline under a
+    # mild straggler profile (DESIGN.md §8).
+    "ssp_server": Strategy(
+        exchange=ExchangePlan(kind="two_phase"),
+        schedule=Schedule.delayed(4),
+        participation=Participation(straggler_profile="mild")),
+    # Half the workers report per round; the rest fold into EF.
+    "partial_participation": Strategy(
+        participation=Participation(fraction=0.5)),
+    # 100B-scale FSDP layout: workers as a vmapped axis (DESIGN.md §2).
+    "fsdp_vmap": Strategy(
+        exchange=ExchangePlan(kind="sim", spmd="vmap",
+                              worker_axes=("pod",))),
+}
+
+
+def get_preset(name: str) -> Strategy:
+    try:
+        return PRESETS[name]
+    except KeyError:
+        raise StrategyError(
+            f"strategy: unknown preset {name!r}; have "
+            f"{sorted(PRESETS)}") from None
+
+
+def register_preset(name: str, strategy: Strategy) -> None:
+    """Add a preset (experiment configs may register their own)."""
+    if not isinstance(strategy, Strategy):
+        raise StrategyError(
+            f"strategy: preset {name!r} must be a Strategy, got "
+            f"{type(strategy).__name__}")
+    PRESETS[name] = strategy

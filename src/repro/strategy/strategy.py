@@ -1,0 +1,206 @@
+"""`Strategy` — the composed, validated, serializable distribution strategy.
+
+One `Strategy` names a point in the full composition space of the paper's
+method: (Compression × ExchangePlan × Schedule × Participation). The
+components validate their own fields; this module validates the
+*cross-field* lattice (every known-bad combination is a one-line
+`StrategyError` at construction), serializes the whole object to
+canonical JSON (`to_json`/`from_json`, exact round-trip — used by
+checkpoints, `experiments/*.json` and the CI regression gate, which keys
+baselines by `short_hash()`), and bridges the legacy flat `DQConfig`
+flag-bag spellings (`from_legacy`/`legacy_fields`/`evolve`).
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+from dataclasses import dataclass
+from typing import Any, Dict, List, Tuple
+
+from .components import (
+    Compression,
+    ExchangePlan,
+    Participation,
+    Schedule,
+    StrategyError,
+)
+
+_COMPONENTS: Tuple[Tuple[str, type], ...] = (
+    ("compression", Compression),
+    ("exchange", ExchangePlan),
+    ("schedule", Schedule),
+    ("participation", Participation),
+)
+
+# legacy DQConfig field -> (component attribute, component field)
+LEGACY_FIELDS: Dict[str, Tuple[str, str]] = {
+    "compressor": ("compression", "compressor"),
+    "error_feedback": ("compression", "error_feedback"),
+    "ef_dtype": ("compression", "ef_dtype"),
+    "comm_plan": ("compression", "plan"),
+    "bucket_mb": ("compression", "bucket_mb"),
+    "comm_budget_mb": ("compression", "budget_mb"),
+    "exchange": ("exchange", "kind"),
+    "spmd": ("exchange", "spmd"),
+    "worker_axes": ("exchange", "worker_axes"),
+    "schedule": ("schedule", "kind"),
+    "local_k": ("schedule", "k"),
+    "staleness_tau": ("schedule", "tau"),
+    "participation": ("participation", "fraction"),
+    "straggler_profile": ("participation", "straggler_profile"),
+}
+
+
+@dataclass(frozen=True)
+class Strategy:
+    """The distribution strategy `DQGAN` consumes. Frozen and hashable
+    (jit-static safe); the default is the paper's setting (qsgd8 + EF,
+    sim exchange, lockstep every-step schedule, full participation)."""
+
+    compression: Compression = Compression()
+    exchange: ExchangePlan = ExchangePlan()
+    schedule: Schedule = Schedule()
+    participation: Participation = Participation()
+
+    def __post_init__(self):
+        for name, cls in _COMPONENTS:
+            got = getattr(self, name)
+            if not isinstance(got, cls):
+                raise StrategyError(
+                    f"{name}: expected a {cls.__name__}, got "
+                    f"{type(got).__name__}")
+        # ---- the cross-field lattice ---------------------------------- #
+        if self.participation.partial and self.exchange.kind == "exact":
+            raise StrategyError(
+                "participation.fraction: partial participation needs a "
+                "compressed exchange ('sim'/'allgather'/'two_phase') — "
+                "with exchange.kind='exact' non-participants cannot ride "
+                "through the collective as zero payloads")
+        if self.exchange.spmd == "vmap":
+            if self.compression.bucketing:
+                raise StrategyError(
+                    "compression.plan: bucketing needs "
+                    "exchange.spmd='shard_map' — the vmap worker "
+                    "formulation keeps per-tensor semantics (its wire "
+                    "format is compiler-chosen), so a comm plan would be "
+                    "silently ignored")
+            if self.exchange.kind != "sim":
+                raise StrategyError(
+                    f"exchange.kind: spmd='vmap' implements the 'sim' "
+                    f"(per-worker roundtrip + mean) semantics only; "
+                    f"kind={self.exchange.kind!r} would be silently "
+                    f"reinterpreted — spell it exchange.kind='sim'")
+
+    # ------------------------------------------------------------------ #
+    # serialization: canonical, exact JSON round-trip
+    # ------------------------------------------------------------------ #
+    def to_dict(self) -> dict:
+        return {name: dataclasses.asdict(getattr(self, name))
+                for name, _ in _COMPONENTS}
+
+    def to_json(self) -> str:
+        """Canonical JSON: sorted keys, no whitespace — two equal
+        strategies always serialize to the same bytes (the regression
+        gate and checkpoint guard hash this string)."""
+        return json.dumps(self.to_dict(), sort_keys=True,
+                          separators=(",", ":"))
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "Strategy":
+        if not isinstance(d, dict):
+            raise StrategyError(f"strategy: expected an object, got "
+                                f"{type(d).__name__}")
+        known = {name for name, _ in _COMPONENTS}
+        unknown = sorted(set(d) - known)
+        if unknown:
+            raise StrategyError(
+                f"strategy: unknown component(s) {unknown}; have "
+                f"{sorted(known)}")
+        parts = {}
+        for name, comp_cls in _COMPONENTS:
+            sub = d.get(name, {})
+            fields = {f.name for f in dataclasses.fields(comp_cls)}
+            bad = sorted(set(sub) - fields)
+            if bad:
+                raise StrategyError(
+                    f"{name}: unknown field(s) {bad}; have {sorted(fields)}")
+            parts[name] = comp_cls(**sub)
+        return cls(**parts)
+
+    @classmethod
+    def from_json(cls, s: str) -> "Strategy":
+        try:
+            d = json.loads(s)
+        except json.JSONDecodeError as e:
+            raise StrategyError(f"strategy: invalid JSON ({e})") from None
+        return cls.from_dict(d)
+
+    def short_hash(self) -> str:
+        """12-hex digest of the canonical JSON — the structural identity
+        the benchmark-regression gate keys baselines by."""
+        return hashlib.sha256(self.to_json().encode()).hexdigest()[:12]
+
+    # ------------------------------------------------------------------ #
+    def diff(self, other: "Strategy") -> List[str]:
+        """Field-level differences, one dotted line each (both-ways)."""
+        out = []
+        for comp, _ in _COMPONENTS:
+            a, b = getattr(self, comp), getattr(other, comp)
+            for f in dataclasses.fields(a):
+                va, vb = getattr(a, f.name), getattr(b, f.name)
+                if va != vb:
+                    out.append(f"{comp}.{f.name}: {va!r} != {vb!r}")
+        return out
+
+    def describe(self) -> str:
+        c, e, s, p = (self.compression, self.exchange, self.schedule,
+                      self.participation)
+        bits = [f"{c.compressor}{'+ef' if c.error_feedback else ''}",
+                e.kind, s.describe()]
+        if c.bucketing:
+            bits.append(f"plan={c.plan}")
+        if p.partial:
+            bits.append(f"part={p.fraction}")
+        if p.straggler_profile != "none":
+            bits.append(f"stragglers={p.straggler_profile}")
+        if e.spmd != "shard_map":
+            bits.append(e.spmd)
+        return " ".join(bits)
+
+    # ------------------------------------------------------------------ #
+    # the legacy flat-field bridge
+    # ------------------------------------------------------------------ #
+    def evolve(self, **legacy_kw) -> "Strategy":
+        """A copy with legacy flat-field spellings applied, e.g.
+        ``strategy.evolve(schedule="delayed", staleness_tau=4)``. Sweep
+        code and the `DQConfig` shim share this mapping."""
+        unknown = sorted(set(legacy_kw) - set(LEGACY_FIELDS))
+        if unknown:
+            raise StrategyError(
+                f"strategy: unknown legacy field(s) {unknown}; have "
+                f"{sorted(LEGACY_FIELDS)}")
+        by_comp: Dict[str, Dict[str, Any]] = {}
+        for k, v in legacy_kw.items():
+            comp, fld = LEGACY_FIELDS[k]
+            by_comp.setdefault(comp, {})[fld] = v
+        changes = {comp: dataclasses.replace(getattr(self, comp), **sub)
+                   for comp, sub in by_comp.items()}
+        return dataclasses.replace(self, **changes)
+
+    @classmethod
+    def from_legacy(cls, **legacy_kw) -> "Strategy":
+        """Build from the flat DQConfig field spellings."""
+        return cls().evolve(**legacy_kw)
+
+    def legacy_fields(self) -> Dict[str, Any]:
+        """The flat DQConfig mirror of this strategy."""
+        return {k: getattr(getattr(self, comp), fld)
+                for k, (comp, fld) in LEGACY_FIELDS.items()}
+
+    # ------------------------------------------------------------------ #
+    def modeled_wire_bytes(self, n_elems: int, n_workers: int) -> int:
+        """Analytic per-worker bytes of one exchange of `n_elems` floats
+        under this strategy (benchmarks' wire model)."""
+        return self.exchange.modeled_wire_bytes(
+            self.compression.compressor, n_elems, n_workers)

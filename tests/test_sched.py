@@ -468,28 +468,46 @@ def test_clock_routes_delayed_tau_to_server_dataflow():
 
 
 def test_benchmark_regression_gate():
+    """Rows match on the structural strategy hash (PR 4), not the
+    schedule/compressor label strings."""
     from benchmarks.run import check_sched_regression
 
     base = {"rows": [{"schedule": "delayed", "compressor": "8bit", "M": 8,
-                      "mean_step_s": 1.0, "wire_mb": 10.0}],
-            "tau_frontier": [{"tau": 4, "mean_step_s": 0.5,
-                              "wire_mb": 5.0}]}
+                      "strategy": "aaa111", "mean_step_s": 1.0,
+                      "wire_mb": 10.0}],
+            "tau_frontier": [{"tau": 4, "strategy": "bbb222",
+                              "mean_step_s": 0.5, "wire_mb": 5.0}]}
     ok = {"rows": [{"schedule": "delayed", "compressor": "8bit", "M": 8,
-                    "mean_step_s": 1.05, "wire_mb": 10.0}],
-          "tau_frontier": [{"tau": 4, "mean_step_s": 0.4, "wire_mb": 5.0}]}
+                    "strategy": "aaa111", "mean_step_s": 1.05,
+                    "wire_mb": 10.0}],
+          "tau_frontier": [{"tau": 4, "strategy": "bbb222",
+                            "mean_step_s": 0.4, "wire_mb": 5.0}]}
     assert check_sched_regression(ok, base) == []
     bad = {"rows": [{"schedule": "delayed", "compressor": "8bit", "M": 8,
-                     "mean_step_s": 1.2, "wire_mb": 10.0}],
-           "tau_frontier": [{"tau": 4, "mean_step_s": 0.5,
-                             "wire_mb": 5.6}]}
+                     "strategy": "aaa111", "mean_step_s": 1.2,
+                     "wire_mb": 10.0}],
+           "tau_frontier": [{"tau": 4, "strategy": "bbb222",
+                             "mean_step_s": 0.5, "wire_mb": 5.6}]}
     fails = check_sched_regression(bad, base)
     assert len(fails) == 2
     assert any("mean_step_s" in f for f in fails)
     assert any("tau_frontier" in f and "wire_mb" in f for f in fails)
-    # new rows (no baseline counterpart) never gate
-    extra = {"rows": [{"schedule": "new", "compressor": "8bit", "M": 64,
-                       "mean_step_s": 9.9, "wire_mb": 99.0}]}
+    # new rows (no baseline counterpart) never gate — including a row
+    # whose LABELS match the baseline but whose strategy differs
+    # structurally (this was a bogus comparison under name matching);
+    # at least one row must still match or the gate refuses outright
+    extra = {"rows": [{"schedule": "delayed", "compressor": "8bit", "M": 8,
+                       "strategy": "aaa111", "mean_step_s": 1.0,
+                       "wire_mb": 10.0},
+                      {"schedule": "delayed", "compressor": "8bit", "M": 8,
+                       "strategy": "ccc333", "mean_step_s": 9.9,
+                       "wire_mb": 99.0}]}
     assert check_sched_regression(extra, base) == []
+    # a baseline predating the strategy hashes is refused outright
+    legacy = {"rows": [{"schedule": "delayed", "compressor": "8bit",
+                        "M": 8, "mean_step_s": 1.0, "wire_mb": 10.0}]}
+    fails = check_sched_regression(ok, legacy)
+    assert len(fails) == 1 and "pre-strategy" in fails[0]
 
 
 def test_mixture_gan_schedule_overrides_smoke():
@@ -605,14 +623,16 @@ for spmd in ("shard_map", "vmap"):
     np.testing.assert_array_equal(d0["x"], d1["x"])
     np.testing.assert_array_equal(d0["y"], d1["y"])
 
-# delayed(tau), exact+identity, against the M-worker reference recursion
-# (tau=1 is PR 2's frozen delayed reference; tau=2 exercises the ring)
+# delayed(tau), uncompressed, against the M-worker reference recursion
+# (tau=1 is PR 2's frozen delayed reference; tau=2 exercises the ring).
+# identity+'sim' IS the exact mean, and unlike 'exact' it composes with
+# spmd='vmap' (non-sim exchange kinds there are refused since PR 4).
 An = np.asarray(A); eta = 0.05; M = 8
 scales = 1.0 + np.arange(M) / 8.0   # mean of each worker's batch slice
 for spmd in ("shard_map", "vmap"):
     for tau in (1, 2):
         dq = dataclasses.replace(base, spmd=spmd, compressor="identity",
-                                 exchange="exact", schedule="delayed",
+                                 exchange="sim", schedule="delayed",
                                  staleness_tau=tau, error_feedback=False)
         got = run(dq, steps=10)
 
@@ -669,7 +689,9 @@ batch = jnp.arange(8, dtype=jnp.float32).reshape(8, 1) / 8.0
 key = jax.random.key(7)
 M, eta = 8, 0.05
 
-dq = DQConfig(optimizer="omd", compressor="identity", exchange="exact",
+# (identity + 'sim' is numerically the exact mean; partial participation
+# with exchange='exact' is refused at Strategy construction since PR 4)
+dq = DQConfig(optimizer="omd", compressor="identity", exchange="sim",
               error_feedback=True, lr=eta, worker_axes=("data",),
               participation=0.5)
 tr = DQGAN(field_fn=field, dq=dq, mesh=mesh,
