@@ -52,11 +52,16 @@ METHOD_LR = {"CPOAdam": 1e-3, "CPOAdam-GQ": 1e-3, "DQGAN": 3e-3,
 
 def make_trainer(method: str, cfg: GANConfig, lr: float,
                  dq_overrides: dict | None = None,
-                 strategy_overrides: dict | None = None):
+                 strategy_overrides: dict | None = None,
+                 mesh=None):
     opt, msg = METHODS[method]
     strat = METHOD_STRATEGIES[method]
     if strategy_overrides:
         strat = strat.evolve(**strategy_overrides)
+    if mesh is not None and not strat.exchange.worker_axes:
+        # multi-worker run (comm_adaptive frontier): the mesh's data axis
+        # becomes the paper's M machines
+        strat = strat.evolve(worker_axes=("data",))
     # Adam preconditioning normalizes the field-level critic boost away;
     # restore the n_critic=5 ratio post-preconditioning (TTUR).
     mults = (("disc", cfg.disc_grad_mult),) if opt in ("adam", "oadam") else ()
@@ -65,7 +70,12 @@ def make_trainer(method: str, cfg: GANConfig, lr: float,
     if dq_overrides:
         import dataclasses
         dq = dataclasses.replace(dq, **dq_overrides)
-    return DQGAN(field_fn=gan_field_fn(cfg), dq=dq)
+    batch_spec = None
+    if mesh is not None:
+        from jax.sharding import PartitionSpec as P
+        batch_spec = P(("data",))
+    return DQGAN(field_fn=gan_field_fn(cfg), dq=dq, mesh=mesh,
+                 batch_spec=batch_spec)
 
 
 def frechet_distance(feats_a, feats_b):
@@ -103,34 +113,42 @@ def eval_mixture_gan(params, cfg, sample_real, centers, key, n=2000):
 
 def train_mixture_gan(method: str, steps=1500, batch=256, lr=None, seed=0,
                       eval_every=0, dq_overrides: dict | None = None,
-                      strategy_overrides: dict | None = None):
+                      strategy_overrides: dict | None = None,
+                      mesh=None):
     """Train the 2-D mixture GAN; `strategy_overrides` patches the
     method's distribution strategy by legacy field name (e.g.
     {"schedule": "delayed", "staleness_tau": 4} for the convergence-vs-
     staleness frontier of `benchmarks.run --only sched`); `dq_overrides`
-    patches optimizer-side DQConfig fields."""
+    patches optimizer-side DQConfig fields. `mesh` runs the workers over
+    the mesh's data axis (the comm_adaptive frontier's M machines)."""
+    from contextlib import nullcontext
+
+    from repro.parallel.compat import set_mesh
+
     lr = METHOD_LR.get(method, 1e-3) if lr is None else lr
     cfg = GANConfig(name="mix", image_size=0, data_dim=2, latent_dim=16,
                     hidden=128, weight_clip=0.1)
     sample_real, centers = gaussian_mixture_sampler(n_modes=8)
     key = jax.random.key(seed)
     params = mlp_gan_init(key, cfg)
-    tr = make_trainer(method, cfg, lr, dq_overrides, strategy_overrides)
-    st = tr.init(params)
-    step = jax.jit(tr.step, static_argnums=(3,), donate_argnums=0)
-    sched = tr.strategy.schedule.runtime()
-    curve = []
-    for i in range(steps):
-        k = jax.random.fold_in(key, i)
-        batch_data = {"real": sample_real(k, batch)}
-        out = step(st, batch_data, k, sched.is_exchange_step(i))
-        st = out.state
-        st = st._replace(params=clip_disc(st.params, cfg))
-        if eval_every and (i + 1) % eval_every == 0:
-            m = eval_mixture_gan(st.params, cfg, sample_real, centers,
-                                 jax.random.fold_in(key, 10_000 + i))
-            m["step"] = i + 1
-            curve.append(m)
-    final = eval_mixture_gan(st.params, cfg, sample_real, centers,
-                             jax.random.fold_in(key, 999_999))
+    tr = make_trainer(method, cfg, lr, dq_overrides, strategy_overrides,
+                      mesh=mesh)
+    with set_mesh(mesh) if mesh is not None else nullcontext():
+        st = tr.init(params)
+        step = jax.jit(tr.step, static_argnums=(3,), donate_argnums=0)
+        sched = tr.strategy.schedule.runtime()
+        curve = []
+        for i in range(steps):
+            k = jax.random.fold_in(key, i)
+            batch_data = {"real": sample_real(k, batch)}
+            out = step(st, batch_data, k, sched.is_exchange_step(i))
+            st = out.state
+            st = st._replace(params=clip_disc(st.params, cfg))
+            if eval_every and (i + 1) % eval_every == 0:
+                m = eval_mixture_gan(st.params, cfg, sample_real, centers,
+                                     jax.random.fold_in(key, 10_000 + i))
+                m["step"] = i + 1
+                curve.append(m)
+        final = eval_mixture_gan(st.params, cfg, sample_real, centers,
+                                 jax.random.fold_in(key, 999_999))
     return final, curve, st

@@ -78,6 +78,7 @@ class LedgerEntry:
     wire_bytes: float
     carried_bytes: float
     fallback: bool = False
+    bucket: int = -1         # comm-bucket id; -1 for per-tensor leaves
 
 
 @dataclass
@@ -89,40 +90,56 @@ class CommLedger:
     are tracked separately — under ``local_k`` only 1-in-K steps moves
     bytes, so cumulative wire cost follows ``rounds``, not ``steps``. The
     host may also feed the simulated wall clock (``sched.clock``) through
-    ``tick(wall_s=...)`` so log rows carry a time axis."""
+    ``tick(wall_s=...)`` so log rows carry a time axis.
+
+    Participation-aware (DESIGN.md §10.3): ``tick(participants=n)`` bills
+    the round at the bytes the n reporting workers actually moved — the
+    fleet-average (n/M)·(per-participant payload), with the payload taken
+    from the round-adaptive ``family`` member the step really selected
+    when one is attached (previously every round was billed as if all M
+    workers shipped the full-M plan)."""
     entries: List[LedgerEntry] = field(default_factory=list)
     steps: int = 0
     rounds: int = 0          # exchange rounds actually executed
     sim_clock_s: float = 0.0  # accumulated simulated wall clock
+    n_workers: int = 0       # fleet size M (0 = unknown, scaling off)
+    family: Optional[object] = None   # planner.PlanFamily | None
+    cum_wire: float = 0.0    # participation-aware cumulative bytes
+    cum_carried: float = 0.0
+    last_participants: Optional[int] = None
+    _round_memo: dict = field(default_factory=dict, repr=False)
 
     # -- registration ------------------------------------------------------- #
     def register(self, tag, strategy, comp: C.Compressor, shape,
-                 n_workers: int, fallback: bool = False):
+                 n_workers: int, fallback: bool = False, bucket: int = -1):
         self.entries.append(LedgerEntry(
             tag=tag, strategy=strategy, compressor=comp.name,
             elems=math.prod(shape), n_workers=n_workers,
             wire_bytes=strategy_wire_bytes(strategy, comp, shape, n_workers),
             carried_bytes=strategy_wire_bytes(strategy, comp, shape,
                                               n_workers, carried=True),
-            fallback=fallback,
+            fallback=fallback, bucket=bucket,
         ))
 
     @classmethod
     def from_plan(cls, layout: BucketLayout, plan: CommPlan, strategy: str,
                   n_workers: int, base_compressor: str,
-                  leaf_plans: Optional[list] = None) -> "CommLedger":
+                  leaf_plans: Optional[list] = None,
+                  family=None) -> "CommLedger":
         """Ledger for the bucketed path: one entry per bucket (its assigned
         compressor) + one per skipped leaf on the per-tensor path.
         ``leaf_plans`` are the exchange.plan_leaf dicts for skipped leaves
         (to account their sim fallbacks faithfully). Without them we cannot
         re-derive the real plan — skipped leaves are skipped *because* they
         are sharded, and the spec is gone from the layout — so we account
-        them conservatively as sim fallbacks (full-precision wire)."""
-        led = cls()
+        them conservatively as sim fallbacks (full-precision wire).
+        ``family`` attaches the round-adaptive PlanFamily so ticks billed
+        at participants=n re-price the buckets under the selected plan."""
+        led = cls(n_workers=max(n_workers, 1), family=family)
         W = max(n_workers, 2)  # collective multipliers degenerate at W=1
         for b, a in zip(layout.buckets, plan.assignments):
             led.register(f"bucket/{b.bid}", strategy, C.get(a.compressor),
-                         (b.size,), W)
+                         (b.size,), W, bucket=b.bid)
         base = C.get(base_compressor)
         for i, s in enumerate(layout.skipped):
             if leaf_plans:
@@ -139,7 +156,7 @@ class CommLedger:
     def from_tree(cls, strategy: str, comp_name: str, shapes_tree,
                   specs_tree, n_workers: int) -> "CommLedger":
         """Ledger for the seed per-tensor path (comm_plan='none')."""
-        led = cls()
+        led = cls(n_workers=max(n_workers, 1))
         W = max(n_workers, 2)
         is_shape = (lambda x: isinstance(x, tuple)
                     and all(isinstance(i, int) for i in x))
@@ -162,12 +179,46 @@ class CommLedger:
         return led
 
     # -- accumulation ------------------------------------------------------- #
-    def tick(self, n: int = 1, exchanged: bool = True, wall_s: float = 0.0):
+    def round_bytes(self, participants: Optional[int] = None):
+        """(wire, carried) bytes one exchange round moves, fleet-averaged
+        per worker. With ``participants=n < M`` only n workers ship a
+        payload — and under an attached PlanFamily they ship the n-member
+        plan (finer bits, effective budget B·M/n), not the full-M plan."""
+        n, M = participants, self.n_workers
+        if n is None or not M or n >= M:
+            return self.wire_bytes_per_step, self.carried_bytes_per_step
+        hit = self._round_memo.get(n)
+        if hit is not None:
+            return hit
+        frac = n / M
+        plan = self.family.plan_for(n) if self.family is not None else None
+        wire = carried = 0.0
+        for e in self.entries:
+            if plan is not None and e.bucket >= 0:
+                comp = C.get(plan.assignments[e.bucket].compressor)
+            else:
+                comp = C.get(e.compressor)
+            wire += frac * strategy_wire_bytes(
+                e.strategy, comp, (e.elems,), e.n_workers)
+            carried += frac * strategy_wire_bytes(
+                e.strategy, comp, (e.elems,), e.n_workers, carried=True)
+        self._round_memo[n] = (wire, carried)
+        return wire, carried
+
+    def tick(self, n: int = 1, exchanged: bool = True, wall_s: float = 0.0,
+             participants: Optional[int] = None):
         """Advance `n` steps. ``exchanged=False`` records local (mid-round)
-        steps that moved no bytes; ``wall_s`` adds simulated wall clock."""
+        steps that moved no bytes; ``wall_s`` adds simulated wall clock;
+        ``participants`` bills the round(s) at the bytes the reporting
+        workers actually moved (round_bytes)."""
         self.steps += n
         if exchanged:
             self.rounds += n
+            w, c = self.round_bytes(participants)
+            self.cum_wire += n * w
+            self.cum_carried += n * c
+        if participants is not None:
+            self.last_participants = participants
         self.sim_clock_s += wall_s
 
     # -- readouts ----------------------------------------------------------- #
@@ -190,7 +241,7 @@ class CommLedger:
 
     @property
     def cumulative_wire_bytes(self) -> float:
-        return self.rounds * self.wire_bytes_per_step
+        return self.cum_wire
 
     @property
     def compression_ratio(self) -> float:
@@ -201,7 +252,7 @@ class CommLedger:
         return sum(1 for e in self.entries if e.fallback)
 
     def summary(self) -> dict:
-        return {
+        out = {
             "steps": self.steps,
             "rounds": self.rounds,
             "sim_clock_s": round(self.sim_clock_s, 4),
@@ -213,3 +264,6 @@ class CommLedger:
             "n_entries": len(self.entries),
             "n_fallbacks": self.n_fallbacks(),
         }
+        if self.last_participants is not None:
+            out["participants"] = self.last_participants
+        return out

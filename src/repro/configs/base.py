@@ -320,6 +320,11 @@ class DQConfig:
     comm_plan: str = "none"
     bucket_mb: float = 4.0           # f32 MiB per bucket before closing it
     comm_budget_mb: float = 0.0      # delta_budget: payload MiB/step target
+    # round-adaptive PlanFamily: re-run the delta_budget descent per
+    # participation count n against the effective budget B·M/n, selected
+    # in-step by a branch-free gather on the round's participant count
+    # (DESIGN.md §10).
+    comm_adaptive: bool = False
     # ---- repro.sched: execution schedule (DESIGN.md §5, §8) -------------- #
     # "every_step" (seed semantics) | "local_k" (exchange every K steps,
     # message accumulates in DQState.sched["accum"]) | "delayed" (bounded-
@@ -332,6 +337,11 @@ class DQConfig:
     # layout bit-exactly; τ>1 carries a (τ, ...) ring buffer plus the
     # per-worker version vector DQState.sched["versions"] (DESIGN.md §8).
     staleness_tau: int = 1
+    # heterogeneous per-worker staleness for schedule="delayed": worker m
+    # pulls the message it produced τ_m steps ago from the shared
+    # depth-max(τ_m) ring (empty = homogeneous; length must match the
+    # worker count).
+    tau_vector: Tuple[int, ...] = ()
     # fraction of workers sampled per exchange round (count-exact); the
     # workers sitting out fold their message into the EF residual.
     participation: float = 1.0

@@ -39,6 +39,25 @@ def _flat(v):
     return jnp.reshape(v, (-1,))
 
 
+def _stochastic_round_codes(fb, s, levels, key):
+    """Blocked stochastic rounding to signed integer levels — the one
+    arithmetic shared by `StochasticQuant` (static levels) and
+    `TracedQuant` (traced levels); keeping it in one place makes the
+    PlanFamily bit-exactness contract (DESIGN.md §10.2) structural."""
+    lv = jnp.abs(fb) / s * levels               # in [0, levels]
+    low = jnp.floor(lv)
+    p_up = lv - low
+    up = jax.random.uniform(key, fb.shape) < p_up
+    q = low + up.astype(lv.dtype)               # stochastic level
+    return (jnp.sign(fb) * q).astype(jnp.int8)
+
+
+def _dequantize_codes(payload, shape, dtype, levels):
+    d = math.prod(shape)
+    deq = payload["codes"].astype(jnp.float32) * (payload["scale"] / levels)
+    return jnp.reshape(deq.reshape(-1)[:d], shape).astype(dtype)
+
+
 @dataclass(frozen=True)
 class Compressor:
     name: str = "identity"
@@ -206,18 +225,11 @@ class StochasticQuant(Compressor):
         f = _flat(v).astype(jnp.float32)
         fb, _ = self._blocked(f)
         s = self._scale(fb) + _EPS
-        lv = jnp.abs(fb) / s * self.levels          # in [0, levels]
-        low = jnp.floor(lv)
-        p_up = lv - low
-        up = jax.random.uniform(key, fb.shape) < p_up
-        q = low + up.astype(lv.dtype)               # stochastic level
-        codes = (jnp.sign(fb) * q).astype(jnp.int8)
+        codes = _stochastic_round_codes(fb, s, self.levels, key)
         return {"codes": codes, "scale": s.astype(jnp.float32)}
 
     def decompress(self, payload, shape, dtype):
-        d = math.prod(shape)
-        deq = payload["codes"].astype(jnp.float32) * (payload["scale"] / self.levels)
-        return jnp.reshape(deq.reshape(-1)[:d], shape).astype(dtype)
+        return _dequantize_codes(payload, shape, dtype, self.levels)
 
     def wire_bytes(self, shape, n_workers: int = 1) -> int:
         d = math.prod(shape)
@@ -232,6 +244,52 @@ class StochasticQuant(Compressor):
     @property
     def unbiased(self):
         return True
+
+
+class TracedQuant:
+    """`StochasticQuant(norm="linf")` with a *traced* ``levels`` operand.
+
+    The adaptive PlanFamily path (comm.planner, DESIGN.md §10) selects a
+    per-bucket bit-width each round by gathering from a jit-static table
+    indexed by the round's participant count. Every member of such a
+    family shares one payload layout (int8 codes + f32 scales, shapes set
+    by ``per_block`` alone), so the ONLY thing that varies is the level
+    count — carried here as a traced scalar so the selection is data, not
+    a retrace. Arithmetic mirrors StochasticQuant element-for-element:
+    with a concrete ``levels`` the compiled graph computes the same
+    values (XLA sees the same mul/div by a scalar either way).
+
+    Not a registry citizen (not frozen/hashable — it closes over a
+    tracer); constructed per-step inside the jitted exchange.
+    """
+
+    def __init__(self, levels, per_block: int = 0,
+                 name: str = "adaptive_linf"):
+        self.levels = levels          # traced scalar (or python int)
+        self.per_block = per_block
+        self.name = name
+        self.norm = "linf"
+        self.bits = None              # not statically known
+
+    unbiased = True
+
+    _blocked = StochasticQuant._blocked
+
+    def compress(self, v, key):
+        f = _flat(v).astype(jnp.float32)
+        fb, _ = self._blocked(f)
+        s = jnp.max(jnp.abs(fb), axis=-1, keepdims=True) + _EPS
+        codes = _stochastic_round_codes(fb, s, self.levels, key)
+        return {"codes": codes, "scale": s.astype(jnp.float32)}
+
+    def decompress(self, payload, shape, dtype):
+        return _dequantize_codes(payload, shape, dtype, self.levels)
+
+    def roundtrip(self, v, key):
+        return self.decompress(self.compress(v, key), v.shape, v.dtype)
+
+    def delta(self, d):
+        return None
 
 
 # --------------------------------------------------------------------------- #
@@ -254,6 +312,10 @@ REGISTRY = {
                                        norm="l2"),
     "qsgd8_linf": StochasticQuant(name="qsgd8_linf", bits=8, norm="linf"),
     "qsgd4_linf": StochasticQuant(name="qsgd4_linf", bits=4, norm="linf"),
+    # 2-bit linf: levels = 1, i.e. stochastic ternary {-s, 0, +s} — the
+    # floor rung of the same-structure quantizer ladder PlanFamily
+    # descends (comm.planner.quant_ladder).
+    "qsgd2_linf": StochasticQuant(name="qsgd2_linf", bits=2, norm="linf"),
     "qsgd8_block256": StochasticQuant(
         name="qsgd8_block256", bits=8, norm="linf", per_block=256
     ),
@@ -262,6 +324,15 @@ REGISTRY = {
     # with the fused Pallas quantize+EF kernel (one VMEM pass).
     "qsgd8_block1024": StochasticQuant(
         name="qsgd8_block1024", bits=8, norm="linf", per_block=1024
+    ),
+    # lower-bit rungs of the block-1024 ladder (identical payload layout:
+    # int8 codes + one f32 scale per 1024-row — only `levels` changes, so
+    # a PlanFamily over them dispatches by a traced scalar, not a retrace).
+    "qsgd4_block1024": StochasticQuant(
+        name="qsgd4_block1024", bits=4, norm="linf", per_block=1024
+    ),
+    "qsgd2_block1024": StochasticQuant(
+        name="qsgd2_block1024", bits=2, norm="linf", per_block=1024
     ),
 }
 

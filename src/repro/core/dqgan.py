@@ -137,18 +137,44 @@ class DQGAN:
         """True when the repro.comm flat-bucket exchange path is active."""
         return self.strategy.compression.bucketing
 
-    def _comm(self, tree):
-        """(BucketLayout, CommPlan) — static, derived from leaf shapes."""
+    @property
+    def adaptive(self) -> bool:
+        """True when a round-adaptive PlanFamily drives the bucket
+        compressors (DESIGN.md §10)."""
+        return self.strategy.compression.adaptive
+
+    def _comm_full(self, tree):
+        """(BucketLayout, CommPlan, PlanFamily | None) — static, derived
+        from leaf shapes. For an adaptive strategy the CommPlan is the
+        family's full-participation member, so every consumer of the
+        static plan (EF init, ledger, skipped-leaf bookkeeping) sees the
+        same layout whether the family is in play or not."""
         shapes = jax.tree.map(lambda x: tuple(x.shape), tree)
         cache_key = (jax.tree.structure(shapes, is_leaf=_is_shape),
                      tuple(jax.tree.leaves(shapes, is_leaf=_is_shape)))
         hit = self._comm_cache.get(cache_key)
         if hit is not None:
             return hit
-        layout_plan = self.strategy.compression.build(
-            shapes, self.param_specs, self.n_workers)
-        self._comm_cache[cache_key] = layout_plan
-        return layout_plan
+        if self.adaptive:
+            layout, family = self.strategy.compression.build_family(
+                shapes, self.param_specs, self.n_workers)
+            entry = (layout, family.full, family)
+        else:
+            layout, plan = self.strategy.compression.build(
+                shapes, self.param_specs, self.n_workers)
+            entry = (layout, plan, None)
+        self._comm_cache[cache_key] = entry
+        return entry
+
+    def _comm(self, tree):
+        """(BucketLayout, CommPlan) — the static (full-participation)
+        view."""
+        layout, plan, _ = self._comm_full(tree)
+        return layout, plan
+
+    def _family(self, tree):
+        """The PlanFamily, or None for non-adaptive strategies."""
+        return self._comm_full(tree)[2]
 
     def comm_ledger(self, params) -> "Any":
         """CommLedger describing this trainer's per-step wire cost (used by
@@ -158,12 +184,13 @@ class DQGAN:
         strat = self.strategy
         shapes = jax.tree.map(lambda x: tuple(x.shape), params)
         if self.bucketed:
-            layout, cplan = self._comm(params)
+            layout, cplan, family = self._comm_full(params)
             flat_plans = jax.tree.leaves(self._plans(params), is_leaf=_is_plan)
             leaf_plans = [flat_plans[s.index] for s in layout.skipped]
             return CommLedger.from_plan(
                 layout, cplan, strat.exchange.kind, self.n_workers,
-                strat.compression.compressor, leaf_plans=leaf_plans)
+                strat.compression.compressor, leaf_plans=leaf_plans,
+                family=family)
         return CommLedger.from_tree(
             strat.exchange.kind, strat.compression.compressor, shapes,
             self.param_specs, self.n_workers)
@@ -247,6 +274,11 @@ class DQGAN:
         dq = self.dq
         strat = self.strategy
         self._validate_lr_mults(params)
+        tv = strat.schedule.tau_vector
+        if tv and len(tv) != max(W, 1):
+            raise ValueError(
+                f"schedule.tau_vector has {len(tv)} entries but this mesh "
+                f"runs {max(W, 1)} workers — one τ_m per worker")
         plans = self._plans(params)
         ef_dtype = jnp.dtype(strat.compression.ef_dtype)
 
@@ -492,9 +524,9 @@ class DQGAN:
         def worker(prev_g, ef, sw, b, i, mask):
             kw = jax.random.fold_in(jax.random.fold_in(key, i), state.step)
             kf, kq = jax.random.split(kw)
-            pending_buf, pending = sched_c.wire_head(sw)
+            pending_buf, pending = sched_c.wire_head(sw, i)
             stale = sched_c.staleness_correction(pending_buf, dq.message,
-                                                 eta)
+                                                 eta, i)
             if dq.optimizer == "omd" and dq.extrapolation == "local":
                 def extrap(w, g_prev, e, s):
                     upd = eta * g_prev
@@ -531,7 +563,7 @@ class DQGAN:
             # schedule dataflow — one component method shared with the
             # shard_map path (accumulate / ring-shift / version advance)
             exch, new_sw = sched_c.fold(sw, msg, pending, do_exchange,
-                                        state.step, mask, _tree_zeros)
+                                        state.step, mask, _tree_zeros, i)
 
             phat = enew = None
             if exch is not None:
@@ -647,18 +679,27 @@ class DQGAN:
         ef = takew(state.ef)
         sched_st = takew(state.sched)
         # pending_buf: the raw delayed-schedule buffer (ring for τ>1);
-        # pending: the message on the wire THIS step (its oldest slot)
-        pending_buf, pending = sched_c.wire_head(sched_st)
+        # pending: the message on the wire THIS step (its oldest slot, or
+        # this worker's τ_m pull slot under a heterogeneous tau_vector)
+        pending_buf, pending = sched_c.wire_head(sched_st, widx)
         part = None
+        plan_sel = None
         if part_setup is not None and widx is not None:
             part = (part_setup[0][widx], part_setup[1])
+            if self.adaptive:
+                # the round's participant count, as DATA: the PlanFamily
+                # member is a gather on this index, so a different round
+                # size is a different table row, never a retrace.
+                from repro.sched.participation import round_count
+                plan_sel = round_count(part_setup[0]) - 1
 
         # ---------- extrapolation to w_{t-1/2} ---------------------------- #
         # delayed schedule: w_{t-1} is τ applied updates stale, so the OMD
         # lookahead additionally subtracts the SUM of the worker's pending
         # (in-flight) messages as the staleness-correction proxy for the
         # τ outstanding q̂'s (DESIGN.md §8).
-        stale = sched_c.staleness_correction(pending_buf, dq.message, eta)
+        stale = sched_c.staleness_correction(pending_buf, dq.message, eta,
+                                             widx)
         ef_leaf_tree = ef["leaf"] if (self.bucketed and ef is not None) else ef
         if dq.optimizer == "omd":
             if dq.extrapolation == "local":
@@ -707,12 +748,13 @@ class DQGAN:
         # (delayed), or pass the fresh message through (every_step).
         exch_msg, new_sched = sched_c.fold(
             sched_st, message, pending, do_exchange, state.step,
-            part[0] if part is not None else None, _tree_zeros)
+            part[0] if part is not None else None, _tree_zeros, widx)
 
         # ---------- exchange + server-side update ------------------------- #
         if exch_msg is not None:
             qhat, new_ef = self._exchange_tree(exch_msg, ef, plans, kq, axes,
-                                               widx=widx, part=part)
+                                               widx=widx, part=part,
+                                               plan_sel=plan_sel)
             new_params, new_m, new_v, new_prev_update = self._server_update(
                 state, qhat)
         else:
@@ -816,13 +858,13 @@ class DQGAN:
 
     # ------------------------------------------------------------------ #
     def _exchange_tree(self, message, ef, plans, key, axes, widx=None,
-                       part=None):
+                       part=None, plan_sel=None):
         if part is not None:
             return self._exchange_with_participation(
-                message, ef, plans, key, axes, widx, part)
+                message, ef, plans, key, axes, widx, part, plan_sel)
         if self.bucketed:
             return self._exchange_bucketed(message, ef, plans, key, axes,
-                                           widx=widx)
+                                           widx=widx, plan_sel=plan_sel)
         dq = self.dq
         comp = self.compressor
         W = self.n_workers
@@ -855,7 +897,7 @@ class DQGAN:
         return qhat, jax.tree.unflatten(treedef, new_ef)
 
     def _exchange_with_participation(self, message, ef, plans, key, axes,
-                                     widx, part):
+                                     widx, part, plan_sel=None):
         """Partial participation (sched.participation, DESIGN.md §5.3):
         this worker's message and worker-side residual are masked to zero
         when it sits the round out — every registry compressor maps 0 to a
@@ -863,6 +905,9 @@ class DQGAN:
         collectives contributing nothing. The averaged q̂ is rescaled from
         1/W to 1/n_participants (a static constant), and non-participants
         fold the would-have-been message into their EF residual instead.
+        ``plan_sel`` (adaptive PlanFamily) rides through to the bucketed
+        exchange, which re-spends the absent workers' byte budget on
+        finer quantization for the reporting ones (DESIGN.md §10).
         """
         mask, n_part = part  # mask: this worker's 0/1 flag; n_part: static
         W = self.n_workers
@@ -886,7 +931,7 @@ class DQGAN:
             ef_in = mask_e1(ef)
 
         qhat, new_ef = self._exchange_tree(msg_in, ef_in, plans, key, axes,
-                                           widx=widx)
+                                           widx=widx, plan_sel=plan_sel)
         scale = W / n_part
         qhat = jax.tree.map(lambda q: (q * scale).astype(q.dtype), qhat)
 
@@ -926,19 +971,36 @@ class DQGAN:
     # ------------------------------------------------------------------ #
     # repro.comm flat-bucket fast path (DESIGN.md §3)
     # ------------------------------------------------------------------ #
-    def _exchange_bucketed(self, message, ef, plans, key, axes, widx=None):
+    def _exchange_bucketed(self, message, ef, plans, key, axes, widx=None,
+                           plan_sel=None):
         """Exchange over bucket views: unsharded leaves are packed into a
         handful of flat, worker-divisible arrays (one collective each, per-
         bucket compressor from the comm planner); sharded leaves keep the
         per-tensor path. EF: e1 is packed/unpacked alongside the message so
         the per-leaf residual tree stays intact; two_phase owner error e2
-        lives per-bucket under ef["bucket"]."""
+        lives per-bucket under ef["bucket"].
+
+        ``plan_sel`` (traced, = round participant count − 1) selects the
+        adaptive PlanFamily member: every family member shares one payload
+        layout, so the per-bucket compressor becomes a `TracedQuant` whose
+        level count is a gather from the family's jit-static stacked
+        bit-width table — branch-free, and a different round size is new
+        data, not a new trace. ``plan_sel=None`` (full participation, or
+        a non-adaptive strategy) keeps the static per-bucket compressors,
+        which is byte- and bit-identical to the pre-family behavior."""
         from repro.comm import buckets as B
 
         dq = self.dq
         W = self.n_workers
         ef_dtype = jnp.dtype(dq.ef_dtype)
         layout, cplan = self._comm(message)
+        family = self._family(message)
+        levels_tab = None
+        if (plan_sel is not None and family is not None
+                and family.n_distinct > 1):
+            # (M, n_buckets) level counts, stacked once at trace time
+            levels_tab = jnp.asarray(family.levels_table(), jnp.float32)
+            family_block = C.get(family.base_compressor).per_block
         leaves, treedef = jax.tree.flatten(message)
         plan_leaves = treedef.flatten_up_to(plans)
 
@@ -962,7 +1024,11 @@ class DQGAN:
 
         out_flats, new_e1_flats, new_bucket_ef = [], [], {}
         for b, assign in zip(layout.buckets, cplan.assignments):
-            comp_b = C.get(assign.compressor)
+            if levels_tab is not None:
+                comp_b = C.TracedQuant(levels_tab[plan_sel, b.bid],
+                                       per_block=family_block)
+            else:
+                comp_b = C.get(assign.compressor)
             plan_b = self.strategy.exchange.bucket_plan(b.size, W)
             est = {}
             if dq.error_feedback:

@@ -22,17 +22,22 @@ def ef_zeros_like(v, dtype=None):
 FUSED_BLOCK = 1024  # kernel row width; must match kernels.quantize tiling
 
 
-def fused_compatible(compressor: C.Compressor, message) -> bool:
+def fused_compatible(compressor, message) -> bool:
     """True when the Pallas fused EF+quantize kernel realizes exactly this
-    compressor on this operand: 8-bit linf quantization with one scale per
+    compressor on this operand: linf quantization with one scale per
     FUSED_BLOCK elements, over a flat lane-aligned array (comm buckets are
-    always shaped like this by construction)."""
+    always shaped like this by construction). The level count is plumbed
+    into the kernel, so the 8/4/2-bit block-1024 rungs of an adaptive
+    PlanFamily — and `TracedQuant`, whose levels are a traced gather from
+    the family's stacked table — all take the same fused path."""
+    shaped = (getattr(message, "ndim", 0) == 1
+              and message.shape[0] % FUSED_BLOCK == 0)
+    if isinstance(compressor, C.TracedQuant):
+        return compressor.per_block == FUSED_BLOCK and shaped
     return (isinstance(compressor, C.StochasticQuant)
-            and compressor.bits == 8
             and compressor.norm == "linf"
             and compressor.per_block == FUSED_BLOCK
-            and getattr(message, "ndim", 0) == 1
-            and message.shape[0] % FUSED_BLOCK == 0)
+            and shaped)
 
 
 def compress_with_ef(
@@ -59,7 +64,8 @@ def compress_with_ef(
     interpret-mode pallas_call must not be batched).
     """
     if use_ef and allow_fused and fused_compatible(compressor, message):
-        return fused_quantize_ef(message, e_prev, key)
+        return fused_quantize_ef(message, e_prev, key,
+                                 levels=compressor.levels)
     m = message + e_prev.astype(message.dtype) if use_ef else message
     payload = compressor.compress(m, key)
     m_hat = compressor.decompress(payload, m.shape, m.dtype)
@@ -70,7 +76,7 @@ def compress_with_ef(
     return payload, m_hat, e_new
 
 
-def fused_quantize_ef(message_flat, e_prev, key, *, levels: int = 127,
+def fused_quantize_ef(message_flat, e_prev, key, *, levels=127,
                       interpret: bool = True):
     """Single-HBM-pass EF + int8 quantization for a flat comm bucket via the
     Pallas kernel (kernels.quantize.quantize_ef_flat) — the fused equivalent

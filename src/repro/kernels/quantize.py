@@ -26,23 +26,48 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _quantize_ef_kernel(g_ref, e_ref, r_ref, codes_ref, scale_ref, enew_ref,
-                        *, levels: int):
-    m = g_ref[...].astype(jnp.float32) + e_ref[...].astype(jnp.float32)
+def _qef_body(g, e, r, levels, e_dtype):
+    """Shared tile body: EF add, row scale, stochastic round, residual.
+    `levels` is a Python int (static kernel) or an f32 scalar read from
+    the dynamic-levels operand (PlanFamily dispatch, DESIGN.md §10)."""
+    m = g.astype(jnp.float32) + e.astype(jnp.float32)
     s = jnp.max(jnp.abs(m), axis=1, keepdims=True) + 1e-20   # (BR, 1)
     lv = m / s * levels
     low = jnp.floor(lv)
-    up = (r_ref[...] < (lv - low)).astype(jnp.float32)
+    up = (r < (lv - low)).astype(jnp.float32)
     q = low + up
-    codes_ref[...] = q.astype(jnp.int8)
+    return q.astype(jnp.int8), s, (m - q * (s / levels)).astype(e_dtype)
+
+
+def _quantize_ef_kernel(g_ref, e_ref, r_ref, codes_ref, scale_ref, enew_ref,
+                        *, levels: int):
+    codes, s, e_new = _qef_body(g_ref[...], e_ref[...], r_ref[...], levels,
+                                enew_ref.dtype)
+    codes_ref[...] = codes
     scale_ref[...] = s
-    enew_ref[...] = (m - q * (s / levels)).astype(enew_ref.dtype)
+    enew_ref[...] = e_new
 
 
-def quantize_ef_blocked(g, e, rand, *, levels: int = 127, block_rows: int = 256,
+def _quantize_ef_kernel_dyn(g_ref, e_ref, r_ref, lv_ref, codes_ref,
+                            scale_ref, enew_ref):
+    """Dynamic-levels variant: the level count arrives as a (1, 1) f32
+    operand (a gather from the PlanFamily's stacked bit-width table), so
+    one compiled kernel serves every member of an adaptive family."""
+    codes, s, e_new = _qef_body(g_ref[...], e_ref[...], r_ref[...],
+                                lv_ref[0, 0], enew_ref.dtype)
+    codes_ref[...] = codes
+    scale_ref[...] = s
+    enew_ref[...] = e_new
+
+
+def quantize_ef_blocked(g, e, rand, *, levels=127, block_rows: int = 256,
                         interpret: bool = True):
     """g, e, rand: (R, C) with C % 128 == 0 and R % block_rows == 0.
-    Returns (codes int8 (R,C), scales f32 (R,1), e_new (R,C))."""
+    Returns (codes int8 (R,C), scales f32 (R,1), e_new (R,C)).
+
+    ``levels`` may be a Python int (baked into the kernel — the original
+    path, compiled graph unchanged) or a traced scalar (routed through
+    the dynamic-levels kernel as a (1, 1) operand)."""
     R, C = g.shape
     assert C % 128 == 0, f"lane-align C to 128, got {C}"
     br = min(block_rows, R)
@@ -52,27 +77,37 @@ def quantize_ef_blocked(g, e, rand, *, levels: int = 127, block_rows: int = 256,
     def idx(i):
         return (i, 0)
 
-    kernel = functools.partial(_quantize_ef_kernel, levels=levels)
+    out_specs = [
+        pl.BlockSpec((br, C), idx),
+        pl.BlockSpec((br, 1), idx),
+        pl.BlockSpec((br, C), idx),
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct((R, C), jnp.int8),
+        jax.ShapeDtypeStruct((R, 1), jnp.float32),
+        jax.ShapeDtypeStruct((R, C), e.dtype),
+    ]
+    tile = pl.BlockSpec((br, C), idx)
+    if isinstance(levels, int):
+        kernel = functools.partial(_quantize_ef_kernel, levels=levels)
+        return pl.pallas_call(
+            kernel,
+            grid=grid,
+            in_specs=[tile, tile, tile],
+            out_specs=out_specs,
+            out_shape=out_shape,
+            interpret=interpret,
+        )(g, e, rand)
+    lv = jnp.asarray(levels, jnp.float32).reshape(1, 1)
     return pl.pallas_call(
-        kernel,
+        _quantize_ef_kernel_dyn,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((br, C), idx),
-            pl.BlockSpec((br, C), idx),
-            pl.BlockSpec((br, C), idx),
-        ],
-        out_specs=[
-            pl.BlockSpec((br, C), idx),
-            pl.BlockSpec((br, 1), idx),
-            pl.BlockSpec((br, C), idx),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((R, C), jnp.int8),
-            jax.ShapeDtypeStruct((R, 1), jnp.float32),
-            jax.ShapeDtypeStruct((R, C), e.dtype),
-        ],
+        in_specs=[tile, tile, tile,
+                  pl.BlockSpec((1, 1), lambda i: (0, 0))],
+        out_specs=out_specs,
+        out_shape=out_shape,
         interpret=interpret,
-    )(g, e, rand)
+    )(g, e, rand, lv)
 
 
 def bucket_tile_shape(n: int):
@@ -89,7 +124,7 @@ def bucket_tile_shape(n: int):
     return R, C, br
 
 
-def quantize_ef_flat(g, e, rand, *, levels: int = 127, interpret: bool = True):
+def quantize_ef_flat(g, e, rand, *, levels=127, interpret: bool = True):
     """Fused quantize+EF over a flat comm bucket (1-D, lane-aligned size).
 
     Tiles the bucket as (R, 1024) rows — each row is one scale block, i.e.

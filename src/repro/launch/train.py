@@ -31,6 +31,11 @@ fields ``wire_mb_step`` / ``cum_wire_mb`` / ``comm_ratio``:
     # fit a byte budget by per-bucket bit-width descent:
     ... --comm-plan delta_budget --comm-budget-mb 2.5
 
+    # round-adaptive PlanFamily: when only n of M workers report, the
+    # absent workers' budget buys the participants finer bits
+    # (DESIGN.md §10; log rows gain ``participants``):
+    ... --preset adaptive_budget --participation 0.5
+
 Execution schedule (repro.sched, DESIGN.md §5, §8): ``--schedule`` picks
 when workers exchange; log rows then carry ``round`` and the simulated
 wall clock (``sim_clock_s``) from the straggler-aware cost model:
@@ -171,10 +176,26 @@ def main(argv=None):
         layout, cplan = trainer._comm(params)
         print(f"# comm: {layout.describe()}", flush=True)
         print(f"# comm: {cplan.describe()}", flush=True)
+        family = trainer._family(params)
+        if family is not None:
+            print(f"# comm: {family.describe()}", flush=True)
+    # count-exact participation: the per-round participant count is a
+    # static function of (fraction, W) — the ledger bills each round at
+    # the bytes the reporting workers actually move (selected-plan
+    # payload under an adaptive family, DESIGN.md §10.3)
+    from repro.sched import n_participants
+    n_part = (n_participants(strat.participation.fraction,
+                             trainer.n_workers)
+              if trainer.n_workers > 1 and strat.participation.partial
+              else None)
     profile = strat.participation.profile()
     link = sclock.LinkModel()
     W = max(trainer.n_workers, 1)
-    t_ex = link.exchange_time(ledger.wire_bytes_per_step) if W > 1 else 0.0
+    # price the modeled exchange at what a round actually moves — under
+    # partial participation that is the selected family member's payload
+    # (round_bytes), not the full-M plan
+    t_ex = (link.exchange_time(ledger.round_bytes(n_part)[0])
+            if W > 1 else 0.0)
     print(f"# strategy: {strat.describe()} [{strat.short_hash()}]",
           flush=True)
 
@@ -216,10 +237,13 @@ def main(argv=None):
                     ledger.tick(0, wall_s=float(wall_series[start:i].sum()))
             warm_variants.add(do_exchange)
             wall = float(wall_series[i]) if wall_series is not None else 0.0
-            ledger.tick(exchanged=do_exchange, wall_s=wall)
+            ledger.tick(exchanged=do_exchange, wall_s=wall,
+                        participants=n_part)
             if i % args.log_every == 0 or i == args.steps - 1:
                 m = jax.device_get(out.metrics)
                 rec = {"step": i, "round": sched.round_index(i),
+                       **({"participants": n_part}
+                          if n_part is not None else {}),
                        "loss": float(m["loss"]),
                        "grad_norm": float(m["grad_norm"]),
                        "error_norm": float(m["error_norm"]),

@@ -29,10 +29,16 @@ from .clock import (  # noqa: F401
 from .participation import (  # noqa: F401
     host_round_participants,
     n_participants,
+    round_count,
     round_key,
     round_mask,
 )
-from .schedule import SCHEDULES, ExchangeSchedule, get  # noqa: F401
+from .schedule import (  # noqa: F401
+    SCHEDULES,
+    ExchangeSchedule,
+    get,
+    seeded_tau_vector,
+)
 from .server import (  # noqa: F401
     StalenessBoundExceeded,
     VersionedServer,

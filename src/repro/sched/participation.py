@@ -51,6 +51,15 @@ def round_mask(key, round_idx, n_workers: int, n_part: int):
     return jnp.zeros((n_workers,), jnp.float32).at[perm[:n_part]].set(1.0)
 
 
+def round_count(mask_vec):
+    """The round's participant count as traced DATA (identical on every
+    worker — the mask derives from the shared round key). The adaptive
+    PlanFamily (comm.planner, DESIGN.md §10) gathers its per-round
+    bit-width row with this index: a different round size selects a
+    different table row, never a retrace."""
+    return jnp.sum(mask_vec).astype(jnp.int32)
+
+
 def host_round_participants(rng: np.random.RandomState, n_workers: int,
                             n_part: int) -> np.ndarray:
     """Host-side sampling for the wall-clock model (numpy, independent of

@@ -106,3 +106,19 @@ def get(name: str, local_k: int = 1, tau: int = 1) -> ExchangeSchedule:
     if name == "delayed":
         return ExchangeSchedule("delayed", tau=tau)
     return ExchangeSchedule(name)
+
+
+def seeded_tau_vector(tau_max: int, n_workers: int, seed: int = 0) -> tuple:
+    """Seeded heterogeneous per-worker pull cadences τ_m ∈ {1..τ_max} for
+    `Schedule.delayed(tau_max, tau_vector=...)` — deterministic in
+    (τ_max, M, seed), with max(τ_m) pinned to τ_max so the ring depth is
+    exactly what the schedule advertises. Mirrors the straggler profiles'
+    host-side seeding discipline: the jitted step only ever sees the
+    resulting static tuple."""
+    import numpy as np
+    if tau_max < 1:
+        raise ValueError(f"tau_max must be >= 1, got {tau_max}")
+    rs = np.random.RandomState(seed)
+    taus = rs.randint(1, tau_max + 1, size=n_workers)
+    taus[rs.randint(n_workers)] = tau_max  # the ring depth is max τ_m
+    return tuple(int(t) for t in taus)

@@ -22,5 +22,10 @@ from .components import (  # noqa: F401
     Schedule,
     StrategyError,
 )
-from .presets import PRESETS, get_preset, register_preset  # noqa: F401
+from .presets import (  # noqa: F401
+    PRESET_DOCS,
+    PRESETS,
+    get_preset,
+    register_preset,
+)
 from .strategy import LEGACY_FIELDS, Strategy  # noqa: F401

@@ -3,13 +3,15 @@
 Constructs every registry preset, asserts the exact JSON round-trip, and
 prints one line per preset (name, structural hash, description). The CI
 matrix runs this next to ``launch.train --help`` so a broken preset or a
-schema/CLI drift fails fast. ``--json NAME`` dumps one preset's JSON.
+schema/CLI drift fails fast. ``--json NAME`` dumps one preset's JSON;
+``--list-presets`` prints name + one-line doc + structural hash.
 """
 from __future__ import annotations
 
 import argparse
 import sys
 
+from .presets import PRESET_DOCS
 from . import PRESETS, Strategy, get_preset
 
 
@@ -17,9 +19,18 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser(prog="python -m repro.strategy")
     ap.add_argument("--json", metavar="NAME", default="",
                     help="print one preset's canonical JSON and exit")
+    ap.add_argument("--list-presets", action="store_true",
+                    help="print name, one-line description and structural "
+                         "hash for every registry preset")
     args = ap.parse_args(argv)
     if args.json:
         print(get_preset(args.json).to_json())
+        return 0
+    if args.list_presets:
+        for name in sorted(PRESETS):
+            st = PRESETS[name]
+            doc = PRESET_DOCS.get(name, st.describe())
+            print(f"{name:24s} {st.short_hash()}  {doc}")
         return 0
     bad = 0
     for name in sorted(PRESETS):

@@ -99,6 +99,7 @@ def strategy_from_args(
     new_plan = overrides.get("comm_plan", base.compression.plan)
     if new_plan != base.compression.plan and new_plan != "delta_budget":
         overrides.setdefault("comm_budget_mb", 0.0)
+        overrides.setdefault("comm_adaptive", False)
     if worker_axes is not None:
         overrides["worker_axes"] = tuple(worker_axes)
     return base.evolve(**overrides)

@@ -97,6 +97,10 @@ class Compression:
         "bucket_mb", "f32 MiB per gradient bucket"))
     budget_mb: float = field(default=0.0, metadata=_cli(
         "comm_budget_mb", "delta_budget policy: payload MiB/step target"))
+    adaptive: bool = field(default=False, metadata=_cli(
+        "comm_adaptive", "round-adaptive PlanFamily: re-run the "
+        "delta_budget descent per participation count n against the "
+        "effective budget B*M/n (DESIGN.md §10)"))
 
     def __post_init__(self):
         from repro.core import compressors as C
@@ -133,6 +137,19 @@ class Compression:
             raise StrategyError(
                 f"compression.budget_mb: a byte budget only applies to "
                 f"plan='delta_budget', not plan={self.plan!r}")
+        if self.adaptive:
+            if self.plan != "delta_budget":
+                raise StrategyError(
+                    f"compression.adaptive: a round-adaptive PlanFamily "
+                    f"re-runs the delta_budget descent per participation "
+                    f"count; it needs plan='delta_budget', not "
+                    f"plan={self.plan!r}")
+            from repro.comm.planner import quant_ladder
+            try:
+                quant_ladder(self.compressor)
+            except ValueError as e:
+                raise StrategyError(
+                    f"compression.compressor: {e}") from None
 
     # ------------------------------------------------------------------ #
     def get(self):
@@ -158,6 +175,23 @@ class Compression:
             layout, self.compressor, self.plan,
             budget_bytes=int(self.budget_mb * (1 << 20)))
         return layout, plan
+
+    def build_family(self, shapes_tree, param_specs, n_workers: int):
+        """(BucketLayout, PlanFamily): one delta_budget plan per
+        participation count n ∈ {1..n_workers}, each cut against the
+        effective budget B·M/n (DESIGN.md §10). Only valid when
+        ``adaptive`` is set."""
+        if not self.adaptive:
+            raise ValueError("build_family needs compression.adaptive")
+        from repro import comm as RC
+        from repro.comm.planner import plan_family
+        layout = RC.build_layout(
+            shapes_tree, param_specs, max(n_workers, 1),
+            bucket_bytes=int(self.bucket_mb * (1 << 20)))
+        fam = plan_family(layout, self.compressor,
+                          int(self.budget_mb * (1 << 20)),
+                          max(n_workers, 1))
+        return layout, fam
 
 
 # --------------------------------------------------------------------------- #
@@ -226,6 +260,12 @@ class Schedule:
     tau: int = field(default=1, metadata=_cli(
         "staleness_tau", "delayed schedule: bounded-staleness pipeline "
                          "depth τ"))
+    # heterogeneous per-worker staleness: worker m applies the message it
+    # produced τ_m steps ago (ring depth stays max τ_m = tau). Empty =
+    # homogeneous (every worker at τ). No CLI flag — like worker_axes,
+    # the launcher/benchmarks set it programmatically (length must match
+    # the worker count, validated at DQGAN init).
+    tau_vector: Tuple[int, ...] = ()
 
     def __post_init__(self):
         if self.kind not in _schedule_kinds():
@@ -245,6 +285,24 @@ class Schedule:
             raise StrategyError(
                 f"schedule.tau: tau={self.tau} only meaningful with "
                 f"kind='delayed', not {self.kind!r}")
+        tv = self.tau_vector
+        if isinstance(tv, list):
+            tv = tuple(tv)
+            object.__setattr__(self, "tau_vector", tv)
+        if tv:
+            if self.kind != "delayed":
+                raise StrategyError(
+                    f"schedule.tau_vector: per-worker staleness only "
+                    f"applies to kind='delayed', not {self.kind!r}")
+            if not all(isinstance(t, int) and t >= 1 for t in tv):
+                raise StrategyError(
+                    f"schedule.tau_vector: entries must be ints >= 1, "
+                    f"got {tv!r}")
+            if max(tv) != self.tau:
+                raise StrategyError(
+                    f"schedule.tau_vector: the ring depth is max(τ_m) — "
+                    f"tau={self.tau} must equal max(tau_vector)="
+                    f"{max(tv)}")
 
     # ---- constructors ------------------------------------------------- #
     @classmethod
@@ -258,10 +316,21 @@ class Schedule:
         return cls("local_k", k=K)
 
     @classmethod
-    def delayed(cls, tau: int = 1) -> "Schedule":
+    def delayed(cls, tau: int = 1,
+                tau_vector: Tuple[int, ...] = ()) -> "Schedule":
         """Bounded-staleness exchange overlapping compute: step t applies
-        the message produced at step t−τ (DESIGN.md §8)."""
-        return cls("delayed", tau=tau)
+        the message produced at step t−τ (DESIGN.md §8). A non-empty
+        ``tau_vector`` gives worker m its own τ_m ≤ τ pull cadence over
+        the shared depth-τ ring (heterogeneous staleness)."""
+        return cls("delayed", tau=tau, tau_vector=tuple(tau_vector))
+
+    @classmethod
+    def delayed_hetero(cls, tau_vector) -> "Schedule":
+        """Heterogeneous bounded staleness from an explicit per-worker
+        τ_m tuple; the ring depth is max(τ_m). For a seeded draw use
+        `repro.sched.seeded_tau_vector`."""
+        tv = tuple(int(t) for t in tau_vector)
+        return cls("delayed", tau=max(tv), tau_vector=tv)
 
     # ---- host-side arithmetic (delegated to sched.ExchangeSchedule) --- #
     def runtime(self):
@@ -295,26 +364,68 @@ class Schedule:
             worker_like if self.tau == 1 else ring_like, params)
         return {"pending": pending, "versions": versions_like()}
 
-    def wire_head(self, sched_state):
+    # -- heterogeneous-staleness helpers (tau_vector, DESIGN.md §10.4) -- #
+    def _tau_of(self, widx):
+        """This worker's τ_m: a static int (homogeneous / single worker /
+        constant vector) or a traced gather from the jit-static
+        tau_vector table. A constant vector stays static so spelling the
+        homogeneous schedule as tau_vector=(τ,)*M keeps the compiled
+        graph bit-identical to plain delayed(τ)."""
+        if not self.tau_vector:
+            return self.tau
+        if len(set(self.tau_vector)) == 1 or widx is None:
+            # widx None: single worker (validated len == 1)
+            return self.tau_vector[0]
+        return jnp.asarray(self.tau_vector, jnp.int32)[widx]
+
+    def _pull_pos(self, widx):
+        """Ring slot this worker exchanges: slot p holds the message
+        produced (τ − p) steps ago, so worker m pulls p_m = τ − τ_m.
+        Messages keep shifting toward slot 0 after their exchange and
+        fall off the end — each passes slot p_m exactly once."""
+        return self.tau - self._tau_of(widx)
+
+    def wire_head(self, sched_state, widx=None):
         """(pending_buf, head): the raw delayed-schedule ring buffer and
-        the message on the wire THIS step (its oldest slot), or
-        (None, None) for the other schedules."""
+        the message on the wire THIS step — its oldest slot, or worker
+        m's pull slot τ−τ_m under a tau_vector — or (None, None) for the
+        other schedules."""
         if self.kind != "delayed":
             return None, None
         buf = sched_state["pending"]
-        head = buf if self.tau == 1 else jax.tree.map(lambda r: r[0], buf)
-        return buf, head
+        if self.tau == 1:
+            return buf, buf
+        if not self.tau_vector:
+            return buf, jax.tree.map(lambda r: r[0], buf)
+        p = self._pull_pos(widx)
+        if isinstance(p, int):
+            return buf, jax.tree.map(lambda r: r[p], buf)
+        return buf, jax.tree.map(
+            lambda r: jax.lax.dynamic_index_in_dim(r, p, axis=0,
+                                                   keepdims=False), buf)
 
-    def staleness_correction(self, pending_buf, message: str, lr: float):
+    def staleness_correction(self, pending_buf, message: str, lr: float,
+                             widx=None):
         """The delayed worker's in-flight messages in update units — the
         staleness-correction proxy added to the OMD lookahead. For τ>1
-        this sums the whole ring: all τ outstanding messages land at the
-        server before the current one (the τ-step recursion of
-        DESIGN.md §8)."""
+        this sums the not-yet-applied slots: all of them (the τ-step
+        recursion of DESIGN.md §8), or the τ_m slots from this worker's
+        pull position on under a tau_vector."""
         if pending_buf is None:
             return None
         if self.tau > 1:
-            tot = jax.tree.map(lambda r: r.sum(axis=0), pending_buf)
+            p = self._pull_pos(widx) if self.tau_vector else 0
+            if isinstance(p, int):
+                # static pull position (homogeneous / constant vector):
+                # r[0:] folds away, keeping the plain-delayed graph
+                tot = jax.tree.map(lambda r: r[p:].sum(axis=0),
+                                   pending_buf)
+            else:
+                w = (jnp.arange(self.tau) >= p).astype(jnp.float32)
+                tot = jax.tree.map(
+                    lambda r: jnp.tensordot(w, r.astype(jnp.float32),
+                                            axes=1).astype(r.dtype),
+                    pending_buf)
         else:
             tot = pending_buf
         if message == "update":
@@ -333,18 +444,20 @@ class Schedule:
                 [r[1:], m[None].astype(r.dtype)], axis=0),
             pending_buf, new_message)
 
-    def advance_version(self, old_version, step, mask=None):
+    def advance_version(self, old_version, step, mask=None, widx=None):
         """Push/pull version after an exchange: a participating worker's
-        applied message was produced τ steps ago; a worker sitting the
-        round out (mask 0) keeps its old version — its staleness keeps
-        growing while the folded message rides the EF residual."""
-        v_new = (step - self.tau).astype(jnp.int32)
+        applied message was produced τ (or τ_m) steps ago; a worker
+        sitting the round out (mask 0) keeps its old version — its
+        staleness keeps growing while the folded message rides the EF
+        residual."""
+        tau_m = self._tau_of(widx)
+        v_new = (step - tau_m).astype(jnp.int32)
         if mask is None:
             return v_new
         return jnp.where(mask > 0, v_new, old_version)
 
     def fold(self, sched_state, message, head, do_exchange, step, mask,
-             zeros: Callable[[Any], Any]):
+             zeros: Callable[[Any], Any], widx=None):
         """One step of schedule dataflow: (exchange_message | None,
         new_sched_state | None). `message` is this step's fresh message,
         `head` the delayed ring head from `wire_head`, `zeros(tree)` the
@@ -367,7 +480,7 @@ class Schedule:
         return head, {
             "pending": self.shift(sched_state["pending"], message),
             "versions": self.advance_version(
-                sched_state["versions"], step, mask),
+                sched_state["versions"], step, mask, widx),
         }
 
     def staleness_now(self, step, new_sched):

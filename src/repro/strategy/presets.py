@@ -41,6 +41,15 @@ PRESETS: Dict[str, Strategy] = {
     "byte_budget": Strategy(
         compression=Compression(plan="delta_budget", budget_mb=1.0),
         exchange=ExchangePlan(kind="two_phase")),
+    # Round-adaptive byte budget (DESIGN.md §10): a PlanFamily re-runs
+    # the descent per participation count, so when only half the workers
+    # report each round their effective budget doubles and the reporting
+    # workers quantize finer — same fleet-average bytes as byte_budget.
+    "adaptive_budget": Strategy(
+        compression=Compression(plan="delta_budget", budget_mb=1.0,
+                                adaptive=True),
+        exchange=ExchangePlan(kind="two_phase"),
+        participation=Participation(fraction=0.5)),
     # One-step-stale exchange overlapping compute (PR 2's delayed).
     "overlap": Strategy(schedule=Schedule.delayed(1)),
     # Bounded-staleness parameter server: τ=4 push/pull pipeline under a
@@ -59,6 +68,22 @@ PRESETS: Dict[str, Strategy] = {
 }
 
 
+# one-line docs, rendered by `python -m repro.strategy --list-presets`
+PRESET_DOCS: Dict[str, str] = {
+    "paper_dqgan": "the paper's Algorithm 2: qsgd8 + EF, lockstep",
+    "exact_baseline": "full-precision exact averaging (CPOAdam wire)",
+    "quantized_no_ef": "quantized but no error feedback (CPOAdam-GQ)",
+    "low_bandwidth": "two_phase int8 over size-tiered buckets, local_k=4",
+    "byte_budget": "static per-bucket bit-width descent to 1 MiB/step",
+    "adaptive_budget": "round-adaptive PlanFamily: absent workers' byte "
+                       "budget re-spent on finer bits (participation 0.5)",
+    "overlap": "one-step-stale exchange overlapping compute",
+    "ssp_server": "bounded-staleness τ=4 server under mild stragglers",
+    "partial_participation": "half the workers report per round",
+    "fsdp_vmap": "100B-scale FSDP layout, workers as a vmapped axis",
+}
+
+
 def get_preset(name: str) -> Strategy:
     try:
         return PRESETS[name]
@@ -68,10 +93,12 @@ def get_preset(name: str) -> Strategy:
             f"{sorted(PRESETS)}") from None
 
 
-def register_preset(name: str, strategy: Strategy) -> None:
+def register_preset(name: str, strategy: Strategy, doc: str = "") -> None:
     """Add a preset (experiment configs may register their own)."""
     if not isinstance(strategy, Strategy):
         raise StrategyError(
             f"strategy: preset {name!r} must be a Strategy, got "
             f"{type(strategy).__name__}")
     PRESETS[name] = strategy
+    if doc:
+        PRESET_DOCS[name] = doc

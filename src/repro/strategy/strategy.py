@@ -41,12 +41,14 @@ LEGACY_FIELDS: Dict[str, Tuple[str, str]] = {
     "comm_plan": ("compression", "plan"),
     "bucket_mb": ("compression", "bucket_mb"),
     "comm_budget_mb": ("compression", "budget_mb"),
+    "comm_adaptive": ("compression", "adaptive"),
     "exchange": ("exchange", "kind"),
     "spmd": ("exchange", "spmd"),
     "worker_axes": ("exchange", "worker_axes"),
     "schedule": ("schedule", "kind"),
     "local_k": ("schedule", "k"),
     "staleness_tau": ("schedule", "tau"),
+    "tau_vector": ("schedule", "tau_vector"),
     "participation": ("participation", "fraction"),
     "straggler_profile": ("participation", "straggler_profile"),
 }
@@ -159,7 +161,8 @@ class Strategy:
         bits = [f"{c.compressor}{'+ef' if c.error_feedback else ''}",
                 e.kind, s.describe()]
         if c.bucketing:
-            bits.append(f"plan={c.plan}")
+            bits.append(f"plan={c.plan}"
+                        + ("(adaptive)" if c.adaptive else ""))
         if p.partial:
             bits.append(f"part={p.fraction}")
         if p.straggler_profile != "none":

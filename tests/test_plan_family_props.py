@@ -1,0 +1,62 @@
+"""Hypothesis property tests for the round-adaptive PlanFamily
+(DESIGN.md §10): for every participation count n the member payload fits
+the effective budget B·M/n (or sits at the ladder floor), per-bucket
+bit-widths are monotone in n, min_delta is non-increasing in n, and the
+n = M member is exactly the static delta_budget plan."""
+import pytest
+
+from repro import comm
+from repro.comm.planner import plan_comm, plan_family
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (pip install .[dev])")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+
+@st.composite
+def _layout_and_budget(draw):
+    n_leaves = draw(st.integers(1, 6))
+    shapes = {f"l{i}": (draw(st.integers(1, 400)), draw(st.integers(1, 400)))
+              for i in range(n_leaves)}
+    M = draw(st.sampled_from([1, 2, 4, 8]))
+    bucket_bytes = draw(st.sampled_from([1 << 14, 1 << 16, 1 << 18]))
+    layout = comm.build_layout(shapes, None, n_workers=M,
+                               bucket_bytes=bucket_bytes)
+    full = plan_comm(layout, "qsgd8_linf", "uniform").payload_bytes
+    frac = draw(st.floats(0.05, 1.5))
+    return layout, M, max(1, int(full * frac))
+
+
+@given(_layout_and_budget())
+@settings(max_examples=40, deadline=None)
+def test_family_invariants(case):
+    """For every n: payload ≤ effective budget B·M/n (or the plan sits at
+    the ladder floor), per-bucket bit-widths monotone non-decreasing as n
+    drops, min_delta non-increasing in n."""
+    layout, M, budget = case
+    fam = plan_family(layout, "qsgd8_linf", budget, M)
+    assert len(fam.plans) == M
+    bits = fam.bits_table()
+    floor_bits = 2  # qsgd2 floor of the linf quant ladder
+    for n in range(1, M + 1):
+        p = fam.plan_for(n)
+        at_floor = all(b == floor_bits for b in bits[n - 1])
+        assert p.payload_bytes <= fam.effective_budget(n) or at_floor, \
+            (n, p.payload_bytes, fam.effective_budget(n))
+    for bid in range(len(layout.buckets)):
+        col = [bits[n][bid] for n in range(M)]  # n increasing
+        assert all(a >= b for a, b in zip(col, col[1:])), (bid, col)
+    deltas = [fam.plan_for(n).min_delta for n in range(1, M + 1)]
+    assert all(a >= b - 1e-12 for a, b in zip(deltas, deltas[1:])), deltas
+
+
+@given(_layout_and_budget())
+@settings(max_examples=25, deadline=None)
+def test_family_full_member_is_the_static_plan(case):
+    """The n = M member IS plan_comm's static delta_budget plan — the
+    bit-exactness anchor for full-participation adaptive training."""
+    layout, M, budget = case
+    fam = plan_family(layout, "qsgd8_linf", budget, M)
+    static = plan_comm(layout, "qsgd8_linf", "delta_budget",
+                       budget_bytes=budget)
+    assert fam.full.assignments == static.assignments
