@@ -47,8 +47,18 @@ def _timeit(fn, *args, iters=20, warmup=3):
     return (time.perf_counter() - t0) / iters * 1e6  # us
 
 
+# run sink (repro.obs): when --obs-sink is given, every CSV row also
+# lands in the structured event stream as a bench_row event (and
+# bench_comm emits full comm_summary events), so CI can archive one
+# JSONL artifact per benchmark run and `repro.obs report` can read it.
+_SINK = None
+
+
 def row(name, us, derived):
     print(f"{name},{us:.1f},{derived}", flush=True)
+    if _SINK is not None:
+        _SINK.emit("bench_row", name=name, us=round(us, 1),
+                   derived=derived)
 
 
 # --------------------------------------------------------------------------- #
@@ -433,6 +443,18 @@ def bench_comm(quick: bool, sim_steps: int = 0):
                     f"cum_wire_mb={s['cumulative_wire_bytes']/1e6:.1f} "
                     f"ratio={s['compression_ratio']} "
                     f"fallbacks={s['n_fallbacks']}/{s['n_entries']}")
+                # the bucketed planner's per-bucket wire accounting
+                # (bits, payload, analytic δ) rides along as CSV rows
+                for pb in s.get("per_bucket", []):
+                    row(f"comm/{arch}/W{W}/{mode}/bucket{pb['bucket']}",
+                        0.0,
+                        f"comp={pb['compressor']} bits={pb['bits']} "
+                        f"elems={pb['elems']} "
+                        f"payload_b={pb['payload_bytes']} "
+                        f"delta={pb['delta']}")
+                if _SINK is not None:
+                    _SINK.emit("comm_summary", arch=arch, workers=W,
+                               mode=mode, **s)
             assert (rec[f"bucketed_W{W}"]["n_fallbacks"]
                     <= rec[f"seed_W{W}"]["n_fallbacks"])
         # the non-power-of-two worker count is where bucketing pays off
@@ -701,10 +723,17 @@ def main(argv=None):
                     help="baseline JSON (a committed experiments/sched.json) "
                          "to gate the sched section against: >10% regression "
                          "in modeled step time or wire bytes fails the run")
+    ap.add_argument("--obs-sink", default="", metavar="PATH",
+                    help="also write every row as a repro.obs bench_row "
+                         "event (JSONL) for `python -m repro.obs report`")
     args = ap.parse_args(argv)
     only = set(args.only.split(",")) if args.only else None
     if args.check_against and (only is None or "sched" not in only):
         ap.error("--check-against gates the sched section; add --only sched")
+    global _SINK
+    if args.obs_sink:
+        from repro import obs as obs_api
+        _SINK = obs_api.make_sink(args.obs_sink)
     print("name,us_per_call,derived")
     os.makedirs("experiments", exist_ok=True)
     if not only or "compression" in only:
@@ -756,6 +785,9 @@ def main(argv=None):
         bench_speedup(args.quick)
     if not only or "convergence" in only:
         bench_convergence(args.quick)
+    if _SINK is not None:
+        _SINK.close()
+        _SINK = None
 
 
 if __name__ == "__main__":

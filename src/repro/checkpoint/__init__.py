@@ -112,10 +112,11 @@ def latest_step(path: str) -> Optional[int]:
     return read_meta(path).get("step")
 
 
-# strategy fields consumed only by the host-side wall-clock model — they
-# affect neither the DQState layout nor the training semantics, so a
-# resume may change them freely.
-_HOST_ONLY_FIELDS = ("participation.straggler_profile",)
+# strategy fields that affect neither the DQState layout nor the
+# training semantics, so a resume may change them freely: the host-side
+# wall-clock model's straggler profile, and the repro.obs telemetry
+# knobs (contractually trajectory-invariant, DESIGN.md §11).
+_HOST_ONLY_FIELDS = ("participation.straggler_profile", "observability.")
 
 
 def verify_strategy(path: str, strategy: Any) -> None:

@@ -31,7 +31,7 @@ from repro.core import compressors as C
 from repro.core import exchange as X
 
 from .buckets import BucketLayout
-from .planner import CommPlan
+from .planner import CommPlan, analytic_delta
 
 
 # --------------------------------------------------------------------------- #
@@ -106,6 +106,7 @@ class CommLedger:
     family: Optional[object] = None   # planner.PlanFamily | None
     cum_wire: float = 0.0    # participation-aware cumulative bytes
     cum_carried: float = 0.0
+    budget_bytes: float = 0.0  # delta_budget payload target/worker (0 = none)
     last_participants: Optional[int] = None
     _round_memo: dict = field(default_factory=dict, repr=False)
 
@@ -125,7 +126,7 @@ class CommLedger:
     def from_plan(cls, layout: BucketLayout, plan: CommPlan, strategy: str,
                   n_workers: int, base_compressor: str,
                   leaf_plans: Optional[list] = None,
-                  family=None) -> "CommLedger":
+                  family=None, budget_bytes: float = 0.0) -> "CommLedger":
         """Ledger for the bucketed path: one entry per bucket (its assigned
         compressor) + one per skipped leaf on the per-tensor path.
         ``leaf_plans`` are the exchange.plan_leaf dicts for skipped leaves
@@ -134,8 +135,13 @@ class CommLedger:
         are sharded, and the spec is gone from the layout — so we account
         them conservatively as sim fallbacks (full-precision wire).
         ``family`` attaches the round-adaptive PlanFamily so ticks billed
-        at participants=n re-price the buckets under the selected plan."""
-        led = cls(n_workers=max(n_workers, 1), family=family)
+        at participants=n re-price the buckets under the selected plan;
+        ``budget_bytes`` the delta_budget payload target so per-bucket
+        rows can report utilization against the effective budget."""
+        if not budget_bytes and family is not None:
+            budget_bytes = float(getattr(family, "budget_bytes", 0) or 0)
+        led = cls(n_workers=max(n_workers, 1), family=family,
+                  budget_bytes=float(budget_bytes))
         W = max(n_workers, 2)  # collective multipliers degenerate at W=1
         for b, a in zip(layout.buckets, plan.assignments):
             led.register(f"bucket/{b.bid}", strategy, C.get(a.compressor),
@@ -251,6 +257,53 @@ class CommLedger:
     def n_fallbacks(self) -> int:
         return sum(1 for e in self.entries if e.fallback)
 
+    def effective_budget(self, participants: Optional[int] = None) -> float:
+        """The per-participant payload budget of a round: B at full
+        participation, B·M/n when only n of M workers report (the
+        round-adaptive re-spend, DESIGN.md §10). 0 when no budget."""
+        if not self.budget_bytes:
+            return 0.0
+        n, M = participants, self.n_workers
+        if n is None or not M or n >= M:
+            return self.budget_bytes
+        return self.budget_bytes * M / max(n, 1)
+
+    def per_bucket(self, participants: Optional[int] = None) -> list:
+        """One row per comm bucket — bits / payload / analytic δ /
+        utilization vs the effective budget — priced under the plan the
+        round actually selected (the PlanFamily member for
+        ``participants=n``, else the static full plan). obs/report.py
+        and PlanFamily debugging read these instead of re-deriving."""
+        n, M = participants, self.n_workers
+        plan = None
+        if (n is not None and M and n < M and self.family is not None):
+            plan = self.family.plan_for(n)
+        eff = self.effective_budget(participants)
+        rows = []
+        for e in self.entries:
+            if e.bucket < 0:
+                continue
+            name = (plan.assignments[e.bucket].compressor if plan is not None
+                    else e.compressor)
+            comp = C.get(name)
+            payload = int(comp.wire_bytes((e.elems,)))
+            row = {
+                "bucket": e.bucket,
+                "compressor": name,
+                "bits": getattr(comp, "bits", None),
+                "elems": e.elems,
+                "payload_bytes": payload,
+                "wire_bytes": round(strategy_wire_bytes(
+                    e.strategy, comp, (e.elems,), e.n_workers), 1),
+                "delta": round(analytic_delta(comp, e.elems), 4),
+            }
+            if eff:
+                # this bucket's spend as a fraction of the round budget;
+                # the rows sum to the round's budget utilization
+                row["budget_share"] = round(payload / eff, 4)
+            rows.append(row)
+        return rows
+
     def summary(self) -> dict:
         out = {
             "steps": self.steps,
@@ -266,4 +319,12 @@ class CommLedger:
         }
         if self.last_participants is not None:
             out["participants"] = self.last_participants
+        rows = self.per_bucket(self.last_participants)
+        if rows:
+            out["per_bucket"] = rows
+            if self.budget_bytes:
+                eff = self.effective_budget(self.last_participants)
+                out["budget_bytes"] = round(self.budget_bytes)
+                out["budget_utilization"] = round(
+                    sum(r["payload_bytes"] for r in rows) / eff, 4)
         return out

@@ -348,6 +348,11 @@ class DQConfig:
     # straggler profile name (sched.straggler) — consumed only by the
     # host-side wall-clock model, never by the jitted step.
     straggler_profile: str = "none"
+    # repro.obs telemetry level ("off" | "wire" | "full") and phase-span
+    # toggle — jit-static, contractually trajectory-invariant (excluded
+    # from Strategy.short_hash(); DESIGN.md §11).
+    obs_metrics: str = "off"
+    obs_spans: bool = False
 
     # ------------------------------------------------------------------ #
     # the strategy shim (repro.strategy, DESIGN.md §9)

@@ -40,6 +40,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import DQConfig
 from repro.strategy import Strategy
+from repro import obs as OBS
 from . import compressors as C
 from . import exchange as X
 
@@ -176,6 +177,35 @@ class DQGAN:
         """The PlanFamily, or None for non-adaptive strategies."""
         return self._comm_full(tree)[2]
 
+    # ------------------------------------------------------------------ #
+    # repro.obs wiring (DESIGN.md §11) — all jit-static
+    # ------------------------------------------------------------------ #
+    @property
+    def obs_spec(self):
+        """The resolved `repro.obs.MetricSpec` for this trainer."""
+        return self.strategy.observability.spec()
+
+    @property
+    def _obs_spans(self) -> bool:
+        return self.strategy.observability.spans
+
+    def _obs_bins(self) -> int:
+        """Staleness-histogram bins: 0..τ plus one overflow bin (partial
+        participation lets a sitting worker's staleness exceed τ)."""
+        return self.strategy.schedule.staleness + 2
+
+    def _obs_n_buckets(self, tree) -> int:
+        return len(self._comm(tree)[0].buckets) if self.bucketed else 0
+
+    def _obs_collector(self, tree):
+        """A live `Collector` when metrics are on, else the no-op
+        `NullCollector` (whose record calls leave the trace untouched —
+        the metrics="off" bit-exactness contract)."""
+        spec = self.obs_spec
+        if not spec.on:
+            return OBS.NullCollector()
+        return OBS.Collector(spec, self._obs_n_buckets(tree))
+
     def comm_ledger(self, params) -> "Any":
         """CommLedger describing this trainer's per-step wire cost (used by
         launch.train logs and benchmarks.run)."""
@@ -187,10 +217,12 @@ class DQGAN:
             layout, cplan, family = self._comm_full(params)
             flat_plans = jax.tree.leaves(self._plans(params), is_leaf=_is_plan)
             leaf_plans = [flat_plans[s.index] for s in layout.skipped]
+            budget = (int(strat.compression.budget_mb * (1 << 20))
+                      if strat.compression.plan == "delta_budget" else 0)
             return CommLedger.from_plan(
                 layout, cplan, strat.exchange.kind, self.n_workers,
                 strat.compression.compressor, leaf_plans=leaf_plans,
-                family=family)
+                family=family, budget_bytes=budget)
         return CommLedger.from_tree(
             strat.exchange.kind, strat.compression.compressor, shapes,
             self.param_specs, self.n_workers)
@@ -460,11 +492,16 @@ class DQGAN:
             bspec = P(axes)
         batch_specs = jax.tree.map(lambda _: bspec, batch)
 
-        out_specs = StepOutput(
-            state=state_specs,
-            metrics={"loss": rep, "grad_norm": rep, "error_norm": rep,
-                     "staleness_max": rep, "staleness_mean": rep},
-        )
+        metric_specs = {"loss": rep, "grad_norm": rep, "error_norm": rep,
+                        "staleness_max": rep, "staleness_mean": rep}
+        obs_spec = self.obs_spec
+        if obs_spec.on:
+            # obs metrics ride out replicated; the key set is the static
+            # `metric_keys` contract shared with metrics.finalize
+            metric_specs["obs"] = {
+                k: rep for k in OBS.metric_keys(
+                    obs_spec, self._obs_n_buckets(state.params))}
+        out_specs = StepOutput(state=state_specs, metrics=metric_specs)
         from repro.parallel.compat import key_across_boundary, shard_map
 
         key, converted = key_across_boundary(key)
@@ -520,6 +557,13 @@ class DQGAN:
         mask_vec = part_setup[0] if has_part else jnp.ones((W,), jnp.float32)
         n_part = part_setup[1] if has_part else W
         exchanging = not (schedule == "local_k" and not do_exchange)
+        obs_spec = self.obs_spec
+        spans = self._obs_spans
+        # vmap forbids bucketing (Strategy validation), so the collector
+        # runs aggregate-only; its per-worker sums ride out of the vmap
+        # stacked and are summed over axis 0 below.
+        col = (OBS.Collector(obs_spec, 0) if obs_spec.on
+               else OBS.NullCollector())
 
         def worker(prev_g, ef, sw, b, i, mask):
             kw = jax.random.fold_in(jax.random.fold_in(key, i), state.step)
@@ -553,7 +597,8 @@ class DQGAN:
                                       state.params, upd_tree)
             else:
                 w_half = state.params
-            grads, metrics = self.field_fn(w_half, b, kf)
+            with OBS.device_span("field", spans):
+                grads, metrics = self.field_fn(w_half, b, kf)
             if dq.message == "update" and dq.optimizer == "omd":
                 msg = jax.tree.map(lambda g: (eta * g).astype(jnp.float32),
                                    grads)
@@ -579,6 +624,11 @@ class DQGAN:
                     _, p_hat, e_new = compress_with_ef(
                         comp, m_in, e_in, jax.random.fold_in(kq, j),
                         use_ef=dq.error_feedback, allow_fused=False)  # vmapped
+                    if col.enabled:
+                        # the wire stream (masked under participation, as
+                        # in the shard_map path) and the pre-merge
+                        # residual: exactly m_in + e_in − Q(·)
+                        col.leaf(m_in, m_in + e_in, e_new)
                     if has_part and dq.error_feedback:
                         e_new = mask * e_new + (1.0 - mask) * (e1 + m)
                     phats.append(p_hat)
@@ -587,12 +637,12 @@ class DQGAN:
                 phat = jax.tree.unflatten(treedef, phats)
                 enew = (jax.tree.unflatten(treedef, enews)
                         if dq.error_feedback else None)
-            return phat, enew, new_sw, grads, metrics.get("loss",
-                                                          jnp.zeros(()))
+            return (phat, enew, new_sw, grads,
+                    metrics.get("loss", jnp.zeros(())), col.sums())
 
         prev_g = state.prev_grad
         ef = state.ef if dq.error_feedback else None
-        phat_w, ef_w, sched_w, grads_w, loss_w = jax.vmap(
+        phat_w, ef_w, sched_w, grads_w, loss_w, obs_sums_w = jax.vmap(
             worker,
             in_axes=(0, 0 if ef is not None else None, 0, 0, 0, 0),
         )(prev_g, ef, state.sched, batch_w, widx, mask_vec)
@@ -600,13 +650,15 @@ class DQGAN:
         new_m, new_v, new_prev_update = state.m, state.v, state.prev_update
         new_ef = state.ef
         if exchanging:
-            qhat = jax.tree.map(lambda x: jnp.mean(x, axis=0), phat_w)
-            if has_part:
-                scale = W / n_part
-                qhat = jax.tree.map(lambda q: (q * scale).astype(q.dtype),
-                                    qhat)
-            new_params, new_m, new_v, new_prev_update = self._server_update(
-                state, qhat)
+            with OBS.device_span("exchange", spans):
+                qhat = jax.tree.map(lambda x: jnp.mean(x, axis=0), phat_w)
+                if has_part:
+                    scale = W / n_part
+                    qhat = jax.tree.map(
+                        lambda q: (q * scale).astype(q.dtype), qhat)
+            with OBS.device_span("apply", spans):
+                new_params, new_m, new_v, new_prev_update = (
+                    self._server_update(state, qhat))
             if dq.error_feedback and ef_w is not None:
                 new_ef = jax.tree.map(
                     lambda o, n: n.astype(o.dtype), state.ef, ef_w)
@@ -633,11 +685,25 @@ class DQGAN:
             st_max, st_mean = jnp.max(st_now), jnp.mean(st_now)
         else:
             st_max = st_mean = jnp.zeros(())
-        return StepOutput(state=new_state,
-                          metrics={"loss": jnp.mean(loss_w),
-                                   "grad_norm": gn, "error_norm": en,
-                                   "staleness_max": st_max,
-                                   "staleness_mean": st_mean})
+        out_metrics = {"loss": jnp.mean(loss_w),
+                       "grad_norm": gn, "error_norm": en,
+                       "staleness_max": st_max,
+                       "staleness_mean": st_mean}
+        if obs_spec.on:
+            # per-worker sums come out of the vmap stacked — the axis-0
+            # sum is the fleet reduction (the shard_map path's psum)
+            sums = jax.tree.map(lambda x: jnp.sum(x, axis=0), obs_sums_w)
+            if obs_spec.ef_norms:
+                sums["e1_sq"], sums["e2_sq"] = OBS.ef_norms_sq(new_ef)
+            if obs_spec.staleness:
+                st_vec = (sched_c.staleness_now(state.step, new_sched)
+                          if schedule == "delayed"
+                          else jnp.zeros((W,), jnp.float32))
+                sums["staleness_hist"] = OBS.staleness_hist(
+                    st_vec, self._obs_bins())
+            out_metrics["obs"] = OBS.finalize(obs_spec, sums, col.counts(),
+                                              W, 0)
+        return StepOutput(state=new_state, metrics=out_metrics)
 
     # ------------------------------------------------------------------ #
     def _worker_body(self, state, batch, key, widx_arr, plans, axes, squeeze,
@@ -735,7 +801,8 @@ class DQGAN:
             w_half = params  # adam/oadam/sgd evaluate at current params
 
         # ---------- local stochastic field -------------------------------- #
-        grads, metrics = self.field_fn(w_half, batch, kfield)
+        with OBS.device_span("field", self._obs_spans):
+            grads, metrics = self.field_fn(w_half, batch, kfield)
 
         # ---------- message + schedule dataflow --------------------------- #
         if dq.message == "update" and dq.optimizer == "omd":
@@ -751,12 +818,15 @@ class DQGAN:
             part[0] if part is not None else None, _tree_zeros, widx)
 
         # ---------- exchange + server-side update ------------------------- #
+        col = self._obs_collector(state.params)
         if exch_msg is not None:
-            qhat, new_ef = self._exchange_tree(exch_msg, ef, plans, kq, axes,
-                                               widx=widx, part=part,
-                                               plan_sel=plan_sel)
-            new_params, new_m, new_v, new_prev_update = self._server_update(
-                state, qhat)
+            with OBS.device_span("exchange", self._obs_spans):
+                qhat, new_ef = self._exchange_tree(
+                    exch_msg, ef, plans, kq, axes, widx=widx, part=part,
+                    plan_sel=plan_sel, col=col)
+            with OBS.device_span("apply", self._obs_spans):
+                new_params, new_m, new_v, new_prev_update = (
+                    self._server_update(state, qhat))
         else:
             new_params = params
             new_m, new_v, new_prev_update = state.m, state.v, state.prev_update
@@ -781,6 +851,23 @@ class DQGAN:
             st_max = jax.lax.pmax(st_now, axes)
             st_mean = jax.lax.pmean(st_now, axes)
 
+        obs_spec = self.obs_spec
+        obs_out = None
+        if obs_spec.on:
+            # fleet reduction: sums (not means) across workers, so the
+            # δ̂ ratio and moment denominators weigh every worker's
+            # elements once and masked participation rounds drop out
+            sums = col.sums()
+            if obs_spec.ef_norms:
+                sums["e1_sq"], sums["e2_sq"] = OBS.ef_norms_sq(new_ef)
+            if obs_spec.staleness:
+                sums["staleness_hist"] = OBS.staleness_hist(
+                    st_now, self._obs_bins())
+            if axes:
+                sums = jax.tree.map(lambda x: jax.lax.psum(x, axes), sums)
+            obs_out = OBS.finalize(obs_spec, sums, col.counts(), W,
+                                   col.n_buckets if col.enabled else 0)
+
         new_state = DQState(
             step=state.step + 1,
             params=new_params,
@@ -791,11 +878,11 @@ class DQGAN:
             v=new_v,
             sched=putw(new_sched),
         )
-        return StepOutput(
-            state=new_state,
-            metrics={"loss": loss, "grad_norm": gn, "error_norm": en,
-                     "staleness_max": st_max, "staleness_mean": st_mean},
-        )
+        out_metrics = {"loss": loss, "grad_norm": gn, "error_norm": en,
+                       "staleness_max": st_max, "staleness_mean": st_mean}
+        if obs_out is not None:
+            out_metrics["obs"] = obs_out
+        return StepOutput(state=new_state, metrics=out_metrics)
 
     # ------------------------------------------------------------------ #
     # (the schedule/participation dataflow helpers live on the strategy
@@ -858,13 +945,16 @@ class DQGAN:
 
     # ------------------------------------------------------------------ #
     def _exchange_tree(self, message, ef, plans, key, axes, widx=None,
-                       part=None, plan_sel=None):
+                       part=None, plan_sel=None, col=None):
+        if col is None:
+            col = OBS.NullCollector()
         if part is not None:
             return self._exchange_with_participation(
-                message, ef, plans, key, axes, widx, part, plan_sel)
+                message, ef, plans, key, axes, widx, part, plan_sel, col)
         if self.bucketed:
             return self._exchange_bucketed(message, ef, plans, key, axes,
-                                           widx=widx, plan_sel=plan_sel)
+                                           widx=widx, plan_sel=plan_sel,
+                                           col=col)
         dq = self.dq
         comp = self.compressor
         W = self.n_workers
@@ -888,6 +978,8 @@ class DQGAN:
                 q, ne = X.exchange_leaf(
                     comp, pl, p, e, k, axes, W, dq.error_feedback, widx=widx
                 )
+            if col.enabled:
+                col.leaf(p, *_obs_op_err(p, e, ne))
             out.append(q)
             new_ef.append(ne if ne else None)
         qhat = jax.tree.unflatten(treedef, out)
@@ -897,7 +989,7 @@ class DQGAN:
         return qhat, jax.tree.unflatten(treedef, new_ef)
 
     def _exchange_with_participation(self, message, ef, plans, key, axes,
-                                     widx, part, plan_sel=None):
+                                     widx, part, plan_sel=None, col=None):
         """Partial participation (sched.participation, DESIGN.md §5.3):
         this worker's message and worker-side residual are masked to zero
         when it sits the round out — every registry compressor maps 0 to a
@@ -931,7 +1023,8 @@ class DQGAN:
             ef_in = mask_e1(ef)
 
         qhat, new_ef = self._exchange_tree(msg_in, ef_in, plans, key, axes,
-                                           widx=widx, plan_sel=plan_sel)
+                                           widx=widx, plan_sel=plan_sel,
+                                           col=col)
         scale = W / n_part
         qhat = jax.tree.map(lambda q: (q * scale).astype(q.dtype), qhat)
 
@@ -972,7 +1065,7 @@ class DQGAN:
     # repro.comm flat-bucket fast path (DESIGN.md §3)
     # ------------------------------------------------------------------ #
     def _exchange_bucketed(self, message, ef, plans, key, axes, widx=None,
-                           plan_sel=None):
+                           plan_sel=None, col=None):
         """Exchange over bucket views: unsharded leaves are packed into a
         handful of flat, worker-divisible arrays (one collective each, per-
         bucket compressor from the comm planner); sharded leaves keep the
@@ -990,6 +1083,8 @@ class DQGAN:
         which is byte- and bit-identical to the pre-family behavior."""
         from repro.comm import buckets as B
 
+        if col is None:
+            col = OBS.NullCollector()
         dq = self.dq
         W = self.n_workers
         ef_dtype = jnp.dtype(dq.ef_dtype)
@@ -1044,6 +1139,9 @@ class DQGAN:
             else:
                 q, ne = X.exchange_leaf(comp_b, plan_b, flats[b.bid], est, k,
                                         axes, W, dq.error_feedback, widx=widx)
+            if col.enabled:
+                col.bucket(b.bid, flats[b.bid],
+                           *_obs_op_err(flats[b.bid], est, ne))
             out_flats.append(q)
             if dq.error_feedback:
                 new_e1_flats.append(ne.get("e1", est.get("e1")))
@@ -1068,6 +1166,10 @@ class DQGAN:
                     base_comp, plan_leaves[s.index], leaves[s.index],
                     ef_leaves[s.index], k, axes, W, dq.error_feedback,
                     widx=widx)
+            if col.enabled:
+                col.leaf(leaves[s.index],
+                         *_obs_op_err(leaves[s.index], ef_leaves[s.index],
+                                      ne))
             out_leaves[s.index] = q
             skipped_new[s.index] = ne if ne else None
 
@@ -1095,6 +1197,17 @@ def _is_ef_leaf(x):
 
 def _never(x):
     return False
+
+
+def _obs_op_err(p, e, ne):
+    """(compression operand, fresh residual) for obs collection: the
+    operand is message + e_prev (exactly what the compressor saw, f32),
+    the residual the leaf's new e1. Streams that never compress
+    (exact/identity) keep their zero residual, so they read δ̂ = 1."""
+    e1 = e.get("e1") if e else None
+    op = p if e1 is None else p + e1.astype(jnp.float32)
+    err = ne.get("e1") if ne else None
+    return op, (jnp.zeros_like(p) if err is None else err)
 
 
 def _global_norm(tree):

@@ -53,6 +53,18 @@ wall clock (``sim_clock_s``) from the straggler-aware cost model:
     # each round only half the workers report; the rest accumulate EF:
     ... --participation 0.5
 
+Observability (repro.obs, DESIGN.md §11): ``--obs-metrics wire|full``
+turns on on-device telemetry (empirical δ, EF residual norms, per-bucket
+gradient moments, staleness histograms) with a bit-exactness guarantee —
+the trajectory is identical to ``--obs-metrics off``. ``--obs-sink
+PATH`` writes the versioned JSONL event stream (run meta, log rows,
+synced step/interval timings, obs metrics, comm summaries) for
+``python -m repro.obs report PATH``; the default sink renders log rows
+on stdout exactly as before. ``--obs-spans`` adds named profiler spans
+(compress/exchange/apply on device, data/step/eval on the host):
+
+    ... --preset adaptive_budget --obs-metrics full --obs-sink run.jsonl
+
 Checkpointing: ``--checkpoint PATH`` saves the FULL ``DQState`` (params,
 optimizer moments, prev_grad, EF residuals incl. comm-plan bucket
 entries, schedule buffers) at the end and every ``--checkpoint-every N``
@@ -64,7 +76,6 @@ which adds the WGAN weight clipping + evaluation metrics.
 from __future__ import annotations
 
 import argparse
-import json
 import time
 import zipfile
 
@@ -73,6 +84,7 @@ import jax.numpy as jnp
 
 import repro.configs as cfgs
 from repro import checkpoint
+from repro import obs as obs_api
 from repro import strategy as strategy_api
 from repro.configs.base import DQConfig
 from repro.core.dqgan import DQGAN
@@ -107,6 +119,11 @@ def main(argv=None):
     ap.add_argument("--resume", default="",
                     help="restore a full DQState checkpoint and continue")
     ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--obs-sink", default="", metavar="PATH",
+                    help="run-sink backend: '' (quiet stdout, the "
+                         "default rendering), 'stdout' (verbose), "
+                         "'null', or a JSONL file path for "
+                         "`python -m repro.obs report`")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -199,6 +216,17 @@ def main(argv=None):
     print(f"# strategy: {strat.describe()} [{strat.short_hash()}]",
           flush=True)
 
+    # structured run sink (repro.obs): every log/timing/telemetry row is
+    # one schema event keyed by the strategy's structural identity; the
+    # default backend renders log rows on stdout exactly as before
+    sink = obs_api.make_sink(args.obs_sink, strategy_hash=strat.short_hash(),
+                             tee_stdout=True)
+    obs_spans = strat.observability.spans
+    sink.emit("run_meta", steps=args.steps, arch=args.arch,
+              smoke=bool(args.smoke), n_workers=W, start_step=start,
+              strategy_json=strat.to_dict(),
+              obs_metrics=strat.observability.metrics)
+
     if getattr(cfg, "arch_type", "") == "gan":
         it = gan_batch_iterator(args.seed, args.batch, cfg)
     else:
@@ -213,23 +241,33 @@ def main(argv=None):
     t0 = time.time()
     wall_series = None
     warm_variants = set()  # do_exchange values whose jit variant compiled
+    interval_s = 0.0       # synced wall time since the last timing event
+    interval_n = 0
     ctx = set_mesh(mesh) if mesh is not None else _null()
     with ctx:
         for i in range(start, args.steps):
-            batch = next(it)
+            with obs_api.host_span("data", obs_spans):
+                batch = next(it)
             do_exchange = sched.is_exchange_step(i)
+            # every step is timed against a device sync — an unsynced
+            # perf_counter delta only measures dispatch, so without this
+            # the reported step time was only meaningful on the handful
+            # of steps that happened to block (the old wall-series seed)
             it_t0 = time.perf_counter()
-            out = step(state, batch, key, do_exchange)
-            state = out.state
+            with obs_api.host_span("step", obs_spans):
+                out = step(state, batch, key, do_exchange)
+                state = out.state
+                jax.block_until_ready(out.metrics)
+            step_s = time.perf_counter() - it_t0
+            interval_s += step_s
+            interval_n += 1
             if wall_series is None and (do_exchange in warm_variants
                                         or i == args.steps - 1):
                 # base compute time from the first step whose jit variant
                 # already compiled (holds across resumes too); feeds the
                 # simulated (straggler-aware) wall-clock series
-                jax.block_until_ready(out.metrics)
-                base = time.perf_counter() - it_t0
                 times = sstrag.step_times(profile, W, args.steps, args.seed,
-                                          base=base)
+                                          base=step_s)
                 wall_series = sclock.simulate(
                     sched, times, t_ex, strat.participation.fraction,
                     args.seed)["per_step_s"]
@@ -240,7 +278,8 @@ def main(argv=None):
             ledger.tick(exchanged=do_exchange, wall_s=wall,
                         participants=n_part)
             if i % args.log_every == 0 or i == args.steps - 1:
-                m = jax.device_get(out.metrics)
+                with obs_api.host_span("eval", obs_spans):
+                    m = jax.device_get(out.metrics)
                 rec = {"step": i, "round": sched.round_index(i),
                        **({"participants": n_part}
                           if n_part is not None else {}),
@@ -259,12 +298,21 @@ def main(argv=None):
                        "sim_clock_s": round(ledger.sim_clock_s, 3),
                        "elapsed_s": round(time.time() - t0, 1)}
                 history.append(rec)
-                print(json.dumps(rec), flush=True)
+                sink.emit("train_log", **rec)
+                sink.emit("timing", step=i, step_s=round(step_s, 6),
+                          interval_s=round(interval_s, 6),
+                          steps_in_interval=interval_n)
+                interval_s = 0.0
+                interval_n = 0
+                if "obs" in m:
+                    sink.emit("obs_metrics", step=i, **m["obs"])
             if (args.checkpoint and args.checkpoint_every
                     and (i + 1) % args.checkpoint_every == 0
                     and i != args.steps - 1):
                 checkpoint.save(args.checkpoint, state, step=i + 1,
                                 meta={"strategy": strat.to_json()})
+    sink.emit("comm_summary", **ledger.summary())
+    sink.close()
     if args.checkpoint:
         checkpoint.save(args.checkpoint, state,
                         step=int(jax.device_get(state.step)),

@@ -1,0 +1,25 @@
+"""`python -m repro.obs report PATH` — the run-sink report CLI."""
+from __future__ import annotations
+
+import sys
+
+from repro.obs import report
+
+
+def main(argv=None) -> int:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    if not argv or argv[0] in ("-h", "--help"):
+        print("usage: python -m repro.obs report PATH [--json]\n\n"
+              "subcommands:\n"
+              "  report   render a run-sink JSONL file "
+              "(see repro.obs.report)")
+        return 0 if argv else 2
+    cmd, rest = argv[0], argv[1:]
+    if cmd != "report":
+        print(f"unknown subcommand {cmd!r} (only: report)", file=sys.stderr)
+        return 2
+    return report.main(rest)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,249 @@
+"""On-device telemetry collection (DESIGN.md §11).
+
+A `MetricSpec` is the jit-static description of WHAT the train step
+measures; the three registry levels form a lattice::
+
+    off  ⊂  wire (empirical δ + EF residual norms)
+         ⊂  full (adds per-bucket gradient moments + staleness histogram)
+
+The collection discipline keeps the bit-exactness contract cheap to
+verify: `metrics="off"` hands the step a `NullCollector` whose record
+methods are pure-python no-ops — the traced graph is *identical* to a
+build without the obs subsystem (enforced by HLO comparison in
+tests/test_obs.py). Enabled levels accumulate fixed-shape per-worker
+sums inside the jitted step (no host callbacks), the SPMD caller reduces
+them across workers (psum under shard_map, axis-0 sum after vmap), and
+`finalize()` turns the reduced sums into the metric dict that rides out
+of the step under ``metrics["obs"]``.
+
+Empirical δ is read off quantities the step already materializes: the
+compression operand m = message + e_prev and the fresh residual
+e_new = m − Q(m), so δ̂ = 1 − Σ‖e_new‖² / Σ‖m‖² costs two dot products
+per bucket and no extra compressor call. The Σ runs over the fleet
+(psum of both numerator and denominator), so workers sitting a
+participation round out (masked to m = 0, e_new = 0) drop out of the
+ratio instead of biasing it.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+_TINY = 1e-30
+
+
+# --------------------------------------------------------------------------- #
+@dataclass(frozen=True)
+class MetricSpec:
+    """Jit-static switchboard of on-device metric groups. Frozen and
+    hashable so it can ride in jit-static closures."""
+
+    name: str
+    moments: bool = False    # per-bucket + aggregate message mean/var
+    delta: bool = False      # empirical δ̂ per bucket + aggregate
+    ef_norms: bool = False   # ‖e1‖, ‖e2‖ fleet-wide residual norms
+    staleness: bool = False  # staleness histogram (delayed schedules)
+
+    @property
+    def on(self) -> bool:
+        return self.moments or self.delta or self.ef_norms or self.staleness
+
+
+METRIC_SPECS: Dict[str, MetricSpec] = {
+    "off": MetricSpec("off"),
+    "wire": MetricSpec("wire", delta=True, ef_norms=True),
+    "full": MetricSpec("full", moments=True, delta=True, ef_norms=True,
+                       staleness=True),
+}
+
+
+def metric_keys(spec: MetricSpec, n_buckets: int) -> Tuple[str, ...]:
+    """The keys of the finalized ``metrics["obs"]`` dict, in emission
+    order — shared by `finalize` and the shard_map out_specs builder so
+    the two can never drift."""
+    keys: List[str] = []
+    if spec.moments:
+        keys += ["msg_mean", "msg_var"]
+        if n_buckets:
+            keys += ["bucket_mean", "bucket_var"]
+    if spec.delta:
+        keys += ["delta_hat"]
+        if n_buckets:
+            keys += ["bucket_delta"]
+    if spec.ef_norms:
+        keys += ["ef_e1_norm", "ef_e2_norm"]
+    if spec.staleness:
+        keys += ["staleness_hist"]
+    return tuple(keys)
+
+
+# --------------------------------------------------------------------------- #
+class NullCollector:
+    """The `metrics="off"` collector: every record method is a pure-python
+    no-op, so the traced step graph is bit-identical to a build without
+    the obs subsystem."""
+
+    enabled = False
+    n_buckets = 0
+
+    def bucket(self, bid, raw, op, err):
+        pass
+
+    def leaf(self, raw, op, err):
+        pass
+
+    def sums(self) -> dict:
+        return {}
+
+    def counts(self) -> dict:
+        return {"agg": 0, "bucket": []}
+
+
+class Collector:
+    """Accumulates per-worker metric sums during one step trace.
+
+    `bucket(bid, raw, op, err)` records one comm bucket: ``raw`` the
+    packed gradient message, ``op`` the compression operand
+    (raw + e_prev) and ``err`` the fresh residual e_new = op − Q(op).
+    `leaf(raw, op, err)` records a non-bucketed tensor (skipped sharded
+    leaves, per-tensor strategies, the vmap path) into the aggregate
+    slots only. Element counts are jit-static (bucket sizes and tensor
+    shapes are), so `counts` never touches the device."""
+
+    enabled = True
+
+    def __init__(self, spec: MetricSpec, n_buckets: int):
+        self.spec = spec
+        self.n_buckets = n_buckets
+        z = jnp.zeros(())
+        self._agg = {"msg_sum": z, "msg_sq": z, "op_sq": z, "err_sq": z}
+        self._bkt = {k: [jnp.zeros(())] * n_buckets
+                     for k in ("msg_sum", "msg_sq", "op_sq", "err_sq")}
+        self._n_agg = 0
+        self._n_bkt = [0] * n_buckets
+
+    # ---- record ------------------------------------------------------ #
+    def _agg_add(self, raw, op, err):
+        s = self.spec
+        if s.moments:
+            r = raw.astype(jnp.float32)
+            self._agg["msg_sum"] = self._agg["msg_sum"] + jnp.sum(r)
+            self._agg["msg_sq"] = self._agg["msg_sq"] + jnp.sum(r * r)
+            self._n_agg += raw.size
+        if s.delta:
+            o = op.astype(jnp.float32)
+            e = err.astype(jnp.float32)
+            self._agg["op_sq"] = self._agg["op_sq"] + jnp.sum(o * o)
+            self._agg["err_sq"] = self._agg["err_sq"] + jnp.sum(e * e)
+            if not s.moments:
+                self._n_agg += raw.size
+
+    def bucket(self, bid: int, raw, op, err):
+        s = self.spec
+        if s.moments:
+            r = raw.astype(jnp.float32)
+            self._bkt["msg_sum"][bid] = jnp.sum(r)
+            self._bkt["msg_sq"][bid] = jnp.sum(r * r)
+        if s.delta:
+            o = op.astype(jnp.float32)
+            e = err.astype(jnp.float32)
+            self._bkt["op_sq"][bid] = jnp.sum(o * o)
+            self._bkt["err_sq"][bid] = jnp.sum(e * e)
+        self._n_bkt[bid] = raw.size
+        self._agg_add(raw, op, err)
+
+    def leaf(self, raw, op, err):
+        self._agg_add(raw, op, err)
+
+    # ---- export ------------------------------------------------------ #
+    def sums(self) -> dict:
+        """The fixed-shape per-worker sums: scalar aggregates plus
+        (n_buckets,) stacks. The SPMD caller reduces this dict across
+        workers before `finalize`."""
+        out = dict(self._agg)
+        if self.n_buckets:
+            for k, vals in self._bkt.items():
+                out["b_" + k] = jnp.stack(vals)
+        return out
+
+    def counts(self) -> dict:
+        return {"agg": self._n_agg, "bucket": list(self._n_bkt)}
+
+
+def staleness_hist(st, bins: int):
+    """Fixed-shape staleness histogram: bin i counts workers at
+    staleness i, the last bin is the overflow (staleness > τ happens
+    under partial participation — a sitting worker's version keeps
+    aging). `st` is this worker's staleness scalar (shard_map) or the
+    (W,) staleness vector (vmap / single worker); the caller psums or
+    has already summed over workers."""
+    idx = jnp.clip(jnp.round(st).astype(jnp.int32), 0, bins - 1)
+    oh = jax.nn.one_hot(idx, bins, dtype=jnp.float32)
+    if oh.ndim > 1:
+        oh = jnp.sum(oh, axis=tuple(range(oh.ndim - 1)))
+    return oh
+
+
+def ef_norms_sq(new_ef) -> Tuple[jax.Array, jax.Array]:
+    """(Σ‖e1‖², Σ‖e2‖²) over a post-exchange EF tree — handles both the
+    per-tensor layout (tree of {"e1": ..} dicts) and the bucketed
+    {"leaf": .., "bucket": ..} layout. Zeros when the slot is absent."""
+    e1_sq = jnp.zeros(())
+    e2_sq = jnp.zeros(())
+    if new_ef is None:
+        return e1_sq, e2_sq
+
+    def is_ef(x):
+        return isinstance(x, dict) and ("e1" in x or "e2" in x)
+
+    for d in jax.tree.leaves(new_ef, is_leaf=is_ef):
+        if not is_ef(d):
+            continue
+        if "e1" in d:
+            v = d["e1"].astype(jnp.float32)
+            e1_sq = e1_sq + jnp.sum(v * v)
+        if "e2" in d:
+            v = d["e2"].astype(jnp.float32)
+            e2_sq = e2_sq + jnp.sum(v * v)
+    return e1_sq, e2_sq
+
+
+def finalize(spec: MetricSpec, sums: dict, counts: dict, n_workers: int,
+             n_buckets: int) -> dict:
+    """Reduced fleet sums → the ``metrics["obs"]`` dict (keys exactly
+    `metric_keys(spec, n_buckets)`).
+
+    `sums` must already be reduced across workers (psum / axis-sum);
+    `counts` are the per-worker static element counts, so the fleet
+    denominator is count × n_workers. A zero denominator (mid-round
+    local_k step, or an all-masked round) yields mean/var 0 and δ̂ 1."""
+    out = {}
+    W = max(n_workers, 1)
+    n_agg = counts["agg"] * W
+    if spec.moments:
+        mean = sums["msg_sum"] / max(n_agg, 1)
+        out["msg_mean"] = mean
+        out["msg_var"] = jnp.maximum(
+            sums["msg_sq"] / max(n_agg, 1) - mean * mean, 0.0)
+        if n_buckets:
+            nb = jnp.asarray(
+                [max(c * W, 1) for c in counts["bucket"]], jnp.float32)
+            bmean = sums["b_msg_sum"] / nb
+            out["bucket_mean"] = bmean
+            out["bucket_var"] = jnp.maximum(
+                sums["b_msg_sq"] / nb - bmean * bmean, 0.0)
+    if spec.delta:
+        out["delta_hat"] = 1.0 - sums["err_sq"] / jnp.maximum(
+            sums["op_sq"], _TINY)
+        if n_buckets:
+            out["bucket_delta"] = 1.0 - sums["b_err_sq"] / jnp.maximum(
+                sums["b_op_sq"], _TINY)
+    if spec.ef_norms:
+        out["ef_e1_norm"] = jnp.sqrt(sums["e1_sq"])
+        out["ef_e2_norm"] = jnp.sqrt(sums["e2_sq"])
+    if spec.staleness:
+        out["staleness_hist"] = sums["staleness_hist"]
+    return out

@@ -1,0 +1,217 @@
+"""Render a run-sink JSONL file (DESIGN.md §11).
+
+    PYTHONPATH=src python -m repro.obs report experiments/run_sink.jsonl
+
+Sections (each skipped cleanly when its events are absent):
+
+* **timing** — synced per-step wall times from ``timing`` events: the
+  per-step series (mean / min / max) and interval throughput. These are
+  real device-synced times (train.py blocks on the step output every
+  step), not dispatch latencies.
+* **empirical δ vs assumed δ** — joins the last ``obs_metrics`` event's
+  per-bucket δ̂ against the analytic per-bucket δ the planner assumed
+  (``comm_summary.per_bucket[*].delta``); the gap says how conservative
+  the δ-budget plan really is on this gradient stream.
+* **bytes vs budget** — payload utilization against the effective byte
+  budget, overall and per bucket.
+* **EF residual growth** — the fleet ‖e1‖ / ‖e2‖ series across the run;
+  unbounded growth here is the classic sign of a divergent
+  error-feedback loop (paper Thm. 2 needs it bounded).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from typing import Dict, List, Optional
+
+from repro.obs.sink import read_events
+
+
+def _series(events: List[dict], kind: str) -> List[dict]:
+    return [e for e in events if e.get("kind") == kind]
+
+
+def _stats(xs: List[float]) -> Dict[str, float]:
+    return {"mean": sum(xs) / len(xs), "min": min(xs), "max": max(xs),
+            "n": len(xs)}
+
+
+def summarize(events: List[dict]) -> dict:
+    """The report's data model: pure function of the event list so tests
+    can assert on it and ``--json`` can dump it."""
+    out: dict = {}
+    meta = _series(events, "run_meta")
+    if meta:
+        out["run"] = {k: meta[-1].get(k) for k in
+                      ("strategy", "arch", "steps", "n_workers",
+                       "obs_metrics")}
+
+    timing = _series(events, "timing")
+    if timing:
+        steps_s = [e["step_s"] for e in timing]
+        out["timing"] = {
+            "step_s": _stats(steps_s),
+            "intervals": [{"step": e["step"],
+                           "interval_s": e["interval_s"],
+                           "steps": e.get("steps_in_interval", 1)}
+                          for e in timing],
+        }
+
+    obs = _series(events, "obs_metrics")
+    comm = _series(events, "comm_summary")
+    if obs:
+        last = obs[-1]
+        ef1 = [e["ef_e1_norm"] for e in obs if "ef_e1_norm" in e]
+        ef2 = [e["ef_e2_norm"] for e in obs if "ef_e2_norm" in e]
+        o: dict = {"last_step": last.get("step"),
+                   "delta_hat": last.get("delta_hat")}
+        if ef1:
+            o["ef_e1"] = {"first": ef1[0], "last": ef1[-1],
+                          "growth": (ef1[-1] / ef1[0]
+                                     if ef1[0] else None)}
+        if ef2:
+            o["ef_e2"] = {"first": ef2[0], "last": ef2[-1]}
+        if "staleness_hist" in last:
+            o["staleness_hist"] = last["staleness_hist"]
+        if "msg_var" in last:
+            o["msg_mean"] = last.get("msg_mean")
+            o["msg_var"] = last["msg_var"]
+        out["obs"] = o
+
+        # δ̂ vs the planner's analytic δ, per bucket
+        rows = (comm[-1].get("per_bucket") or []) if comm else []
+        measured = last.get("bucket_delta")
+        if rows and measured is not None:
+            out["delta_gap"] = [
+                {"bucket": r["bucket"], "compressor": r["compressor"],
+                 "assumed": r["delta"], "measured": measured[r["bucket"]],
+                 "gap": measured[r["bucket"]] - r["delta"]}
+                for r in rows if r["bucket"] < len(measured)]
+
+    if comm:
+        last = comm[-1]
+        c = {k: last[k] for k in
+             ("wire_bytes_per_step", "compression_ratio", "sim_clock_s")
+             if k in last}
+        if "budget_utilization" in last:
+            c["budget_bytes"] = last.get("budget_bytes")
+            c["budget_utilization"] = last["budget_utilization"]
+        if last.get("per_bucket"):
+            c["per_bucket"] = last["per_bucket"]
+        out["comm"] = c
+    return out
+
+
+# --------------------------------------------------------------------------- #
+def _fmt_bytes(n) -> str:
+    n = float(n)
+    for unit in ("B", "KiB", "MiB", "GiB"):
+        if abs(n) < 1024 or unit == "GiB":
+            return f"{n:.1f}{unit}" if unit != "B" else f"{int(n)}B"
+        n /= 1024
+    return f"{n:.1f}GiB"
+
+
+def render(summary: dict) -> str:
+    lines: List[str] = []
+    run = summary.get("run")
+    if run:
+        lines.append(f"run {run.get('strategy')}  arch={run.get('arch')}  "
+                     f"steps={run.get('steps')}  W={run.get('n_workers')}  "
+                     f"obs={run.get('obs_metrics')}")
+
+    t = summary.get("timing")
+    if t:
+        s = t["step_s"]
+        lines.append("")
+        lines.append(f"timing (synced): step {s['mean'] * 1e3:.2f}ms mean  "
+                     f"[{s['min'] * 1e3:.2f} .. {s['max'] * 1e3:.2f}]  "
+                     f"over {s['n']} logged steps")
+        for iv in t["intervals"]:
+            per = iv["interval_s"] / max(iv["steps"], 1)
+            lines.append(f"  step {iv['step']:>6}: interval "
+                         f"{iv['interval_s'] * 1e3:8.2f}ms / "
+                         f"{iv['steps']} steps = {per * 1e3:.2f}ms/step")
+
+    gap = summary.get("delta_gap")
+    if gap:
+        lines.append("")
+        lines.append("empirical δ̂ vs assumed δ (last logged step):")
+        for g in gap:
+            lines.append(f"  bucket {g['bucket']:>3} {g['compressor']:>14}: "
+                         f"assumed {g['assumed']:.4f}  measured "
+                         f"{g['measured']:.4f}  gap {g['gap']:+.4f}")
+    obs = summary.get("obs")
+    if obs and not gap and obs.get("delta_hat") is not None:
+        lines.append("")
+        lines.append(f"empirical δ̂ (aggregate, last logged step): "
+                     f"{obs['delta_hat']:.4f}")
+
+    comm = summary.get("comm")
+    if comm:
+        lines.append("")
+        if "budget_utilization" in comm:
+            lines.append(f"bytes vs budget: "
+                         f"{_fmt_bytes(comm['wire_bytes_per_step'])}/step "
+                         f"against {_fmt_bytes(comm['budget_bytes'])} "
+                         f"budget = {comm['budget_utilization'] * 100:.1f}% "
+                         f"utilization")
+        else:
+            lines.append(f"wire: {_fmt_bytes(comm['wire_bytes_per_step'])}"
+                         f"/step  ratio {comm.get('compression_ratio')}x")
+        for r in comm.get("per_bucket", []):
+            share = (f"  {r['budget_share'] * 100:5.1f}% of budget"
+                     if "budget_share" in r else "")
+            bits = f"{r['bits']}b" if r.get("bits") else "fp"
+            lines.append(f"  bucket {r['bucket']:>3} "
+                         f"{r['compressor']:>14} ({bits:>3}): "
+                         f"{r['elems']:>9} elems  "
+                         f"{_fmt_bytes(r['payload_bytes'])}{share}")
+
+    if obs:
+        ef = obs.get("ef_e1")
+        if ef:
+            lines.append("")
+            growth = (f"  ({ef['growth']:.2f}x over the run)"
+                      if ef.get("growth") else "")
+            lines.append(f"EF residual ‖e1‖: {ef['first']:.4f} → "
+                         f"{ef['last']:.4f}{growth}")
+            e2 = obs.get("ef_e2")
+            if e2 and (e2["first"] or e2["last"]):
+                lines.append(f"EF residual ‖e2‖: {e2['first']:.4f} → "
+                             f"{e2['last']:.4f}")
+        if "staleness_hist" in obs:
+            hist = obs["staleness_hist"]
+            cells = "  ".join(f"τ={i}:{int(c)}" for i, c in enumerate(hist))
+            lines.append(f"staleness histogram (last logged step): {cells}")
+        if "msg_var" in obs:
+            lines.append(f"message moments (aggregate): mean "
+                         f"{obs['msg_mean']:.3e}  var {obs['msg_var']:.3e}")
+
+    if not lines:
+        lines.append("no renderable events (is this a sink file?)")
+    return "\n".join(lines)
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.obs report",
+        description="render a repro.obs run-sink JSONL file")
+    ap.add_argument("path", help="sink file written by --obs-sink PATH")
+    ap.add_argument("--json", action="store_true",
+                    help="dump the computed summary as JSON instead of "
+                         "the text rendering")
+    ap.add_argument("--no-validate", action="store_true",
+                    help="skip schema validation when reading")
+    args = ap.parse_args(argv)
+    events = read_events(args.path, validate=not args.no_validate)
+    summary = summarize(events)
+    if args.json:
+        print(json.dumps(summary, indent=2))
+    else:
+        print(render(summary))
+    return 0
+
+
+if __name__ == "__main__":  # pragma: no cover - exercised via __main__
+    raise SystemExit(main())

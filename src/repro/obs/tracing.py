@@ -1,0 +1,41 @@
+"""Phase tracing: named spans for the jax profiler (DESIGN.md §11).
+
+Two span flavors, both gated on `Observability.spans` so the default
+build leaves the step graph and the host loop untouched:
+
+- `host_span` — `jax.profiler.TraceAnnotation` around host-side phases
+  (``data`` / ``step`` / ``eval``), visible in a captured profiler trace
+  and as wall-time attribution in TensorBoard.
+- `device_span` — `jax.named_scope` around in-jit phases (``exchange`` /
+  ``apply`` / ``field``), which names the HLO ops so profiler traces and
+  HLO dumps attribute device time to the phase. Disabled spans return a
+  `nullcontext`, keeping the traced graph byte-identical.
+
+Span names are namespaced ``repro.obs/<phase>`` so they are greppable in
+profiles next to user scopes.
+"""
+from __future__ import annotations
+
+from contextlib import nullcontext
+
+import jax
+
+PREFIX = "repro.obs/"
+
+# the canonical phase names (DESIGN.md §11 span naming)
+HOST_PHASES = ("data", "step", "eval")
+DEVICE_PHASES = ("compress", "exchange", "apply", "field")
+
+
+def host_span(name: str, enabled: bool = True):
+    """TraceAnnotation context for a host-side phase (no-op when off)."""
+    if not enabled:
+        return nullcontext()
+    return jax.profiler.TraceAnnotation(PREFIX + name)
+
+
+def device_span(name: str, enabled: bool = True):
+    """named_scope context for an in-jit phase (no-op when off)."""
+    if not enabled:
+        return nullcontext()
+    return jax.named_scope(PREFIX + name)

@@ -1,9 +1,10 @@
 """repro.strategy — the typed, composable distribution-strategy API
 (DESIGN.md §9).
 
-A `Strategy` composes four frozen components — `Compression` (what goes
+A `Strategy` composes five frozen components — `Compression` (what goes
 on the wire), `ExchangePlan` (how it moves), `Schedule` (when workers
-talk) and `Participation` (who talks) — with cross-field validation at
+talk), `Participation` (who talks) and `Observability` (what we measure
+while they do) — with cross-field validation at
 construction (`StrategyError`), a preset registry (`PRESETS`,
 `get_preset`) and an exact canonical-JSON round-trip
 (`Strategy.to_json`/`from_json`, hashed by `short_hash()` for the CI
@@ -15,9 +16,11 @@ regression gate and the checkpoint resume guard).
 """
 from .cli import add_strategy_args, strategy_from_args  # noqa: F401
 from .components import (  # noqa: F401
+    METRIC_LEVELS,
     SPMD_STYLES,
     Compression,
     ExchangePlan,
+    Observability,
     Participation,
     Schedule,
     StrategyError,

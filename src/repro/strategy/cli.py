@@ -20,11 +20,18 @@ import dataclasses
 import os
 from typing import Optional, Tuple
 
-from .components import Compression, ExchangePlan, Participation, Schedule
+from .components import (
+    Compression,
+    ExchangePlan,
+    Observability,
+    Participation,
+    Schedule,
+)
 from .presets import PRESETS, get_preset
 from .strategy import Strategy
 
-_COMPONENTS = (Compression, ExchangePlan, Schedule, Participation)
+_COMPONENTS = (Compression, ExchangePlan, Schedule, Participation,
+               Observability)
 
 
 def _cli_fields():

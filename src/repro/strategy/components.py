@@ -535,3 +535,48 @@ class Participation:
         if n_part >= n_workers:
             return None
         return SP.round_mask(key, step // period, n_workers, n_part), n_part
+
+
+# --------------------------------------------------------------------------- #
+METRIC_LEVELS = ("off", "wire", "full")
+
+
+def _metric_levels():
+    return METRIC_LEVELS
+
+
+@dataclass(frozen=True)
+class Observability:
+    """WHAT we measure while training: the jit-static telemetry level
+    consumed by `repro.obs` (DESIGN.md §11).
+
+    Levels form a lattice: ``off`` ⊂ ``wire`` (empirical δ + EF residual
+    norms, read off the already-materialized compressed messages) ⊂
+    ``full`` (adds per-bucket gradient moments and the staleness
+    histogram). ``off`` is contractually bit-identical to a build without
+    the obs subsystem — enforced by HLO comparison in tests — which is
+    why observability is excluded from `Strategy.short_hash()`: it can
+    never change the trajectory, so it is not structural identity."""
+
+    metrics: str = field(default="off", metadata=_cli(
+        "obs_metrics", "on-device telemetry level (repro.obs)",
+        _metric_levels))
+    spans: bool = field(default=False, metadata=_cli(
+        "obs_spans", "named phase spans (compress/exchange/apply/eval) "
+                     "for the jax profiler"))
+
+    def __post_init__(self):
+        if self.metrics not in METRIC_LEVELS:
+            raise StrategyError(
+                f"observability.metrics: unknown level "
+                f"{self.metrics!r}; have {METRIC_LEVELS}")
+
+    # ------------------------------------------------------------------ #
+    @property
+    def on(self) -> bool:
+        return self.metrics != "off"
+
+    def spec(self):
+        """The resolved `repro.obs.MetricSpec` for this level."""
+        from repro.obs import METRIC_SPECS
+        return METRIC_SPECS[self.metrics]

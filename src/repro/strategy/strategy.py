@@ -21,6 +21,7 @@ from typing import Any, Dict, List, Tuple
 from .components import (
     Compression,
     ExchangePlan,
+    Observability,
     Participation,
     Schedule,
     StrategyError,
@@ -31,7 +32,17 @@ _COMPONENTS: Tuple[Tuple[str, type], ...] = (
     ("exchange", ExchangePlan),
     ("schedule", Schedule),
     ("participation", Participation),
+    ("observability", Observability),
 )
+
+# Components that define the strategy's *structural identity* — what
+# `short_hash()` digests. Observability is excluded: it is contractually
+# trajectory-invariant (metrics="off" is bit-identical, and every level
+# must be too — see the bit-exactness tests), so regression baselines
+# and checkpoint resume guards keyed by the hash stay valid across
+# telemetry settings.
+_IDENTITY_COMPONENTS: Tuple[str, ...] = tuple(
+    name for name, _ in _COMPONENTS if name != "observability")
 
 # legacy DQConfig field -> (component attribute, component field)
 LEGACY_FIELDS: Dict[str, Tuple[str, str]] = {
@@ -51,6 +62,8 @@ LEGACY_FIELDS: Dict[str, Tuple[str, str]] = {
     "tau_vector": ("schedule", "tau_vector"),
     "participation": ("participation", "fraction"),
     "straggler_profile": ("participation", "straggler_profile"),
+    "obs_metrics": ("observability", "metrics"),
+    "obs_spans": ("observability", "spans"),
 }
 
 
@@ -64,6 +77,7 @@ class Strategy:
     exchange: ExchangePlan = ExchangePlan()
     schedule: Schedule = Schedule()
     participation: Participation = Participation()
+    observability: Observability = Observability()
 
     def __post_init__(self):
         for name, cls in _COMPONENTS:
@@ -93,6 +107,11 @@ class Strategy:
                     f"(per-worker roundtrip + mean) semantics only; "
                     f"kind={self.exchange.kind!r} would be silently "
                     f"reinterpreted — spell it exchange.kind='sim'")
+        if self.observability.on and not self.compression.error_feedback:
+            raise StrategyError(
+                "observability.metrics: empirical-δ telemetry reads the "
+                "materialized EF residual (e_new = m − Q(m)); it needs "
+                "compression.error_feedback=True")
 
     # ------------------------------------------------------------------ #
     # serialization: canonical, exact JSON round-trip
@@ -138,10 +157,22 @@ class Strategy:
             raise StrategyError(f"strategy: invalid JSON ({e})") from None
         return cls.from_dict(d)
 
+    def identity_dict(self) -> dict:
+        """The trajectory-defining subset of `to_dict()` — every
+        component except observability, which is contractually
+        bit-exact-invariant and therefore not structural identity."""
+        return {name: dataclasses.asdict(getattr(self, name))
+                for name in _IDENTITY_COMPONENTS}
+
     def short_hash(self) -> str:
-        """12-hex digest of the canonical JSON — the structural identity
-        the benchmark-regression gate keys baselines by."""
-        return hashlib.sha256(self.to_json().encode()).hexdigest()[:12]
+        """12-hex digest of the canonical *identity* JSON — the
+        structural identity the benchmark-regression gate keys baselines
+        by and the checkpoint guard verifies. Telemetry settings
+        (observability.*) do not shift it, so baselines recorded without
+        obs stay valid for instrumented runs."""
+        ident = json.dumps(self.identity_dict(), sort_keys=True,
+                           separators=(",", ":"))
+        return hashlib.sha256(ident.encode()).hexdigest()[:12]
 
     # ------------------------------------------------------------------ #
     def diff(self, other: "Strategy") -> List[str]:
@@ -169,6 +200,8 @@ class Strategy:
             bits.append(f"stragglers={p.straggler_profile}")
         if e.spmd != "shard_map":
             bits.append(e.spmd)
+        if self.observability.on:
+            bits.append(f"obs={self.observability.metrics}")
         return " ".join(bits)
 
     # ------------------------------------------------------------------ #
