@@ -18,6 +18,12 @@ Sections:
                 under a straggler profile, plus the bounded-staleness
                 τ∈{1,2,4,8} convergence-vs-staleness-vs-wall-clock
                 frontier on the mixture benchmark (experiments/sched.json)
+  roofline    : benchmarks.roofline over the experiments/dryrun/*.json
+                records — one row per (arch × shape × mesh) with the
+                three roofline terms and the dominant bottleneck, plus
+                the regenerated experiments/roofline.md. Missing records
+                are reported explicitly (the dry-run sweep needs the
+                production meshes; see repro.launch.dryrun)
 
 Regression gate (CI): ``--check-against experiments/baselines/sched_quick.json``
 re-runs the sched wall-clock model with the baseline's recorded compute
@@ -399,6 +405,44 @@ def bench_kernels(quick: bool):
 
 
 # --------------------------------------------------------------------------- #
+def bench_roofline(quick: bool, dirpath: str = "experiments/dryrun"):
+    """Roofline reporting as a first-class section: read the dry-run
+    records (experiments/dryrun/*.json, produced by repro.launch.dryrun
+    — the sweep itself needs a machine that can lower the production
+    meshes), emit one row per record with the three roofline terms in
+    seconds and the dominant bottleneck, and regenerate
+    experiments/roofline.md. Rows ride the obs sink as bench_row events
+    like every other section; absent records are a reported row, never a
+    silent skip."""
+    from benchmarks import roofline as R
+
+    recs = R.load(dirpath) if os.path.isdir(dirpath) else []
+    if not recs:
+        row("roofline/none", 0.0,
+            f"no dry-run records under {dirpath}/ — run `python -m "
+            f"repro.launch.dryrun --all` on a host that can lower the "
+            f"production meshes")
+        return []
+    for r in recs:
+        name = f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}"
+        if r["status"] != "ok":
+            row(name, 0.0,
+                f"status={r['status']} "
+                f"{(r.get('reason') or r.get('error') or '')[:60]}")
+            continue
+        rf = r["roofline"]
+        total = rf["compute_s"] + rf["memory_s"] + rf["collective_s"]
+        row(name, total * 1e6,
+            f"bottleneck={r['bottleneck']} "
+            f"compute_s={rf['compute_s']:.3e} "
+            f"memory_s={rf['memory_s']:.3e} "
+            f"collective_s={rf['collective_s']:.3e}")
+    R.main(["--dir", dirpath,
+            "--out", os.path.join(os.path.dirname(dirpath), "roofline.md")])
+    return recs
+
+
+# --------------------------------------------------------------------------- #
 def bench_comm(quick: bool, sim_steps: int = 0):
     """repro.comm telemetry on the two smoke configs: per-step + cumulative
     wire bytes, achieved compression ratio, and how many tensors the seed
@@ -718,7 +762,7 @@ def main(argv=None):
                     help="small sizes/steps (CI mode)")
     ap.add_argument("--only", default="",
                     help="comma list: convergence,speedup,compression,"
-                         "kernels,comm,comm_adaptive,sched")
+                         "kernels,comm,comm_adaptive,sched,roofline")
     ap.add_argument("--check-against", default="",
                     help="baseline JSON (a committed experiments/sched.json) "
                          "to gate the sched section against: >10% regression "
@@ -781,6 +825,8 @@ def main(argv=None):
             if fails:
                 sys.exit(1)
             print("# sched: regression gate passed", flush=True)
+    if not only or "roofline" in only:
+        bench_roofline(args.quick)
     if not only or "speedup" in only:
         bench_speedup(args.quick)
     if not only or "convergence" in only:

@@ -353,6 +353,9 @@ class DQConfig:
     # from Strategy.short_hash(); DESIGN.md §11).
     obs_metrics: str = "off"
     obs_spans: bool = False
+    # host-side step profiler (repro.obs.profile, DESIGN.md §12.1) —
+    # never read by the jitted step, so profiling off/on is bit-exact.
+    obs_profile: bool = False
 
     # ------------------------------------------------------------------ #
     # the strategy shim (repro.strategy, DESIGN.md §9)

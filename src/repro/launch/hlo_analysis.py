@@ -201,3 +201,46 @@ class HLOAnalysis:
 
 def analyze(txt: str) -> dict:
     return HLOAnalysis(txt).summary()
+
+
+# --------------------------------------------------------------------------- #
+# named-scope attribution (repro.obs spans → HLO op metadata)
+# --------------------------------------------------------------------------- #
+_OP_NAME = re.compile(r'op_name="([^"]*)"')
+
+
+def scope_costs(txt: str, prefix: str = "repro.obs/") -> Dict[str, dict]:
+    """Per-scope op counts and result bytes from HLO op metadata.
+
+    `jax.named_scope(prefix + phase)` (obs.device_span) survives into the
+    optimized HLO as ``metadata={op_name="...<prefix><phase>/..."}`` on
+    every op traced under the scope — so a compiled step lowered with
+    spans on can attribute its device-side cost (op count + result-shape
+    bytes, the same HBM-traffic proxy `HLOAnalysis` uses) to the
+    compress/exchange/apply phases without running a profiler. Fused ops
+    carry the scope of their representative op; attribution is therefore
+    a proxy, not a cycle count — good enough to rank phases and to feed
+    the profile events' per-phase split (DESIGN.md §12.1).
+
+    Returns {phase: {"ops": int, "bytes": int}} for every scope name
+    found under `prefix` (the segment right after it)."""
+    out: Dict[str, dict] = {}
+    for line in txt.splitlines():
+        m = _OP_NAME.search(line)
+        if not m or prefix not in m.group(1):
+            continue
+        tail = m.group(1).split(prefix, 1)[1]
+        phase = tail.split("/", 1)[0].split('"', 1)[0]
+        if not phase:
+            continue
+        stripped = _COMMENT.sub("", line).strip()
+        # the result type sits after `=` and before the op's paren:
+        #   %name = f32[8,128]{1,0} fusion(...), metadata={op_name=...}
+        if "=" in stripped:
+            seg = stripped.split("=", 1)[1].split("(", 1)[0]
+        else:
+            seg = ""
+        rec = out.setdefault(phase, {"ops": 0, "bytes": 0})
+        rec["ops"] += 1
+        rec["bytes"] += _shape_bytes(seg)
+    return out

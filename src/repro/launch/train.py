@@ -124,6 +124,14 @@ def main(argv=None):
                          "default rendering), 'stdout' (verbose), "
                          "'null', or a JSONL file path for "
                          "`python -m repro.obs report`")
+    ap.add_argument("--profile-steps", type=int, default=0, metavar="N",
+                    help="profile a window of N steps and emit one "
+                         "schema-v2 `profile` event into the sink "
+                         "(repro.obs.profile; implies profiling on — "
+                         "--obs-profile alone uses the default window)")
+    ap.add_argument("--profile-trace-dir", default="", metavar="DIR",
+                    help="also capture a jax.profiler trace of the "
+                         "profiled window into DIR (TensorBoard)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -222,6 +230,12 @@ def main(argv=None):
     sink = obs_api.make_sink(args.obs_sink, strategy_hash=strat.short_hash(),
                              tee_stdout=True)
     obs_spans = strat.observability.spans
+    # host-side step profiler (repro.obs.profile, DESIGN.md §12.1) — a
+    # NullStepProfiler when off, so the hot loop carries no conditionals
+    # and the compiled step is untouched either way (bit-exactness test)
+    profiler = obs_api.make_profiler(
+        strat.observability.profile or args.profile_steps > 0,
+        window=args.profile_steps, trace_dir=args.profile_trace_dir)
     sink.emit("run_meta", steps=args.steps, arch=args.arch,
               smoke=bool(args.smoke), n_workers=W, start_step=start,
               strategy_json=strat.to_dict(),
@@ -246,7 +260,8 @@ def main(argv=None):
     ctx = set_mesh(mesh) if mesh is not None else _null()
     with ctx:
         for i in range(start, args.steps):
-            with obs_api.host_span("data", obs_spans):
+            with obs_api.host_span("data", obs_spans), \
+                    profiler.phase("data"):
                 batch = next(it)
             do_exchange = sched.is_exchange_step(i)
             # every step is timed against a device sync — an unsynced
@@ -254,11 +269,13 @@ def main(argv=None):
             # the reported step time was only meaningful on the handful
             # of steps that happened to block (the old wall-series seed)
             it_t0 = time.perf_counter()
-            with obs_api.host_span("step", obs_spans):
+            with obs_api.host_span("step", obs_spans), \
+                    profiler.phase("step"):
                 out = step(state, batch, key, do_exchange)
                 state = out.state
                 jax.block_until_ready(out.metrics)
             step_s = time.perf_counter() - it_t0
+            profiler.record_step(i, step_s, do_exchange)
             interval_s += step_s
             interval_n += 1
             if wall_series is None and (do_exchange in warm_variants
@@ -278,7 +295,8 @@ def main(argv=None):
             ledger.tick(exchanged=do_exchange, wall_s=wall,
                         participants=n_part)
             if i % args.log_every == 0 or i == args.steps - 1:
-                with obs_api.host_span("eval", obs_spans):
+                with obs_api.host_span("eval", obs_spans), \
+                        profiler.phase("eval"):
                     m = jax.device_get(out.metrics)
                 rec = {"step": i, "round": sched.round_index(i),
                        **({"participants": n_part}
@@ -311,6 +329,16 @@ def main(argv=None):
                     and i != args.steps - 1):
                 checkpoint.save(args.checkpoint, state, step=i + 1,
                                 meta={"strategy": strat.to_json()})
+        if profiler.step_walls:
+            # close the profiled window (still under the mesh context —
+            # the re-lowering below needs it). With spans on, the
+            # optimized HLO carries the repro.obs scope metadata, giving
+            # the profile event its device-phase attribution.
+            hlo_txt = ""
+            if obs_spans:
+                hlo_txt = step.lower(state, batch, key,
+                                     do_exchange).compile().as_text()
+            profiler.emit(sink, hlo_text=hlo_txt)
     sink.emit("comm_summary", **ledger.summary())
     sink.close()
     if args.checkpoint:

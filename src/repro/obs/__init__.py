@@ -14,6 +14,18 @@ Three parts:
 - `report` — ``python -m repro.obs report run.jsonl`` renders per-phase
   timing, the δ̂-vs-assumed-δ gap, bytes-vs-budget utilization and
   EF-residual growth from a sink file.
+
+PR 7 adds the measured-vs-modeled layer (DESIGN.md §12):
+
+- `profile` — a host-side `StepProfiler` turning the launcher's synced
+  step walls + host/device phase attribution into schema-v2 ``profile``
+  events (``--obs-profile`` / ``--profile-steps``).
+- `hlo` — structural verification of the compiled step: collective
+  ops/bytes from optimized HLO vs the `CommLedger`'s analytic bytes,
+  plus schedule-shaped structure assertions.
+- `calibrate` — ``python -m repro.obs calibrate run.jsonl`` fits
+  `sched.clock` LinkModel + compute constants from recorded events and
+  gates on modeled-vs-measured drift.
 """
 from .metrics import (  # noqa: F401
     METRIC_SPECS,
@@ -37,5 +49,11 @@ from .sink import (  # noqa: F401
     make_sink,
     read_events,
     validate_event,
+)
+from .profile import (  # noqa: F401
+    DEFAULT_WINDOW,
+    NullStepProfiler,
+    StepProfiler,
+    make_profiler,
 )
 from .tracing import device_span, host_span  # noqa: F401

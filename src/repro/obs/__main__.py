@@ -1,24 +1,32 @@
-"""`python -m repro.obs report PATH` — the run-sink report CLI."""
+"""`python -m repro.obs {report,calibrate}` — the run-sink CLIs."""
 from __future__ import annotations
 
 import sys
 
-from repro.obs import report
+_USAGE = (
+    "usage: python -m repro.obs SUBCOMMAND ...\n\n"
+    "subcommands:\n"
+    "  report     render a run-sink JSONL file (repro.obs.report)\n"
+    "  calibrate  fit sched.clock constants from recorded runs and\n"
+    "             report modeled-vs-measured drift (repro.obs.calibrate)"
+)
 
 
 def main(argv=None) -> int:
     argv = list(sys.argv[1:] if argv is None else argv)
     if not argv or argv[0] in ("-h", "--help"):
-        print("usage: python -m repro.obs report PATH [--json]\n\n"
-              "subcommands:\n"
-              "  report   render a run-sink JSONL file "
-              "(see repro.obs.report)")
+        print(_USAGE)
         return 0 if argv else 2
     cmd, rest = argv[0], argv[1:]
-    if cmd != "report":
-        print(f"unknown subcommand {cmd!r} (only: report)", file=sys.stderr)
-        return 2
-    return report.main(rest)
+    if cmd == "report":
+        from repro.obs import report
+        return report.main(rest)
+    if cmd == "calibrate":
+        from repro.obs import calibrate
+        return calibrate.main(rest)
+    print(f"unknown subcommand {cmd!r} (have: report, calibrate)",
+          file=sys.stderr)
+    return 2
 
 
 if __name__ == "__main__":

@@ -1,0 +1,213 @@
+"""Structural verification of the *compiled* step (DESIGN.md §12.2).
+
+`comm.CommLedger` models what the exchange should move; this module
+checks what the compiled program actually lowers. Built on
+`launch.hlo_analysis` (the while-loop-aware optimized-HLO walker), it is
+pure text analysis — runnable on host CI devices, no hardware profiler:
+
+* `compiled_text(jitfn, *args)` — lower + compile to optimized
+  (post-SPMD, per-device) HLO text.
+* `collective_summary(txt)` — per-category collective op counts and
+  result bytes (all-reduce / reduce-scatter / all-gather / ...).
+* `byte_gap(txt, ledger)` — the measured-vs-modeled byte gap: HLO
+  collective result bytes against the ledger's analytic per-step wire
+  and carried bytes (per bucket rows included). The ledger's transport
+  accounting bills a ring all-reduce at 2·(W−1)/W × payload
+  (send+receive); an HLO collective's *result* materializes the payload
+  once — `modeled_result_bytes` divides the transport factor back out
+  so the two sides are commensurable.
+* `check_schedule_structure(...)` — schedule-shaped assertions: an
+  exchange step lowers all-reduce-class collectives; a `local_k`
+  mid-round step lowers NO gradient-payload collective (nothing close
+  to the bucket payload on the wire between rounds); `delayed(τ)`
+  carries the τ-deep pending ring through the step's loop state (ring
+  parameters visible in the entry signature).
+
+The live checks need a multi-device lowering (collectives only appear
+when W > 1); CI runs them on 8 forced host devices, while the committed
+HLO fixture (tests/fixtures/) keeps the extraction logic covered on
+every tier.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Optional
+
+from repro.launch.hlo_analysis import HLOAnalysis, _TYPE_RE
+
+# collectives that implement a gradient averaging step ("all-reduce
+# class"): a plain all-reduce, or its decomposed reduce-scatter +
+# all-gather pair (two_phase), all count as exchange structure.
+ALL_REDUCE_CLASS = ("all-reduce", "reduce-scatter", "all-gather")
+
+
+# --------------------------------------------------------------------------- #
+def compiled_text(jitfn, *args) -> str:
+    """Optimized (post-SPMD, per-device) HLO text of a jitted callable
+    on the given (possibly abstract) arguments."""
+    return jitfn.lower(*args).compile().as_text()
+
+
+def collective_summary(txt: str) -> dict:
+    """{category: {count, bytes, int8_bytes}} from optimized HLO text
+    (loop-trip-corrected — a collective inside a scanned body counts
+    once per trip)."""
+    return HLOAnalysis(txt).summary()["collectives"]
+
+
+def _class_totals(colls: dict) -> dict:
+    ops = sum(v["count"] for k, v in colls.items() if k in ALL_REDUCE_CLASS)
+    byts = sum(v["bytes"] for k, v in colls.items() if k in ALL_REDUCE_CLASS)
+    i8 = sum(v["int8_bytes"] for k, v in colls.items()
+             if k in ALL_REDUCE_CLASS)
+    return {"ops": ops, "bytes": byts, "int8_bytes": i8}
+
+
+# --------------------------------------------------------------------------- #
+def byte_gap(txt: str, ledger, participants: Optional[int] = None) -> dict:
+    """Measured-vs-modeled bytes: what the compiled step's collectives
+    materialize vs what the `CommLedger` bills one exchange round at.
+
+    Returns a report dict; ``gap_ratio`` is measured / modeled_result − 1
+    (≈ 0 when the compiled wire format matches the carried-bytes model;
+    positive = the program moves more than modeled)."""
+    colls = collective_summary(txt)
+    measured = float(sum(v["bytes"] for v in colls.values()))
+    wire, carried = ledger.round_bytes(participants)
+    W = max(ledger.n_workers, 2)
+    transport = 2.0 * (W - 1) / W
+    modeled_result = carried / transport if transport else carried
+    return {
+        "hlo_collectives": colls,
+        "hlo_bytes": measured,
+        "hlo_int8_bytes": float(sum(v["int8_bytes"]
+                                    for v in colls.values())),
+        "modeled_wire_bytes": wire,
+        "modeled_carried_bytes": carried,
+        "modeled_result_bytes": modeled_result,
+        "gap_ratio": (measured / modeled_result - 1.0
+                      if modeled_result else None),
+        "per_bucket": ledger.per_bucket(participants),
+    }
+
+
+# --------------------------------------------------------------------------- #
+# schedule-shaped structure
+# --------------------------------------------------------------------------- #
+_PARAM_LINE = re.compile(r"=\s*[\w\[\],{}\s/*]*?parameter\(\d+\)")
+
+
+def entry_parameter_shapes(txt: str) -> List[tuple]:
+    """Dim tuples of every ENTRY-computation parameter (the step's
+    carried state + inputs as the compiled program sees them)."""
+    entry_started = False
+    shapes: List[tuple] = []
+    for line in txt.splitlines():
+        s = line.strip()
+        if s.startswith("ENTRY"):
+            entry_started = True
+            continue
+        if not entry_started:
+            continue
+        if s.startswith("}"):
+            break
+        if "parameter(" not in s or not _PARAM_LINE.search(s):
+            continue
+        lhs = s.split("parameter(", 1)[0]
+        for _, dims in _TYPE_RE.findall(lhs):
+            shapes.append(tuple(int(d) for d in dims.split(",") if d))
+    return shapes
+
+
+def ring_parameters(txt: str, tau: int) -> List[tuple]:
+    """Entry parameters that look like τ-deep pending-ring slots: a dim
+    equal to τ in the first two axes of a ≥2-D shape (the per-device
+    ring is (τ, *leaf) or (W_local, τ, *leaf) depending on sharding)."""
+    if tau < 2:
+        return []
+    out = []
+    for shp in entry_parameter_shapes(txt):
+        if len(shp) >= 2 and tau in shp[:2]:
+            out.append(shp)
+    return out
+
+
+def check_schedule_structure(schedule, exchange_txt: str,
+                             midround_txt: Optional[str] = None,
+                             n_param_leaves: Optional[int] = None) -> dict:
+    """Schedule-shaped assertions over compiled HLO text.
+
+    ``schedule`` is a `repro.strategy.Schedule` (kind/k/tau);
+    ``exchange_txt`` the optimized HLO of the do_exchange=True step
+    variant, ``midround_txt`` (local_k only) the do_exchange=False
+    variant. Returns {"ok": bool, "violations": [...], ...evidence};
+    `assert_schedule_structure` raises on violations."""
+    violations: List[str] = []
+    ex_colls = collective_summary(exchange_txt)
+    ex_cls = _class_totals(ex_colls)
+    report: Dict[str, object] = {
+        "schedule": f"{schedule.kind}(k={schedule.k},tau={schedule.tau})",
+        "exchange_collectives": ex_colls,
+        "exchange_class_totals": ex_cls,
+    }
+
+    # every schedule's exchange step moves the message through at least
+    # one all-reduce-class collective
+    if ex_cls["ops"] < 1:
+        violations.append(
+            f"exchange step lowers no all-reduce-class collective "
+            f"(got {sorted(ex_colls)})")
+
+    # every_step needs nothing beyond the collective presence above:
+    # every compiled step IS the exchange step. (A negative "no ring
+    # state" probe is not reliable — small data dims collide with small
+    # τ values in the shape scan.)
+    if schedule.kind == "local_k":
+        if midround_txt is None:
+            violations.append(
+                "local_k structure check needs the do_exchange=False "
+                "(mid-round) variant's HLO")
+        else:
+            mid_colls = collective_summary(midround_txt)
+            mid_cls = _class_totals(mid_colls)
+            report["midround_collectives"] = mid_colls
+            report["midround_class_totals"] = mid_cls
+            # mid-round steps accumulate locally: no gradient payload on
+            # the wire. Scalar metric reductions (loss/grad_norm psums)
+            # are allowed; the payload-class bytes must collapse.
+            if mid_cls["int8_bytes"] > 0:
+                violations.append(
+                    f"mid-round step moves quantized payload "
+                    f"({mid_cls['int8_bytes']:.0f} int8 bytes)")
+            if ex_cls["bytes"] and \
+                    mid_cls["bytes"] >= 0.5 * ex_cls["bytes"]:
+                violations.append(
+                    f"mid-round collective bytes "
+                    f"({mid_cls['bytes']:.0f}) not < half the exchange "
+                    f"step's ({ex_cls['bytes']:.0f}) — the accumulator "
+                    f"is leaking onto the wire between rounds")
+    elif schedule.kind == "delayed":
+        if schedule.tau >= 2:
+            rings = ring_parameters(exchange_txt, schedule.tau)
+            report["ring_parameters"] = rings
+            need = n_param_leaves or 1
+            if len(rings) < need:
+                violations.append(
+                    f"delayed(tau={schedule.tau}) carries "
+                    f"{len(rings)} tau-deep ring parameter(s) through "
+                    f"loop state, expected >= {need}")
+    report["ok"] = not violations
+    report["violations"] = violations
+    return report
+
+
+def assert_schedule_structure(schedule, exchange_txt: str,
+                              midround_txt: Optional[str] = None,
+                              n_param_leaves: Optional[int] = None) -> dict:
+    report = check_schedule_structure(schedule, exchange_txt, midround_txt,
+                                      n_param_leaves)
+    if not report["ok"]:
+        raise AssertionError(
+            f"schedule structure violated for {report['schedule']}: "
+            + "; ".join(report["violations"]))
+    return report

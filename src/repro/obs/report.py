@@ -17,6 +17,13 @@ Sections (each skipped cleanly when its events are absent):
 * **EF residual growth** — the fleet ‖e1‖ / ‖e2‖ series across the run;
   unbounded growth here is the classic sign of a divergent
   error-feedback loop (paper Thm. 2 needs it bounded).
+* **profile** — the step-profiler window (schema v2 ``profile``
+  events): per-window step-wall stats, host-phase split and, when spans
+  were on, the HLO-derived device-phase attribution (DESIGN.md §12.1).
+* **measured vs modeled** — when the file holds enough to calibrate
+  (run_meta + timing/profile + comm_summary), the report runs
+  `repro.obs.calibrate` on its own events and prints the fitted
+  constants plus per-run drift (DESIGN.md §12.3).
 """
 from __future__ import annotations
 
@@ -99,6 +106,20 @@ def summarize(events: List[dict]) -> dict:
         if last.get("per_bucket"):
             c["per_bucket"] = last["per_bucket"]
         out["comm"] = c
+
+    prof = _series(events, "profile")
+    if prof:
+        out["profile"] = prof[-1]
+
+    # measured-vs-modeled: calibrate on the file's own events (skipped
+    # cleanly when the fit has nothing to chew on)
+    from repro.obs import calibrate as _cal
+    runs = _cal.extract_runs(events)
+    if runs:
+        try:
+            out["calibration"] = _cal.calibrate(runs)
+        except (ValueError, KeyError):
+            pass  # e.g. delayed-only input: no linear run to fit
     return out
 
 
@@ -132,6 +153,26 @@ def render(summary: dict) -> str:
             lines.append(f"  step {iv['step']:>6}: interval "
                          f"{iv['interval_s'] * 1e3:8.2f}ms / "
                          f"{iv['steps']} steps = {per * 1e3:.2f}ms/step")
+
+    prof = summary.get("profile")
+    if prof:
+        s = prof["step_s"]
+        lines.append("")
+        lines.append(
+            f"profile window: steps {prof['step0']}..."
+            f"{prof['step0'] + prof['n_steps'] - 1}  "
+            f"step {s['mean'] * 1e3:.2f}ms mean  "
+            f"[{s['min'] * 1e3:.2f} .. {s['max'] * 1e3:.2f}]  "
+            f"p50 {s['p50'] * 1e3:.2f}ms  "
+            f"({prof.get('exchange_steps', '?')} exchange steps)")
+        for name, rec in (prof.get("host_phases") or {}).items():
+            lines.append(f"  host  {name:>9}: {rec['total_s'] * 1e3:8.2f}ms "
+                         f"over {rec['n']} calls")
+        for name, rec in (prof.get("device_phases") or {}).items():
+            lines.append(f"  device{name:>9}: {rec['ops']:>5} ops  "
+                         f"{_fmt_bytes(rec['bytes'])} result traffic")
+        if prof.get("trace_dir"):
+            lines.append(f"  trace: {prof['trace_dir']}")
 
     gap = summary.get("delta_gap")
     if gap:
@@ -187,6 +228,12 @@ def render(summary: dict) -> str:
         if "msg_var" in obs:
             lines.append(f"message moments (aggregate): mean "
                          f"{obs['msg_mean']:.3e}  var {obs['msg_var']:.3e}")
+
+    cal = summary.get("calibration")
+    if cal:
+        from repro.obs import calibrate as _cal
+        lines.append("")
+        lines.append(_cal.render(cal))
 
     if not lines:
         lines.append("no renderable events (is this a sink file?)")

@@ -1,14 +1,22 @@
-"""Structured run sinks: a versioned JSONL event schema (DESIGN.md §11).
+"""Structured run sinks: a versioned JSONL event schema (DESIGN.md §11, §12).
 
 Every event is one JSON object::
 
-    {"v": 1, "kind": "...", "strategy": "<short_hash>", ...payload}
+    {"v": 2, "kind": "...", "strategy": "<short_hash>", ...payload}
 
 ``v`` is the schema version (bump on any incompatible field change;
 readers must ignore unknown fields so additive changes don't bump it),
 ``kind`` names the event type, ``strategy`` is `Strategy.short_hash()` —
 the structural identity every event is keyed by, so a report can join a
 sink file against regression baselines and checkpoints.
+
+Version history: v1 is the PR 6 schema (run_meta / train_log / timing /
+obs_metrics / comm_summary / bench_row). v2 adds the measured-vs-modeled
+kinds — ``profile`` (step-profiler windows, DESIGN.md §12.1) and
+``calibration`` (fitted LinkModel constants + drift, §12.3). Writers
+stamp v2; readers accept BOTH versions (a v1 file validates unchanged),
+but refuse a v2-only kind claiming ``v: 1`` — that is a mislabeled
+writer, not an old file.
 
 Backends: `StdoutSink` renders events in the pre-obs stdout format
 (train_log rows as bare JSON lines, everything else as ``# obs[...]``
@@ -21,7 +29,8 @@ from __future__ import annotations
 import json
 from typing import Any, Dict, IO, Optional, Sequence
 
-SCHEMA_VERSION = 1
+SCHEMA_VERSION = 2
+SUPPORTED_VERSIONS = (1, 2)
 
 # kind -> required payload fields (beyond the envelope). Readers must
 # tolerate extra fields; writers must provide at least these.
@@ -32,7 +41,13 @@ EVENT_KINDS: Dict[str, tuple] = {
     "obs_metrics": ("step",),        # on-device telemetry (repro.obs)
     "comm_summary": (),              # CommLedger.summary() payload
     "bench_row": ("name", "us"),     # one benchmarks.run CSV row
+    # ---- v2: the measured side (DESIGN.md §12) ---- #
+    "profile": ("step0", "n_steps", "step_s"),   # one profiled window
+    "calibration": ("bandwidth_Bps", "latency_s"),  # fitted constants
 }
+
+# kinds that did not exist in schema v1 — a v1 event may not carry them
+V2_KINDS = ("profile", "calibration")
 
 
 class SchemaError(ValueError):
@@ -40,17 +55,22 @@ class SchemaError(ValueError):
 
 
 def validate_event(ev: Any) -> None:
-    """Raise `SchemaError` unless `ev` is a valid schema event."""
+    """Raise `SchemaError` unless `ev` is a valid schema event (any
+    supported version — v1 files stay readable after the v2 bump)."""
     if not isinstance(ev, dict):
         raise SchemaError(f"event: expected an object, got "
                           f"{type(ev).__name__}")
-    if ev.get("v") != SCHEMA_VERSION:
-        raise SchemaError(f"event: schema version {ev.get('v')!r} != "
-                          f"{SCHEMA_VERSION}")
+    v = ev.get("v")
+    if v not in SUPPORTED_VERSIONS:
+        raise SchemaError(f"event: schema version {v!r} not in supported "
+                          f"{SUPPORTED_VERSIONS}")
     kind = ev.get("kind")
     if kind not in EVENT_KINDS:
         raise SchemaError(f"event: unknown kind {kind!r}; have "
                           f"{sorted(EVENT_KINDS)}")
+    if v < 2 and kind in V2_KINDS:
+        raise SchemaError(f"event: kind {kind!r} requires schema v2, "
+                          f"got v={v}")
     missing = [f for f in EVENT_KINDS[kind] if f not in ev]
     if missing:
         raise SchemaError(f"event kind={kind!r}: missing field(s) "

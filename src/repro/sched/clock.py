@@ -56,6 +56,24 @@ class LinkModel:
             return 0.0
         return self.latency_s + bytes_per_worker / self.bandwidth_Bps
 
+    @classmethod
+    def from_dict(cls, d: dict) -> "LinkModel":
+        """Build from a calibration payload (`repro.obs.calibrate` output
+        or any dict carrying the two link constants)."""
+        return cls(bandwidth_Bps=float(d["bandwidth_Bps"]),
+                   latency_s=float(d["latency_s"]))
+
+
+def load_calibration(path: str):
+    """(LinkModel, full payload) from a calibration JSON written by
+    ``python -m repro.obs calibrate --out PATH`` (DESIGN.md §12.3). The
+    payload carries ``t_compute_s`` and the per-run drift table beyond
+    the link constants."""
+    import json
+    with open(path) as fh:
+        d = json.load(fh)
+    return LinkModel.from_dict(d), d
+
 
 def simulate(schedule: ExchangeSchedule, times: np.ndarray,
              t_exchange: float, participation: float = 1.0,

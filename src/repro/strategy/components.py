@@ -564,12 +564,26 @@ class Observability:
     spans: bool = field(default=False, metadata=_cli(
         "obs_spans", "named phase spans (compress/exchange/apply/eval) "
                      "for the jax profiler"))
+    # Host-side step profiler (repro.obs.profile, DESIGN.md §12.1):
+    # block_until_ready-bracketed step walls over a --profile-steps
+    # window, per-phase attribution keyed off the repro.obs/ span names.
+    # Purely host-side, so it cannot perturb the compiled step — and like
+    # metrics/spans it is excluded from short_hash() (structural identity
+    # never includes observability).
+    profile: bool = field(default=False, metadata=_cli(
+        "obs_profile", "step profiler: emit `profile` events over the "
+                       "--profile-steps window (repro.obs.profile)"))
 
     def __post_init__(self):
         if self.metrics not in METRIC_LEVELS:
             raise StrategyError(
                 f"observability.metrics: unknown level "
                 f"{self.metrics!r}; have {METRIC_LEVELS}")
+        for name in ("spans", "profile"):
+            if not isinstance(getattr(self, name), bool):
+                raise StrategyError(
+                    f"observability.{name}: expected a bool, got "
+                    f"{getattr(self, name)!r}")
 
     # ------------------------------------------------------------------ #
     @property

@@ -64,6 +64,7 @@ LEGACY_FIELDS: Dict[str, Tuple[str, str]] = {
     "straggler_profile": ("participation", "straggler_profile"),
     "obs_metrics": ("observability", "metrics"),
     "obs_spans": ("observability", "spans"),
+    "obs_profile": ("observability", "profile"),
 }
 
 

@@ -293,6 +293,27 @@ def test_schema_validation():
         obs.validate_event("not a dict")
 
 
+def test_schema_v2_backward_compatible():
+    """v1 files stay readable after the v2 bump; the v2-only kinds are
+    refused when an event claims v1 (mislabeled writer, not an old
+    file)."""
+    assert obs.SCHEMA_VERSION == 2
+    v1 = {"v": 1, "kind": "timing", "step": 0, "step_s": 1e-3,
+          "interval_s": 1e-2}
+    obs.validate_event(v1)                       # v1 read-compat
+    prof = {"v": 2, "kind": "profile", "step0": 0, "n_steps": 4,
+            "step_s": {"mean": 1e-3}}
+    obs.validate_event(prof)
+    calib = {"v": 2, "kind": "calibration", "bandwidth_Bps": 1e9,
+             "latency_s": 1e-4}
+    obs.validate_event(calib)
+    for ev in (prof, calib):
+        with pytest.raises(obs.SchemaError, match="requires schema v2"):
+            obs.validate_event({**ev, "v": 1})
+    with pytest.raises(obs.SchemaError, match="missing"):
+        obs.validate_event({"v": 2, "kind": "profile", "step0": 0})
+
+
 def test_jsonl_sink_roundtrip(tmp_path):
     path = str(tmp_path / "run.jsonl")
     with obs.make_sink(path, strategy_hash="abc123") as sink:

@@ -1,0 +1,205 @@
+"""Wall-clock calibration round-trip (repro.obs.calibrate, DESIGN.md §12.3).
+
+The core property: events synthesized from a KNOWN LinkModel + compute
+constant through the forward cost model must fit back to exactly those
+constants, with modeled-vs-measured drift ≈ 0. Plus the degradation
+ladder (single-run fallbacks), the CLI (incl. the drift gate exit code)
+and the sched.clock load hook."""
+import json
+
+import pytest
+
+from repro.obs import calibrate as cal
+from repro.sched.clock import LinkModel, load_calibration
+from repro.strategy import Schedule, Strategy
+
+T_C = 2e-3
+LINK = LinkModel(bandwidth_Bps=2e9, latency_s=5e-4)
+W = 8
+STEPS = 64
+N_WALLS = 16
+
+
+def _strategy(schedule) -> dict:
+    return Strategy(schedule=schedule).to_dict()
+
+
+def _run_events(schedule, wire_bytes, mean_step_s, walls=None):
+    """One synthetic run: run_meta + a full profile window + the comm
+    summary — the minimum calibrate consumes."""
+    walls = walls if walls is not None else [mean_step_s] * N_WALLS
+    ordered = sorted(walls)
+    return [
+        {"v": 2, "kind": "run_meta", "steps": STEPS, "n_workers": W,
+         "arch": "syn", "strategy_json": _strategy(schedule)},
+        {"v": 2, "kind": "profile", "step0": 0, "n_steps": len(walls),
+         "exchange_steps": len(walls),
+         "step_s": {"mean": sum(walls) / len(walls), "min": ordered[0],
+                    "max": ordered[-1], "p50": ordered[len(walls) // 2],
+                    "n": len(walls)},
+         "step_walls_s": walls},
+        {"v": 2, "kind": "comm_summary",
+         "wire_bytes_per_step": wire_bytes},
+    ]
+
+
+def _forward(schedule, wire_bytes):
+    """Measured mean step under the TRUE constants (the linear model the
+    fit inverts)."""
+    t_ex = LINK.exchange_time(wire_bytes)
+    return T_C + t_ex / schedule.runtime().period
+
+
+B1, B2 = 1e6, 4e6
+RUNS = [
+    (Schedule(), B1),
+    (Schedule.local_k(4), B1),
+    (Schedule(), B2),
+]
+
+
+def _events():
+    evs = []
+    for schedule, bytes_ in RUNS:
+        evs += _run_events(schedule, bytes_, _forward(schedule, bytes_))
+    return evs
+
+
+# --------------------------------------------------------------------------- #
+def test_extract_runs():
+    runs = cal.extract_runs(_events())
+    assert len(runs) == len(RUNS)
+    assert [r.wire_bytes for r in runs] == [B1, B1, B2]
+    assert all(r.source == "profile" and r.n_samples == N_WALLS
+               for r in runs)
+    assert runs[0].measured_step_s == pytest.approx(
+        _forward(Schedule(), B1))
+
+
+def test_extract_runs_timing_fallback():
+    evs = [e for e in _run_events(Schedule(), B1, 3e-3)
+           if e["kind"] != "profile"]
+    evs.insert(1, {"v": 2, "kind": "timing", "step": 0, "step_s": 3e-3,
+                   "interval_s": 3e-3})
+    (run,) = cal.extract_runs(evs)
+    assert run.source == "timing"
+    assert run.measured_step_s == pytest.approx(3e-3)
+
+
+def test_trimmed_mean_drops_compile_step():
+    # one 3s compile wall in a 2ms window must not poison the fit
+    walls = [3.0] + [2e-3] * 15
+    assert cal._trimmed_mean(walls) == pytest.approx(2e-3)
+
+
+# --------------------------------------------------------------------------- #
+# the round trip: known constants -> events -> fit -> same constants
+# --------------------------------------------------------------------------- #
+def test_fit_recovers_known_constants():
+    runs = cal.extract_runs(_events())
+    constants = cal.fit(runs)
+    assert constants["method"] == "lstsq3"
+    assert constants["n_fit_runs"] == 3
+    assert constants["t_compute_s"] == pytest.approx(T_C, rel=1e-6)
+    assert constants["latency_s"] == pytest.approx(LINK.latency_s,
+                                                   rel=1e-6)
+    assert constants["bandwidth_Bps"] == pytest.approx(
+        LINK.bandwidth_Bps, rel=1e-6)
+
+
+def test_calibrate_drift_vanishes():
+    out = cal.calibrate(cal.extract_runs(_events()))
+    assert out["kind"] == "calibration" and out["v"] == 2
+    assert out["max_abs_drift"] == pytest.approx(0.0, abs=1e-4)
+    assert len(out["runs"]) == 3
+    for row in out["runs"]:
+        assert row["modeled_step_s"] == pytest.approx(
+            row["measured_step_s"], rel=1e-3)
+
+
+def test_delayed_run_joins_drift_not_fit():
+    """delayed overlaps comm under compute (nonlinear) — excluded from
+    the least squares, still evaluated for drift through the full
+    simulate."""
+    evs = _events()
+    delayed = Schedule.delayed(tau=2)
+    probe = cal.extract_runs(_run_events(delayed, B1, 1.0))[0]
+    measured = cal.modeled_step_s(probe, T_C, LINK)  # forward model
+    evs += _run_events(delayed, B1, measured)
+    out = cal.calibrate(cal.extract_runs(evs))
+    assert out["n_fit_runs"] == 3 and out["n_runs"] == 4
+    assert out["max_abs_drift"] == pytest.approx(0.0, abs=1e-4)
+    assert any(r["schedule"].startswith("delayed") for r in out["runs"])
+
+
+def test_fit_needs_a_linear_run():
+    evs = _run_events(Schedule.delayed(tau=2), B1, 3e-3)
+    with pytest.raises(ValueError, match="linear"):
+        cal.fit(cal.extract_runs(evs))
+
+
+def test_single_run_residual_fallback():
+    evs = _run_events(Schedule(), B1, _forward(Schedule(), B1))
+    out = cal.calibrate(cal.extract_runs(evs))
+    assert out["method"].startswith("residual")
+    assert out["t_compute_s"] > 0
+    assert out["bandwidth_Bps"] > 0
+
+
+# --------------------------------------------------------------------------- #
+# CLI + the sched.clock load hook
+# --------------------------------------------------------------------------- #
+def test_cli_roundtrip_and_clock_load(tmp_path, capsys):
+    src = tmp_path / "runs.jsonl"
+    src.write_text("".join(json.dumps(e) + "\n" for e in _events()))
+    out_json = tmp_path / "calibration.json"
+    rc = cal.main([str(src), "--out", str(out_json), "--max-drift", "0.05"])
+    assert rc == 0
+    text = capsys.readouterr().out
+    assert "calibrated constants" in text and "drift" in text
+    link, payload = load_calibration(str(out_json))
+    assert isinstance(link, LinkModel)
+    assert link.bandwidth_Bps == pytest.approx(LINK.bandwidth_Bps,
+                                               rel=1e-6)
+    assert link.latency_s == pytest.approx(LINK.latency_s, rel=1e-6)
+    assert payload["kind"] == "calibration"
+    assert payload["t_compute_s"] == pytest.approx(T_C, rel=1e-6)
+
+
+def test_cli_drift_gate_fails(tmp_path, capsys):
+    # single W=1 run whose mean sits far above its floor: the residual
+    # fallback models the floor, the gate sees the gap
+    walls = [1e-3] + [3e-3] * 15
+    evs = _run_events(Schedule(), 0.0, 0.0, walls=walls)
+    evs[0]["n_workers"] = 1
+    src = tmp_path / "run.jsonl"
+    src.write_text("".join(json.dumps(e) + "\n" for e in evs))
+    assert cal.main([str(src), "--max-drift", "0.5"]) == 3
+    assert "DRIFT GATE FAILED" in capsys.readouterr().out
+    # report-only mode keeps exit 0 on the same input
+    assert cal.main([str(src)]) == 0
+
+
+def test_cli_empty_input(tmp_path):
+    src = tmp_path / "empty.jsonl"
+    src.write_text("")
+    assert cal.main([str(src)]) == 2
+
+
+def test_linkmodel_from_dict():
+    d = {"bandwidth_Bps": 3e9, "latency_s": 2e-4, "extra": "ignored"}
+    lm = LinkModel.from_dict(d)
+    assert lm == LinkModel(bandwidth_Bps=3e9, latency_s=2e-4)
+
+
+# --------------------------------------------------------------------------- #
+# report integration: measured-vs-modeled section
+# --------------------------------------------------------------------------- #
+def test_report_gains_calibration_section():
+    from repro.obs.report import render, summarize
+    s = summarize(_events())
+    assert "calibration" in s
+    assert s["profile"]["n_steps"] == N_WALLS
+    text = render(s)
+    assert "calibrated constants" in text
+    assert "profile window" in text

@@ -554,6 +554,42 @@ def test_benchmark_gate_rejects_tier_mismatch(tmp_path):
     assert "tier mismatch" in proc.stdout
 
 
+def test_bench_roofline_rows_ride_the_sink(tmp_path):
+    """The roofline section is a first-class benchmarks.run citizen: one
+    row per dry-run record through row() -> bench_row events, explicit
+    reporting when the records are absent (never a silent skip)."""
+    import json as _json
+
+    import benchmarks.run as BR
+    from repro import obs
+
+    rec = {"arch": "gemma-2b", "shape": "train_4k", "mesh": "16x16",
+           "layout": "dp", "status": "ok", "params": 2e9, "chips": 256,
+           "mf": 1e15, "analytic_flops": 1.5e15, "flops": 1e12,
+           "bottleneck": "collective",
+           "roofline": {"compute_s": 1e-3, "memory_s": 2e-3,
+                        "collective_s": 5e-3}}
+    d = tmp_path / "dryrun"
+    d.mkdir()
+    (d / "a.json").write_text(_json.dumps(rec))
+    path = str(tmp_path / "bench.jsonl")
+    BR._SINK = obs.make_sink(path)
+    try:
+        recs = BR.bench_roofline(True, dirpath=str(d))
+        # a missing records dir is itself a reported row
+        none = BR.bench_roofline(True, dirpath=str(tmp_path / "absent"))
+    finally:
+        BR._SINK.close()
+        BR._SINK = None
+    assert len(recs) == 1 and none == []
+    evs = [e for e in obs.read_events(path) if e["kind"] == "bench_row"]
+    assert [e["name"] for e in evs] == [
+        "roofline/gemma-2b/train_4k/16x16", "roofline/none"]
+    assert "bottleneck=collective" in evs[0]["derived"]
+    assert "no dry-run records" in evs[1]["derived"]
+    assert (tmp_path / "roofline.md").exists()
+
+
 # --------------------------------------------------------------------------- #
 # ledger schedule columns
 # --------------------------------------------------------------------------- #
