@@ -313,6 +313,10 @@ class DQConfig:
     # sidesteps an XLA partitioner CHECK with manual-pod + FSDP-auto inside;
     # paper semantics exact, wire format compiler-chosen). See DESIGN.md §2.
     spmd: str = "shard_map"
+    # split-phase exchange: start delayed(τ) collectives before the
+    # round's field compute so XLA can overlap wire time with compute
+    # (DESIGN.md §13). Requires spmd="shard_map" and exchange != "exact".
+    overlap: bool = False
     # ---- repro.comm: bucketing + layer-wise planning (DESIGN.md §3) ------ #
     # "none" keeps the seed per-tensor exchange; any planner policy
     # ("uniform" | "size_tiered" | "delta_budget") routes unsharded leaves

@@ -356,7 +356,7 @@ class DQGAN:
             if dq.error_feedback:
                 st["e1"] = sds((W,) + tuple(x.shape), ef_dtype,
                                worker_spec(pspec(x)))
-            if plan["strategy"] == "two_phase":
+            if X.plan_has_owner_ef(plan):
                 ax = plan["chunk_axis"]
                 cs = list(x.shape)
                 cs[ax] //= W
@@ -371,7 +371,7 @@ class DQGAN:
             # views of it), phase-2 owner error is per-bucket.
             layout, _ = self._comm(params)
             bucket_ef = {}
-            if strat.exchange.kind == "two_phase":
+            if strat.exchange.owner_ef:
                 for b in layout.buckets:
                     bucket_ef[str(b.bid)] = {
                         "e2": sds((W, b.size // max(W, 1)), ef_dtype,
@@ -759,6 +759,25 @@ class DQGAN:
                 from repro.sched.participation import round_count
                 plan_sel = round_count(part_setup[0]) - 1
 
+        # ---------- overlapped exchange start (delayed × overlap) --------- #
+        # The delayed wire head is pure carried state (ring slot, EF
+        # residuals, kq, participation mask) — none of it depends on this
+        # round's field output — so with exchange.overlap the compress +
+        # wire collectives are ISSUED here, before the field compute, and
+        # only their local post-processing is emitted at consumption time
+        # below. XLA's latency-hiding scheduler can then run the wire ops
+        # concurrently with generator/discriminator work (DESIGN.md §13).
+        # Identical per-op operands → numerically bit-exact with the
+        # blocking (overlap=False) lowering.
+        col = self._obs_collector(state.params)
+        finish_xchg = None
+        if (self.strategy.exchange.overlap and sched_c.overlappable
+                and pending is not None):
+            with OBS.device_span("exchange", self._obs_spans):
+                finish_xchg = self._start_exchange_tree(
+                    pending, ef, plans, kq, axes, widx=widx, part=part,
+                    plan_sel=plan_sel, col=col, eager=False)
+
         # ---------- extrapolation to w_{t-1/2} ---------------------------- #
         # delayed schedule: w_{t-1} is τ applied updates stale, so the OMD
         # lookahead additionally subtracts the SUM of the worker's pending
@@ -818,12 +837,16 @@ class DQGAN:
             part[0] if part is not None else None, _tree_zeros, widx)
 
         # ---------- exchange + server-side update ------------------------- #
-        col = self._obs_collector(state.params)
         if exch_msg is not None:
             with OBS.device_span("exchange", self._obs_spans):
-                qhat, new_ef = self._exchange_tree(
-                    exch_msg, ef, plans, kq, axes, widx=widx, part=part,
-                    plan_sel=plan_sel, col=col)
+                if finish_xchg is not None:
+                    # overlap: for delayed, fold returns the wire head the
+                    # start above already put on the wire — consume it.
+                    qhat, new_ef = finish_xchg()
+                else:
+                    qhat, new_ef = self._exchange_tree(
+                        exch_msg, ef, plans, kq, axes, widx=widx, part=part,
+                        plan_sel=plan_sel, col=col)
             with OBS.device_span("apply", self._obs_spans):
                 new_params, new_m, new_v, new_prev_update = (
                     self._server_update(state, qhat))
@@ -946,17 +969,41 @@ class DQGAN:
     # ------------------------------------------------------------------ #
     def _exchange_tree(self, message, ef, plans, key, axes, widx=None,
                        part=None, plan_sel=None, col=None):
+        """Blocking exchange: start + immediate finish. The eager start
+        keeps per-leaf/per-bucket op emission order identical to the
+        pre-split API, so every_step/local_k (and overlap=False delayed)
+        compile to bit-identical graphs."""
+        return self._start_exchange_tree(
+            message, ef, plans, key, axes, widx=widx, part=part,
+            plan_sel=plan_sel, col=col, eager=True)()
+
+    def _start_exchange_tree(self, message, ef, plans, key, axes, widx=None,
+                             part=None, plan_sel=None, col=None, eager=True):
+        """Issue the exchange's compress + wire collectives and return a
+        finish thunk yielding (q̂, new_ef) — the tree-level face of the
+        split-phase contract (core.exchange.start/finish, DESIGN.md §13).
+
+        ``eager=True``: each leaf/bucket is finished as soon as it is
+        started (the blocking graphs). ``eager=False``: every start is
+        emitted before the thunk is built, and all local post-processing
+        (decompress, unpack, participation rescale + EF merge) waits in
+        the thunk — the caller puts field compute between the two so the
+        scheduler can hide the wire time. Observability records happen
+        at finish time in lazy mode; collector records are pure
+        observers, so the round's numbers are unchanged."""
         if col is None:
             col = OBS.NullCollector()
         if part is not None:
-            return self._exchange_with_participation(
-                message, ef, plans, key, axes, widx, part, plan_sel, col)
+            return self._start_with_participation(
+                message, ef, plans, key, axes, widx, part, plan_sel, col,
+                eager)
         if self.bucketed:
-            return self._exchange_bucketed(message, ef, plans, key, axes,
-                                           widx=widx, plan_sel=plan_sel,
-                                           col=col)
+            return self._start_bucketed(message, ef, plans, key, axes,
+                                        widx=widx, plan_sel=plan_sel,
+                                        col=col, eager=eager)
         dq = self.dq
         comp = self.compressor
+        exch_c = self.strategy.exchange
         W = self.n_workers
         leaves, treedef = jax.tree.flatten(message)
         plan_leaves = treedef.flatten_up_to(plans)
@@ -969,37 +1016,52 @@ class DQGAN:
             ef_leaves = treedef.flatten_up_to(ef)
             ef_leaves = [e if e is not None else {} for e in ef_leaves]
 
-        out, new_ef = [], []
+        done, handles = [], []
         for i, (p, pl, e) in enumerate(zip(leaves, plan_leaves, ef_leaves)):
             k = jax.random.fold_in(key, i)
             if not axes:  # single worker: exchange degenerates to (EF-)compress
-                q, ne = self._single_worker_leaf(comp, pl, p, e, k)
+                q1, ne1 = self._single_worker_leaf(comp, pl, p, e, k)
+                h = X.ExchangeHandle(pl["strategy"],
+                                     lambda q=q1, ne=ne1: (q, ne))
             else:
-                q, ne = X.exchange_leaf(
-                    comp, pl, p, e, k, axes, W, dq.error_feedback, widx=widx
-                )
-            if col.enabled:
-                col.leaf(p, *_obs_op_err(p, e, ne))
-            out.append(q)
-            new_ef.append(ne if ne else None)
-        qhat = jax.tree.unflatten(treedef, out)
-        if (ef is None and not dq.error_feedback
-                and self.strategy.exchange.kind != "two_phase"):
-            return qhat, None
-        return qhat, jax.tree.unflatten(treedef, new_ef)
+                h = exch_c.start(comp, pl, p, e, k, W, dq.error_feedback,
+                                 widx=widx)
+            if eager:
+                q, ne = exch_c.finish(h)
+                if col.enabled:
+                    col.leaf(p, *_obs_op_err(p, e, ne))
+                done.append((q, ne))
+            else:
+                handles.append(h)
 
-    def _exchange_with_participation(self, message, ef, plans, key, axes,
-                                     widx, part, plan_sel=None, col=None):
+        def finish():
+            pairs = done if eager else [exch_c.finish(h) for h in handles]
+            out, new_ef = [], []
+            for (q, ne), p, e in zip(pairs, leaves, ef_leaves):
+                if not eager and col.enabled:
+                    col.leaf(p, *_obs_op_err(p, e, ne))
+                out.append(q)
+                new_ef.append(ne if ne else None)
+            qhat = jax.tree.unflatten(treedef, out)
+            if ef is None and not dq.error_feedback and not exch_c.owner_ef:
+                return qhat, None
+            return qhat, jax.tree.unflatten(treedef, new_ef)
+
+        return finish
+
+    def _start_with_participation(self, message, ef, plans, key, axes,
+                                  widx, part, plan_sel, col, eager):
         """Partial participation (sched.participation, DESIGN.md §5.3):
         this worker's message and worker-side residual are masked to zero
-        when it sits the round out — every registry compressor maps 0 to a
-        zero payload, so masked workers ride through the unmodified
-        collectives contributing nothing. The averaged q̂ is rescaled from
-        1/W to 1/n_participants (a static constant), and non-participants
-        fold the would-have-been message into their EF residual instead.
-        ``plan_sel`` (adaptive PlanFamily) rides through to the bucketed
-        exchange, which re-spends the absent workers' byte budget on
-        finer quantization for the reporting ones (DESIGN.md §10).
+        at START when it sits the round out — every registry compressor
+        maps 0 to a zero payload, so masked workers ride through the
+        unmodified collectives contributing nothing. At FINISH the
+        averaged q̂ is rescaled from 1/W to 1/n_participants (a static
+        constant), and non-participants fold the would-have-been message
+        into their EF residual instead. ``plan_sel`` (adaptive
+        PlanFamily) rides through to the bucketed exchange, which
+        re-spends the absent workers' byte budget on finer quantization
+        for the reporting ones (DESIGN.md §10).
         """
         mask, n_part = part  # mask: this worker's 0/1 flag; n_part: static
         W = self.n_workers
@@ -1022,30 +1084,35 @@ class DQGAN:
         else:
             ef_in = mask_e1(ef)
 
-        qhat, new_ef = self._exchange_tree(msg_in, ef_in, plans, key, axes,
-                                           widx=widx, plan_sel=plan_sel,
-                                           col=col)
-        scale = W / n_part
-        qhat = jax.tree.map(lambda q: (q * scale).astype(q.dtype), qhat)
+        inner = self._start_exchange_tree(msg_in, ef_in, plans, key, axes,
+                                          widx=widx, plan_sel=plan_sel,
+                                          col=col, eager=eager)
 
-        if not self.dq.error_feedback or ef is None:
-            return qhat, new_ef
-        # EF merge: participants keep the exchange's residual, the rest
-        # accumulate the unsent message on top of their old residual.
-        old_leaf = ef["leaf"] if self.bucketed else ef
-        new_leaf = new_ef["leaf"] if self.bucketed else new_ef
-        olds = treedef.flatten_up_to(old_leaf)
-        news = [dict(n) if n else n
-                for n in treedef.flatten_up_to(new_leaf)]
-        for m_leaf, o, n in zip(leaves, olds, news):
-            if o and "e1" in o:
-                keep = o["e1"].astype(jnp.float32) + m_leaf
-                n["e1"] = (mask * n["e1"].astype(jnp.float32)
-                           + (1.0 - mask) * keep).astype(o["e1"].dtype)
-        merged = jax.tree.unflatten(treedef, news)
-        if self.bucketed:
-            return qhat, {"leaf": merged, "bucket": new_ef["bucket"]}
-        return qhat, merged
+        def finish():
+            qhat, new_ef = inner()
+            scale = W / n_part
+            qhat = jax.tree.map(lambda q: (q * scale).astype(q.dtype), qhat)
+
+            if not self.dq.error_feedback or ef is None:
+                return qhat, new_ef
+            # EF merge: participants keep the exchange's residual, the
+            # rest accumulate the unsent message on top of their old one.
+            old_leaf = ef["leaf"] if self.bucketed else ef
+            new_leaf = new_ef["leaf"] if self.bucketed else new_ef
+            olds = treedef.flatten_up_to(old_leaf)
+            news = [dict(n) if n else n
+                    for n in treedef.flatten_up_to(new_leaf)]
+            for m_leaf, o, n in zip(leaves, olds, news):
+                if o and "e1" in o:
+                    keep = o["e1"].astype(jnp.float32) + m_leaf
+                    n["e1"] = (mask * n["e1"].astype(jnp.float32)
+                               + (1.0 - mask) * keep).astype(o["e1"].dtype)
+            merged = jax.tree.unflatten(treedef, news)
+            if self.bucketed:
+                return qhat, {"leaf": merged, "bucket": new_ef["bucket"]}
+            return qhat, merged
+
+        return finish
 
     def _single_worker_leaf(self, comp, plan, p, e, key):
         from .error_feedback import compress_with_ef
@@ -1064,14 +1131,18 @@ class DQGAN:
     # ------------------------------------------------------------------ #
     # repro.comm flat-bucket fast path (DESIGN.md §3)
     # ------------------------------------------------------------------ #
-    def _exchange_bucketed(self, message, ef, plans, key, axes, widx=None,
-                           plan_sel=None, col=None):
+    def _start_bucketed(self, message, ef, plans, key, axes, widx=None,
+                        plan_sel=None, col=None, eager=True):
         """Exchange over bucket views: unsharded leaves are packed into a
         handful of flat, worker-divisible arrays (one collective each, per-
         bucket compressor from the comm planner); sharded leaves keep the
         per-tensor path. EF: e1 is packed/unpacked alongside the message so
         the per-leaf residual tree stays intact; two_phase owner error e2
         lives per-bucket under ef["bucket"].
+
+        Split phase: start = pack + per-bucket compress + wire
+        collectives (and the skipped leaves' starts, in lazy mode);
+        finish = decompress, unpack_into, EF reassembly.
 
         ``plan_sel`` (traced, = round participant count − 1) selects the
         adaptive PlanFamily member: every family member shares one payload
@@ -1087,6 +1158,7 @@ class DQGAN:
             col = OBS.NullCollector()
         dq = self.dq
         W = self.n_workers
+        exch_c = self.strategy.exchange
         ef_dtype = jnp.dtype(dq.ef_dtype)
         layout, cplan = self._comm(message)
         family = self._family(message)
@@ -1107,7 +1179,7 @@ class DQGAN:
             ef_leaves = [e if e is not None else {}
                          for e in treedef.flatten_up_to(leaf_ef)]
 
-        # ---- buckets ------------------------------------------------------ #
+        # ---- buckets: start = compress + wire collectives ----------------- #
         flats = B.pack(layout, leaves)
         e1_flats = None
         if dq.error_feedback:
@@ -1118,77 +1190,104 @@ class DQGAN:
             e1_flats = B.pack(layout, e1_leaves)
 
         out_flats, new_e1_flats, new_bucket_ef = [], [], {}
-        for b, assign in zip(layout.buckets, cplan.assignments):
-            if levels_tab is not None:
-                comp_b = C.TracedQuant(levels_tab[plan_sel, b.bid],
-                                       per_block=family_block)
-            else:
-                comp_b = C.get(assign.compressor)
-            plan_b = self.strategy.exchange.bucket_plan(b.size, W)
-            est = {}
-            if dq.error_feedback:
-                est["e1"] = e1_flats[b.bid]
-            if plan_b["strategy"] == "two_phase":
-                est["e2"] = (bucket_ef[str(b.bid)]["e2"]
-                             if str(b.bid) in bucket_ef
-                             else jnp.zeros((b.size // max(W, 1),), ef_dtype))
-            k = jax.random.fold_in(key, 100_000 + b.bid)
-            if not axes:
-                q, ne = self._single_worker_leaf(comp_b, plan_b,
-                                                 flats[b.bid], est, k)
-            else:
-                q, ne = X.exchange_leaf(comp_b, plan_b, flats[b.bid], est, k,
-                                        axes, W, dq.error_feedback, widx=widx)
+
+        def finish_bucket(b, plan_b, est, h):
+            q, ne = exch_c.finish(h)
             if col.enabled:
                 col.bucket(b.bid, flats[b.bid],
                            *_obs_op_err(flats[b.bid], est, ne))
             out_flats.append(q)
             if dq.error_feedback:
                 new_e1_flats.append(ne.get("e1", est.get("e1")))
-            if plan_b["strategy"] == "two_phase":
+            if X.plan_has_owner_ef(plan_b):
                 new_bucket_ef[str(b.bid)] = {"e2": ne["e2"].astype(ef_dtype)}
 
-        out_leaves = B.unpack_into(layout, out_flats, leaves)
-        if dq.error_feedback:
-            new_e1_leaves = B.unpack_into(layout, new_e1_flats, e1_leaves)
+        started = []
+        for b, assign in zip(layout.buckets, cplan.assignments):
+            if levels_tab is not None:
+                comp_b = C.TracedQuant(levels_tab[plan_sel, b.bid],
+                                       per_block=family_block)
+            else:
+                comp_b = C.get(assign.compressor)
+            plan_b = exch_c.bucket_plan(b.size, W)
+            est = {}
+            if dq.error_feedback:
+                est["e1"] = e1_flats[b.bid]
+            if X.plan_has_owner_ef(plan_b):
+                est["e2"] = (bucket_ef[str(b.bid)]["e2"]
+                             if str(b.bid) in bucket_ef
+                             else jnp.zeros((b.size // max(W, 1),), ef_dtype))
+            k = jax.random.fold_in(key, 100_000 + b.bid)
+            if not axes:
+                q1, ne1 = self._single_worker_leaf(comp_b, plan_b,
+                                                   flats[b.bid], est, k)
+                h = X.ExchangeHandle(plan_b["strategy"],
+                                     lambda q=q1, ne=ne1: (q, ne))
+            else:
+                h = exch_c.start(comp_b, plan_b, flats[b.bid], est, k, W,
+                                 dq.error_feedback, widx=widx)
+            if eager:
+                finish_bucket(b, plan_b, est, h)
+            else:
+                started.append((b, plan_b, est, h))
 
-        # ---- skipped (sharded) leaves: per-tensor path -------------------- #
+        # ---- skipped (sharded) leaves keep the per-tensor path ------------ #
         base_comp = self.compressor
-        skipped_new = {}
-        for s in layout.skipped:
+
+        def start_skipped(s):
             k = jax.random.fold_in(key, s.index)
             if not axes:
-                q, ne = self._single_worker_leaf(
+                q1, ne1 = self._single_worker_leaf(
                     base_comp, plan_leaves[s.index], leaves[s.index],
                     ef_leaves[s.index], k)
-            else:
-                q, ne = X.exchange_leaf(
-                    base_comp, plan_leaves[s.index], leaves[s.index],
-                    ef_leaves[s.index], k, axes, W, dq.error_feedback,
-                    widx=widx)
-            if col.enabled:
-                col.leaf(leaves[s.index],
-                         *_obs_op_err(leaves[s.index], ef_leaves[s.index],
-                                      ne))
-            out_leaves[s.index] = q
-            skipped_new[s.index] = ne if ne else None
+                return X.ExchangeHandle(plan_leaves[s.index]["strategy"],
+                                        lambda q=q1, ne=ne1: (q, ne))
+            return exch_c.start(
+                base_comp, plan_leaves[s.index], leaves[s.index],
+                ef_leaves[s.index], k, W, dq.error_feedback, widx=widx)
 
-        qhat = jax.tree.unflatten(treedef, out_leaves)
-        if (ef is None and not dq.error_feedback
-                and self.strategy.exchange.kind != "two_phase"):
-            return qhat, None
+        skipped_started = []
+        if not eager:
+            skipped_started = [(s, start_skipped(s)) for s in layout.skipped]
 
-        in_bucket = {s.index for b in layout.buckets for s in b.slots}
-        new_leaf_ef = []
-        for i in range(len(leaves)):
-            if i in skipped_new:
-                new_leaf_ef.append(skipped_new[i])
-            elif i in in_bucket and dq.error_feedback:
-                new_leaf_ef.append({"e1": new_e1_leaves[i]})
-            else:
-                new_leaf_ef.append(None)
-        return qhat, {"leaf": jax.tree.unflatten(treedef, new_leaf_ef),
-                      "bucket": new_bucket_ef}
+        def finish():
+            for item in started:  # lazy: buckets' local post-processing
+                finish_bucket(*item)
+            out_leaves = B.unpack_into(layout, out_flats, leaves)
+            if dq.error_feedback:
+                new_e1_leaves = B.unpack_into(layout, new_e1_flats,
+                                              e1_leaves)
+            skipped_new = {}
+            # eager keeps the historical order: start+finish each skipped
+            # leaf AFTER the bucket unpack, one leaf at a time
+            pairs = (skipped_started if not eager
+                     else ((s, start_skipped(s)) for s in layout.skipped))
+            for s, h in pairs:
+                q, ne = exch_c.finish(h)
+                if col.enabled:
+                    col.leaf(leaves[s.index],
+                             *_obs_op_err(leaves[s.index],
+                                          ef_leaves[s.index], ne))
+                out_leaves[s.index] = q
+                skipped_new[s.index] = ne if ne else None
+
+            qhat = jax.tree.unflatten(treedef, out_leaves)
+            if ef is None and not dq.error_feedback and not exch_c.owner_ef:
+                return qhat, None
+
+            in_bucket = {s.index for b in layout.buckets for s in b.slots}
+            new_leaf_ef = []
+            for i in range(len(leaves)):
+                if i in skipped_new:
+                    new_leaf_ef.append(skipped_new[i])
+                elif i in in_bucket and dq.error_feedback:
+                    new_leaf_ef.append({"e1": new_e1_leaves[i]})
+                else:
+                    new_leaf_ef.append(None)
+            return qhat, {"leaf": jax.tree.unflatten(treedef, new_leaf_ef),
+                          "bucket": new_bucket_ef}
+
+        return finish
 
 
 def _is_ef_leaf(x):

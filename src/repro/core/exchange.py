@@ -30,15 +30,29 @@ whose padded length is always divisible by the worker count, and calls
 per bucket instead of one per tensor, and no two_phase→sim fallbacks.
 Wire cost per strategy is accounted by comm.ledger.CommLedger.
 
+Split-phase contract (DESIGN.md §13): every strategy is expressed as
+``start_exchange(...) -> ExchangeHandle`` followed by
+``finish_exchange(handle) -> (q̂, new_ef_state)``. The *start* phase emits
+everything up to and including the wire collectives (compress, EF update,
+pmean / all-gather / all-to-all); the *finish* phase emits only local
+post-processing (decompress, mean, reshape). Starting round-*s*'s handle
+before the round-*s* field compute and finishing it at consumption time
+is what lets XLA's latency-hiding scheduler overlap wire time with
+generator/discriminator compute for `Schedule.delayed(τ)`. The blocking
+`exchange_leaf` is a deprecation shim equal to start+immediate-finish,
+so every_step/local_k graphs are bit-identical to the pre-split API.
+
 The typed front-end for choosing among these is
 `repro.strategy.ExchangePlan` (DESIGN.md §9): `ExchangePlan.leaf_plans`
-→ `plan_for_tree`, `ExchangePlan.bucket_plan` → `plan_bucket`, with the
-kind validated against `STRATEGIES` at construction.
+→ `plan_for_tree`, `ExchangePlan.bucket_plan` → `plan_bucket`,
+`ExchangePlan.start/finish` → `start_exchange`/`finish_exchange`, with
+the kind validated against `STRATEGIES` at construction.
 """
 from __future__ import annotations
 
+import dataclasses
 import math
-from typing import Optional, Tuple
+from typing import Any, Callable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -83,6 +97,14 @@ def plan_bucket(strategy: str, size: int, n_workers: int) -> dict:
         assert size % max(n_workers, 1) == 0, (size, n_workers)
         return {"strategy": "two_phase", "chunk_axis": 0, "fallback": False}
     return {"strategy": strategy, "chunk_axis": None, "fallback": False}
+
+
+def plan_has_owner_ef(plan: dict) -> bool:
+    """True when `plan` carries owner-side (e2) error feedback — today
+    only two_phase. The one place that knowledge lives: callers
+    (core.dqgan, strategy.ExchangePlan.owner_ef) ask this instead of
+    string-matching on the strategy name."""
+    return plan["strategy"] == "two_phase"
 
 
 def plan_for_tree(strategy, shapes_tree, specs_tree, n_workers):
@@ -143,6 +165,101 @@ def _all_to_all(c, axes, W, widx):
                                         keepdims=False)
 
 
+# --------------------------------------------------------------------------- #
+# split-phase API
+# --------------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class ExchangeHandle:
+    """In-flight exchange for one tensor (DESIGN.md §13).
+
+    Produced by `start_exchange` after the wire collectives have been
+    *issued* into the trace; `finish_exchange` emits the local
+    post-processing and returns (q̂, new_ef_state). The handle is a
+    trace-time object (it closes over traced arrays), valid only within
+    the jitted step that created it — it is NOT a pytree and must not
+    cross a `jit` boundary or be stored in carried state. For
+    `delayed(τ)` the pending ring keeps carrying the *message* arrays;
+    the handle's lifetime is one trace: started before the round's field
+    compute, finished when the τ-stale result is consumed.
+    """
+    strategy: str
+    _finish: Callable[[], Tuple[Any, dict]]
+
+    def finish(self):
+        return self._finish()
+
+
+def _resolved(strategy, q, new_state) -> ExchangeHandle:
+    return ExchangeHandle(strategy, lambda: (q, new_state))
+
+
+def start_exchange(
+    compressor: C.Compressor,
+    plan: dict,
+    p,
+    ef_state: dict,
+    key,
+    axes: Tuple[str, ...],
+    n_workers: int,
+    use_ef: bool,
+    widx=None,
+) -> ExchangeHandle:
+    """Issue the wire collectives for one tensor; return a handle whose
+    `finish_exchange` yields (q̂, new_ef_state). Runs under
+    shard_map(axes). ``widx`` (this worker's index over `axes`) enables
+    the legacy-jax collective emulation; optional on modern jax.
+
+    Split points per strategy (start | finish):
+      exact     : pmean(p)                              | identity
+      sim       : compress+EF, pmean(p̂)                 | identity
+      allgather : compress+EF, all_gather(codes)        | decompress+mean
+      two_phase : phase 1+2 through all_gather(codes2)  | decompress+unchunk
+    EF-state updates are start-side (they depend only on local compress
+    results), so staleness semantics are unchanged by the split.
+    """
+    strategy = plan["strategy"]
+    new_state = dict(ef_state)
+
+    if strategy == "exact":
+        return _resolved(strategy, _mean_axes(p, axes), new_state)
+
+    if strategy == "sim":
+        e1 = ef_state.get("e1", jnp.zeros_like(p))
+        payload, p_hat, e_new = compress_with_ef(compressor, p, e1, key, use_ef=use_ef)
+        del payload
+        if use_ef:
+            new_state["e1"] = e_new
+        return _resolved(strategy, _mean_axes(p_hat, axes), new_state)
+
+    if strategy == "allgather":
+        e1 = ef_state.get("e1", jnp.zeros_like(p))
+        payload, p_hat, e_new = compress_with_ef(compressor, p, e1, key, use_ef=use_ef)
+        if use_ef:
+            new_state["e1"] = e_new
+        gathered = jax.tree.map(
+            lambda x: _all_gather(x, axes, n_workers, widx), payload)
+
+        def _finish_allgather():
+            deq = jax.vmap(
+                lambda pl: compressor.decompress(pl, p.shape, jnp.float32)
+            )(gathered)
+            return jnp.mean(deq, axis=0).astype(p.dtype), new_state
+
+        return ExchangeHandle(strategy, _finish_allgather)
+
+    if strategy == "two_phase":
+        return _start_two_phase(compressor, plan, p, ef_state, new_state, key,
+                                axes, n_workers, use_ef, widx)
+
+    raise ValueError(f"unknown strategy {strategy!r}")
+
+
+def finish_exchange(handle: ExchangeHandle):
+    """Emit the local post-processing of a started exchange and return
+    (q̂, new_ef_state)."""
+    return handle.finish()
+
+
 def exchange_leaf(
     compressor: C.Compressor,
     plan: dict,
@@ -154,44 +271,21 @@ def exchange_leaf(
     use_ef: bool,
     widx=None,
 ):
-    """Return (q̂, new_ef_state) for one tensor. Runs under shard_map(axes).
-    ``widx`` (this worker's index over `axes`) enables the legacy-jax
-    collective emulation; optional when running on modern jax."""
-    strategy = plan["strategy"]
-    new_state = dict(ef_state)
+    """Blocking shim: start + immediate finish (deprecated spelling).
 
-    if strategy == "exact":
-        return _mean_axes(p, axes), new_state
-
-    if strategy == "sim":
-        e1 = ef_state.get("e1", jnp.zeros_like(p))
-        payload, p_hat, e_new = compress_with_ef(compressor, p, e1, key, use_ef=use_ef)
-        del payload
-        if use_ef:
-            new_state["e1"] = e_new
-        return _mean_axes(p_hat, axes), new_state
-
-    if strategy == "allgather":
-        e1 = ef_state.get("e1", jnp.zeros_like(p))
-        payload, p_hat, e_new = compress_with_ef(compressor, p, e1, key, use_ef=use_ef)
-        if use_ef:
-            new_state["e1"] = e_new
-        gathered = jax.tree.map(
-            lambda x: _all_gather(x, axes, n_workers, widx), payload)
-        deq = jax.vmap(
-            lambda pl: compressor.decompress(pl, p.shape, jnp.float32)
-        )(gathered)
-        return jnp.mean(deq, axis=0).astype(p.dtype), new_state
-
-    if strategy == "two_phase":
-        return _two_phase(compressor, plan, p, ef_state, new_state, key, axes,
-                          n_workers, use_ef, widx)
-
-    raise ValueError(f"unknown strategy {strategy!r}")
+    Kept so external callers of the pre-split API keep working and so
+    the overlap=False lowering is bit-identical to the historical graphs
+    (same per-leaf op emission order). New code should go through
+    `ExchangePlan.start`/`ExchangePlan.finish` (repro.strategy) or the
+    module-level `start_exchange`/`finish_exchange` pair.
+    """
+    return finish_exchange(start_exchange(
+        compressor, plan, p, ef_state, key, axes, n_workers, use_ef,
+        widx=widx))
 
 
-def _two_phase(compressor, plan, p, ef_state, new_state, key, axes, W, use_ef,
-               widx=None):
+def _start_two_phase(compressor, plan, p, ef_state, new_state, key, axes, W,
+                     use_ef, widx=None) -> ExchangeHandle:
     ax = plan["chunk_axis"]
     orig_shape = p.shape
     # ---- phase 1: worker-side compress + all-to-all ------------------------ #
@@ -219,13 +313,17 @@ def _two_phase(compressor, plan, p, ef_state, new_state, key, axes, W, use_ef,
     del chunk_hat
     new_state["e2"] = e2_new.reshape(ef_state["e2"].shape).astype(ef_state["e2"].dtype)
     gathered = jax.tree.map(lambda c: _all_gather(c, axes, W, widx), payload2)
-    chunks = jax.vmap(
-        lambda pl: compressor.decompress(pl, chunk_mean.shape, jnp.float32)
-    )(gathered)
-    q = jnp.moveaxis(
-        chunks.reshape((orig_shape[ax],) + _rest(orig_shape, ax)), 0, ax
-    )
-    return q.astype(p.dtype), new_state
+
+    def _finish_two_phase():
+        chunks = jax.vmap(
+            lambda pl: compressor.decompress(pl, chunk_mean.shape, jnp.float32)
+        )(gathered)
+        q = jnp.moveaxis(
+            chunks.reshape((orig_shape[ax],) + _rest(orig_shape, ax)), 0, ax
+        )
+        return q.astype(p.dtype), new_state
+
+    return ExchangeHandle("two_phase", _finish_two_phase)
 
 
 def _rest(shape, ax):
@@ -235,6 +333,15 @@ def _rest(shape, ax):
 # --------------------------------------------------------------------------- #
 # modeled wire bytes (for the speedup benchmark + roofline cross-check)
 # --------------------------------------------------------------------------- #
+def transport_factor(n_workers: int) -> float:
+    """Ring-transport multiplier 2·(W−1)/W: per-worker wire bytes of a
+    ring all-reduce (reduce-scatter + all-gather) relative to payload
+    size. The single spelling shared by `modeled_wire_bytes`, the
+    strategy component (`ExchangePlan.transport_factor`), and the
+    compiled-HLO byte gap (`obs.hlo.byte_gap`)."""
+    return 2 * (n_workers - 1) / max(n_workers, 1)
+
+
 def modeled_wire_bytes(strategy, compressor, shape, n_workers):
     """Per-worker bytes moved for one tensor, by strategy (send+receive)."""
     d = math.prod(shape)
@@ -242,9 +349,9 @@ def modeled_wire_bytes(strategy, compressor, shape, n_workers):
     cb = compressor.wire_bytes(shape, n_workers)
     if strategy == "exact" or strategy == "sim":
         # ring all-reduce: 2·(W-1)/W · d · 4  ≈ 8d
-        return 2 * (n_workers - 1) / n_workers * full
+        return transport_factor(n_workers) * full
     if strategy == "allgather":
         return cb + (n_workers - 1) * cb  # send own + receive all others
     if strategy == "two_phase":
-        return 2 * (n_workers - 1) / n_workers * cb  # A2A + AG, compressed
+        return transport_factor(n_workers) * cb  # A2A + AG, compressed
     raise ValueError(strategy)

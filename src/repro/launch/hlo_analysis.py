@@ -128,6 +128,14 @@ class HLOAnalysis:
             op_m = re.match(r"\s*\(?[\w\[\],{}\s/*]*?\)?\s*([\w\-]+)\(",
                             rhs.strip())
             opname = op_m.group(1) if op_m else ""
+            # the result-type segment: everything left of the op name.
+            # `rhs.split("(")[0]` would truncate tuple-typed results
+            # (async -start ops, multi-output fusions) at the tuple's
+            # own paren and count zero bytes for them.
+            if op_m:
+                result_seg = rhs.strip()[:op_m.start(1)]
+            else:
+                result_seg = rhs.split("(")[0]
             # no-cost ops: data-movement bookkeeping and loop plumbing.
             # `fusion` IS counted (its result is the one real HBM write of
             # the whole fused chain) but NOT recursed into — fused
@@ -137,7 +145,7 @@ class HLOAnalysis:
                 "while", "conditional", "call", "bitcast",
                 "after-all", "opt-barrier",
             )
-            result_bytes = _shape_bytes(lhs + "=" + rhs.split("(")[0])
+            result_bytes = _shape_bytes(lhs + "=" + result_seg)
             if not free:
                 self.traffic_bytes += mult * result_bytes
             cm = re.search(r"\b(" + "|".join(_COLL_OPS) + r")(-start)?\(", rhs)
@@ -146,21 +154,23 @@ class HLOAnalysis:
                 rec = self.collectives.setdefault(
                     op, {"count": 0, "bytes": 0.0, "int8_bytes": 0.0})
                 rec["count"] += mult
-                rec["bytes"] += mult * result_bytes
-                int8 = sum(
-                    (lambda n: n)(int(eval("*".join(d.split(",")) or "1")))
-                    if False else 0 for d in [])
-                # int8 share of the result shape
-                i8 = 0
-                for dt, dims in _TYPE_RE.findall(
-                        lhs + "=" + rhs.split("(")[0]):
+                entries = _TYPE_RE.findall(lhs + "=" + result_seg)
+                if cm.group(2):
+                    # async pair: the -start result is a tuple aliasing
+                    # the operand(s) alongside the destination buffer(s),
+                    # and the matching -done re-prints the destination.
+                    # Count the destination half once here (the -done
+                    # line is excluded above), not operand + destination.
+                    entries = entries[len(entries) // 2:]
+                for dt, dims in entries:
+                    n = 1
+                    for d in dims.split(","):
+                        if d:
+                            n *= int(d)
+                    nb = n * _DTYPE_BYTES[dt]
+                    rec["bytes"] += mult * nb
                     if dt in ("s8", "u8", "pred", "s4", "u4"):
-                        n = 1
-                        for d in dims.split(","):
-                            if d:
-                                n *= int(d)
-                        i8 += n * _DTYPE_BYTES[dt]
-                rec["int8_bytes"] += mult * i8
+                        rec["int8_bytes"] += mult * nb
             if "while(" in rhs:
                 called = dict(
                     re.findall(r"(condition|body)=%?([\w.\-]+)", rhs))

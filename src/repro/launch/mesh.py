@@ -1,8 +1,67 @@
-"""Production meshes. Functions, not module constants — importing this
-module never touches jax device state."""
+"""Production meshes + the XLA overlap-flag helper. Functions, not
+module constants — importing this module never touches jax device
+state."""
 from __future__ import annotations
 
+import os
+import warnings
+
 from repro.parallel.compat import AxisType, make_mesh as _make_mesh
+
+# Per-platform XLA flags that let the compiler overlap the split-phase
+# exchange (DESIGN.md §13) with field compute. Only flags verified to
+# exist in the pinned jaxlib are listed — XLA aborts the process on an
+# unknown --xla_* flag, so this table is allow-list, not wish-list.
+#
+#  gpu : async collectives are on by default; the latency-hiding
+#        scheduler + a high-priority async stream make the -start/-done
+#        pairs actually span the field compute.
+#  cpu : XLA:CPU has NO async-collective lowering (collectives stay
+#        sync thunks); the thunk runtime + concurrency-optimized
+#        scheduler are the closest knobs — they let independent thunks
+#        (which the delayed exchange's collectives are, see
+#        obs.hlo.exchange_field_independence) run on the thread pool.
+#  tpu : overlap is default XLA:TPU behavior; nothing to set.
+OVERLAP_XLA_FLAGS = {
+    "gpu": (
+        "--xla_gpu_enable_latency_hiding_scheduler=true",
+        "--xla_gpu_enable_highest_priority_async_stream=true",
+    ),
+    "cpu": (
+        "--xla_cpu_use_thunk_runtime=true",
+        "--xla_cpu_enable_concurrency_optimized_scheduler=true",
+    ),
+    "tpu": (),
+}
+
+
+def enable_overlap_flags(platform: str = "cpu") -> tuple:
+    """Append the platform's overlap flags to ``XLA_FLAGS`` (the
+    `set_platform` idiom: call BEFORE the first jax operation — XLA
+    parses the env var once at backend init). Idempotent; returns the
+    flags added. A no-op with a warning if the jax backend is already
+    initialized, since the flags could no longer take effect."""
+    flags = OVERLAP_XLA_FLAGS.get(platform)
+    if flags is None:
+        raise ValueError(
+            f"unknown platform {platform!r}; have "
+            f"{sorted(OVERLAP_XLA_FLAGS)}")
+    import jax
+    monitoring = getattr(jax, "_src", None)
+    backends = getattr(getattr(monitoring, "xla_bridge", None),
+                       "_backends", None)
+    if backends:
+        warnings.warn(
+            "enable_overlap_flags called after jax backend init — "
+            "XLA_FLAGS already parsed; set the flags before the first "
+            "jax call (or in the launch environment) for them to apply",
+            stacklevel=2)
+        return ()
+    current = os.environ.get("XLA_FLAGS", "")
+    added = tuple(f for f in flags if f not in current)
+    if added:
+        os.environ["XLA_FLAGS"] = " ".join(filter(None, (current,) + added))
+    return added
 
 
 def make_production_mesh(*, multi_pod: bool = False, override: str = ""):

@@ -1,32 +1,38 @@
-"""`python -m repro.obs {report,calibrate}` — the run-sink CLIs."""
+"""``python -m repro.obs {report,calibrate}`` — the run-sink CLIs.
+
+One argparse subparser tree; each subcommand contributes its arguments
+via its ``add_args`` hook and runs via its ``run`` hook, and both share
+the ``--json`` / ``--out`` / ``--no-validate`` IO contract
+(`repro.obs.cli`).
+"""
 from __future__ import annotations
 
-import sys
-
-_USAGE = (
-    "usage: python -m repro.obs SUBCOMMAND ...\n\n"
-    "subcommands:\n"
-    "  report     render a run-sink JSONL file (repro.obs.report)\n"
-    "  calibrate  fit sched.clock constants from recorded runs and\n"
-    "             report modeled-vs-measured drift (repro.obs.calibrate)"
-)
+import argparse
+from typing import List, Optional
 
 
-def main(argv=None) -> int:
-    argv = list(sys.argv[1:] if argv is None else argv)
-    if not argv or argv[0] in ("-h", "--help"):
-        print(_USAGE)
-        return 0 if argv else 2
-    cmd, rest = argv[0], argv[1:]
-    if cmd == "report":
-        from repro.obs import report
-        return report.main(rest)
-    if cmd == "calibrate":
-        from repro.obs import calibrate
-        return calibrate.main(rest)
-    print(f"unknown subcommand {cmd!r} (have: report, calibrate)",
-          file=sys.stderr)
-    return 2
+def build_parser() -> argparse.ArgumentParser:
+    from repro.obs import calibrate, report
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.obs",
+        description="run-sink observability CLIs (DESIGN.md §11-§13)")
+    sub = ap.add_subparsers(dest="subcommand", metavar="SUBCOMMAND")
+    for name, mod in (("report", report), ("calibrate", calibrate)):
+        p = sub.add_parser(name, help=mod.DESCRIPTION,
+                           description=mod.DESCRIPTION)
+        mod.add_args(p)
+        p.set_defaults(func=mod.run)
+    return ap
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = build_parser()
+    args = ap.parse_args(argv)
+    func = getattr(args, "func", None)
+    if func is None:
+        ap.print_help()
+        return 2
+    return func(args)
 
 
 if __name__ == "__main__":

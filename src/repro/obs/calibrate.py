@@ -38,13 +38,13 @@ device class); calibrate per-arch otherwise.
 from __future__ import annotations
 
 import argparse
-import json
 from dataclasses import dataclass
 from typing import List, Optional
 
 import numpy as np
 
-from repro.obs.sink import SCHEMA_VERSION, read_events, validate_event
+from repro.obs import cli
+from repro.obs.sink import SCHEMA_VERSION, validate_event
 
 # cap on simulated steps for gate/drift evaluation — the cost models are
 # O(steps·M) numpy; beyond a few hundred steps the gate factor has
@@ -303,47 +303,45 @@ def render(cal: dict) -> str:
     return "\n".join(lines)
 
 
-def main(argv: Optional[List[str]] = None) -> int:
-    ap = argparse.ArgumentParser(
-        prog="python -m repro.obs calibrate",
-        description="fit sched.clock LinkModel + compute constants from "
-                    "recorded run-sink files and report modeled-vs-"
-                    "measured drift")
+DESCRIPTION = ("fit sched.clock LinkModel + compute constants from "
+               "recorded run-sink files and report modeled-vs-measured "
+               "drift")
+
+
+def add_args(ap: argparse.ArgumentParser) -> None:
+    """Mount the calibrate arguments (shared IO contract: repro.obs.cli)."""
     ap.add_argument("paths", nargs="+",
                     help="sink JSONL file(s) written by --obs-sink PATH "
                          "(fit jointly — same arch/batch assumed)")
-    ap.add_argument("--out", default="", metavar="PATH",
-                    help="write the calibration JSON here (a schema-v2 "
-                         "calibration event; sched.clock.load_calibration "
-                         "reads it)")
-    ap.add_argument("--json", action="store_true",
-                    help="print the calibration as JSON instead of text")
     ap.add_argument("--max-drift", type=float, default=0.0, metavar="F",
                     help="fail (exit 3) when max |drift| exceeds this "
                          "fraction, e.g. 0.5 = 50%% (0 = report only)")
-    ap.add_argument("--no-validate", action="store_true",
-                    help="skip schema validation when reading")
-    args = ap.parse_args(argv)
+    cli.add_io_args(ap, out_help="write the calibration JSON here (a "
+                                 "schema-v2 calibration event; "
+                                 "sched.clock.load_calibration reads it)")
 
-    events: List[dict] = []
-    for p in args.paths:
-        events.extend(read_events(p, validate=not args.no_validate))
+
+def run(args: argparse.Namespace) -> int:
+    events = cli.read_paths(args.paths, validate=not args.no_validate)
     runs = extract_runs(events)
     if not runs:
         print("calibrate: no complete runs (run_meta + timing/profile "
               "events) in input")
         return 2
     cal = calibrate(runs)
-    if args.out:
-        with open(args.out, "w") as fh:
-            json.dump(cal, fh, indent=2)
-            fh.write("\n")
-    print(json.dumps(cal, indent=2) if args.json else render(cal))
+    cli.emit(args, cal, render(cal))
     if args.max_drift and cal["max_abs_drift"] > args.max_drift:
         print(f"calibrate: DRIFT GATE FAILED — max |drift| "
               f"{cal['max_abs_drift']:.3f} > {args.max_drift:.3f}")
         return 3
     return 0
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.obs calibrate",
+                                 description=DESCRIPTION)
+    add_args(ap)
+    return run(ap.parse_args(argv))
 
 
 if __name__ == "__main__":  # pragma: no cover - exercised via __main__

@@ -21,7 +21,18 @@ pure text analysis — runnable on host CI devices, no hardware profiler:
   mid-round step lowers NO gradient-payload collective (nothing close
   to the bucket payload on the wire between rounds); `delayed(τ)`
   carries the τ-deep pending ring through the step's loop state (ring
-  parameters visible in the entry signature).
+  parameters visible in the entry signature); with ``overlap=True`` the
+  exchange collectives are additionally DAG-independent of the field
+  compute ("collective N overlaps compute region R", DESIGN.md §13).
+* `exchange_field_independence(txt)` — the overlap invariant on any
+  backend: no exchange-scoped collective transitively consumes a
+  field-scoped op, so the scheduler is FREE to run wire and compute
+  concurrently. Pure dataflow, works on XLA:CPU (which lowers sync
+  collectives).
+* `async_collective_pairs(txt)` — on backends whose scheduler has
+  already committed to overlap (GPU/TPU with async collectives +
+  latency hiding), the -start/-done pairs and the non-trivial compute
+  scheduled between them.
 
 The live checks need a multi-device lowering (collectives only appear
 when W > 1); CI runs them on 8 forced host devices, while the committed
@@ -33,7 +44,9 @@ from __future__ import annotations
 import re
 from typing import Dict, List, Optional
 
-from repro.launch.hlo_analysis import HLOAnalysis, _TYPE_RE
+from repro.core.exchange import transport_factor
+from repro.launch.hlo_analysis import (HLOAnalysis, _COLL_OPS, _OP_NAME,
+                                       _TYPE_RE, parse_computations)
 
 # collectives that implement a gradient averaging step ("all-reduce
 # class"): a plain all-reduce, or its decomposed reduce-scatter +
@@ -74,8 +87,7 @@ def byte_gap(txt: str, ledger, participants: Optional[int] = None) -> dict:
     colls = collective_summary(txt)
     measured = float(sum(v["bytes"] for v in colls.values()))
     wire, carried = ledger.round_bytes(participants)
-    W = max(ledger.n_workers, 2)
-    transport = 2.0 * (W - 1) / W
+    transport = transport_factor(max(ledger.n_workers, 2))
     modeled_result = carried / transport if transport else carried
     return {
         "hlo_collectives": colls,
@@ -132,15 +144,161 @@ def ring_parameters(txt: str, tau: int) -> List[tuple]:
     return out
 
 
+# --------------------------------------------------------------------------- #
+# overlap structure (DESIGN.md §13)
+# --------------------------------------------------------------------------- #
+# ops that are pure data plumbing: compute "between" an async start and
+# its done must be more than these to count as hidden work
+_FREE_OPS = frozenset((
+    "tuple", "get-tuple-element", "parameter", "constant", "bitcast",
+    "after-all", "opt-barrier", "copy", "partition-id", "replica-id",
+))
+_INSTR = re.compile(r"^(?:ROOT\s+)?%?([\w.\-]+)\s*=")
+# the result type left of the op name may be a parenthesized tuple
+# (async -start ops, multi-output fusions) — skip it explicitly
+_OPNAME_OF = re.compile(
+    r"=\s*(?:\([^)]*\)\s*)?[\w\[\],{}\s/*]*?([\w\-]+)\(")
+_COLL_RE = re.compile(r"\b(" + "|".join(_COLL_OPS) + r")(-start)?\(")
+
+
+def _instr_table(lines: List[str]):
+    """[(name, opname, operand-names, scope-op_name)] for one computation,
+    in program order. Operands are the %tokens of the call argument list
+    (metadata and computation references stripped)."""
+    out = []
+    for ln in lines:
+        m = _INSTR.match(ln)
+        if m is None or "=" not in ln:
+            continue
+        name = m.group(1)
+        rhs = ln.split("=", 1)[1]
+        om = _OPNAME_OF.search(ln)
+        opname = om.group(1) if om else ""
+        meta = _OP_NAME.search(ln)
+        body = rhs.split(", metadata=")[0]
+        # computation references are attributes, not dataflow operands
+        body = re.sub(r"(?:calls|to_apply|condition|body)=%?[\w.\-]+", "",
+                      body)
+        body = re.sub(r"branch_computations=\{[^}]*\}", "", body)
+        ops = re.findall(r"%([\w.\-]+)", body)
+        out.append((name, opname, ops, meta.group(1) if meta else ""))
+    return out
+
+
+def async_collective_pairs(txt: str) -> dict:
+    """Async -start/-done pairing evidence from optimized HLO.
+
+    Backends that lower async collectives (GPU/TPU with the
+    latency-hiding scheduler; see launch.mesh.enable_overlap_flags)
+    print each overlapped collective as a `<op>-start` whose result a
+    later `<op>-done` consumes; everything scheduled between the pair
+    runs concurrently with the wire transfer. Returns per-pair non-free
+    op counts; XLA:CPU (sync collectives only) legitimately reports
+    ``pairs == 0`` — use `exchange_field_independence` for the
+    backend-agnostic overlap invariant."""
+    pairs = []
+    unmatched = 0
+    for comp, lines in parse_computations(txt).items():
+        tab = _instr_table(lines)
+        for i, (name, opname, _, _) in enumerate(tab):
+            if not opname.endswith("-start") or not any(
+                    opname == c + "-start" for c in _COLL_OPS):
+                continue
+            done_idx = None
+            for j in range(i + 1, len(tab)):
+                if tab[j][1] == opname[:-len("-start")] + "-done" and \
+                        name in tab[j][2]:
+                    done_idx = j
+                    break
+            if done_idx is None:
+                unmatched += 1
+                continue
+            between = sum(1 for k in range(i + 1, done_idx)
+                          if tab[k][1] not in _FREE_OPS)
+            pairs.append({"computation": comp, "op": opname[:-6],
+                          "start": name, "compute_between": between})
+    return {
+        "pairs": len(pairs),
+        "unmatched_starts": unmatched,
+        "min_compute_between": (min(p["compute_between"] for p in pairs)
+                                if pairs else None),
+        "detail": pairs,
+    }
+
+
+def exchange_field_independence(txt: str,
+                                prefix: str = "repro.obs/") -> dict:
+    """The backend-agnostic overlap invariant: every collective carrying
+    the `repro.obs/exchange` scope must be DAG-independent of all
+    `repro.obs/field`-scoped ops — its transitive operand closure inside
+    its computation touches no field op. That is precisely the property
+    that lets a latency-hiding scheduler run the wire transfer during
+    the field compute; a blocking lowering whose message depends on this
+    round's gradients (every_step/local_k) fails it by construction.
+
+    Needs a lowering with spans on (`Observability(spans=True)`) so the
+    scope metadata survives into the HLO; reports
+    ``spans_present=False`` otherwise. Works on XLA:CPU, where async
+    -start/-done pairs never appear but the dataflow freedom is the
+    same."""
+    exch_tag = prefix + "exchange"
+    field_tag = prefix + "field"
+    n_exch_colls = 0
+    tainted: List[str] = []
+    spans_present = False
+    for comp, lines in parse_computations(txt).items():
+        tab = _instr_table(lines)
+        if not any(t[3] for t in tab):
+            continue
+        by_name = {t[0]: t for t in tab}
+        if any(exch_tag in t[3] or field_tag in t[3] for t in tab):
+            spans_present = True
+        for name, opname, _, scope in tab:
+            if exch_tag not in scope or not _COLL_RE.search(" " + opname
+                                                           + "("):
+                continue
+            n_exch_colls += 1
+            seen = set()
+            stack = [name]
+            hit = None
+            while stack:
+                cur = stack.pop()
+                if cur in seen:
+                    continue
+                seen.add(cur)
+                t = by_name.get(cur)
+                if t is None:
+                    continue
+                if field_tag in t[3]:
+                    hit = cur
+                    break
+                stack.extend(t[2])
+            if hit is not None:
+                tainted.append(f"{comp}::{name} depends on field op {hit}")
+    return {
+        "spans_present": spans_present,
+        "exchange_collectives": n_exch_colls,
+        "tainted": tainted,
+        "ok": spans_present and n_exch_colls > 0 and not tainted,
+    }
+
+
 def check_schedule_structure(schedule, exchange_txt: str,
                              midround_txt: Optional[str] = None,
-                             n_param_leaves: Optional[int] = None) -> dict:
+                             n_param_leaves: Optional[int] = None,
+                             overlap: bool = False) -> dict:
     """Schedule-shaped assertions over compiled HLO text.
 
     ``schedule`` is a `repro.strategy.Schedule` (kind/k/tau);
     ``exchange_txt`` the optimized HLO of the do_exchange=True step
     variant, ``midround_txt`` (local_k only) the do_exchange=False
-    variant. Returns {"ok": bool, "violations": [...], ...evidence};
+    variant. ``overlap=True`` (delayed × ExchangePlan.overlap) adds the
+    "collective N overlaps compute region R" checks: the exchange
+    collectives must be DAG-independent of the field compute
+    (`exchange_field_independence`, any backend), and when the backend
+    emitted async -start/-done pairs they must be matched with
+    non-trivial compute between them (`async_collective_pairs`).
+    Returns {"ok": bool, "violations": [...], ...evidence};
     `assert_schedule_structure` raises on violations."""
     violations: List[str] = []
     ex_colls = collective_summary(exchange_txt)
@@ -196,6 +354,44 @@ def check_schedule_structure(schedule, exchange_txt: str,
                     f"delayed(tau={schedule.tau}) carries "
                     f"{len(rings)} tau-deep ring parameter(s) through "
                     f"loop state, expected >= {need}")
+
+    if overlap:
+        if schedule.kind != "delayed":
+            violations.append(
+                f"overlap structure is only defined for the delayed "
+                f"schedule, not {schedule.kind!r}")
+        else:
+            indep = exchange_field_independence(exchange_txt)
+            report["overlap_independence"] = indep
+            if not indep["spans_present"]:
+                violations.append(
+                    "overlap check needs a lowering with spans on "
+                    "(Observability(spans=True)) so exchange/field scope "
+                    "metadata survives into the HLO")
+            elif indep["exchange_collectives"] < 1:
+                violations.append(
+                    "overlap step lowers no exchange-scoped collective")
+            elif indep["tainted"]:
+                violations.append(
+                    "exchange collective(s) depend on this round's field "
+                    "compute (overlap impossible): "
+                    + "; ".join(indep["tainted"][:3]))
+            pairs = async_collective_pairs(exchange_txt)
+            report["async_pairs"] = pairs
+            # async -start/-done only exists where the backend scheduler
+            # committed to overlap (GPU/TPU); XLA:CPU lowers sync
+            # collectives, so pairs==0 there is reported, not violated —
+            # the independence check above is the CPU-tier guarantee.
+            if pairs["pairs"] > 0:
+                if pairs["unmatched_starts"]:
+                    violations.append(
+                        f"{pairs['unmatched_starts']} async collective "
+                        f"start(s) without a matching -done")
+                if (pairs["min_compute_between"] or 0) < 1:
+                    violations.append(
+                        "async collective pair(s) with no compute "
+                        "scheduled between start and done — the wire "
+                        "time is not being hidden")
     report["ok"] = not violations
     report["violations"] = violations
     return report
@@ -203,9 +399,10 @@ def check_schedule_structure(schedule, exchange_txt: str,
 
 def assert_schedule_structure(schedule, exchange_txt: str,
                               midround_txt: Optional[str] = None,
-                              n_param_leaves: Optional[int] = None) -> dict:
+                              n_param_leaves: Optional[int] = None,
+                              overlap: bool = False) -> dict:
     report = check_schedule_structure(schedule, exchange_txt, midround_txt,
-                                      n_param_leaves)
+                                      n_param_leaves, overlap=overlap)
     if not report["ok"]:
         raise AssertionError(
             f"schedule structure violated for {report['schedule']}: "

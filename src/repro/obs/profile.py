@@ -50,6 +50,38 @@ def _stats(xs: List[float]) -> Dict[str, float]:
     }
 
 
+def overlap_ratio(walls_on, walls_off, exchange_s: Optional[float] = None
+                  ) -> Dict[str, float]:
+    """Measured overlap from a paired A/B run: the same strategy timed
+    with ``exchange.overlap`` on and off (DESIGN.md §13). ``hidden_s``
+    is the step wall the split-phase lowering removed (p50-off minus
+    p50-on, clamped at 0 — medians so one compile/jitter outlier cannot
+    fake an overlap win). With ``exchange_s`` — the exposed exchange
+    wall of the *off* run, e.g. ``t_off - t_compute`` from a
+    calibration fit — the result also carries ``hidden_frac`` (the
+    fraction of the exchange the scheduler hid; the CI smoke's gate)
+    and ``exposed_s`` (what still sits on the critical path).
+
+    Inputs are either full per-step wall lists (profile windows) or
+    scalar means (timing events); pure function, no profiler state."""
+    walls_on = [float(walls_on)] if isinstance(
+        walls_on, (int, float)) else [float(w) for w in walls_on]
+    walls_off = [float(walls_off)] if isinstance(
+        walls_off, (int, float)) else [float(w) for w in walls_off]
+    if not walls_on or not walls_off:
+        raise ValueError("overlap_ratio: need at least one step wall "
+                         "on each side of the A/B pair")
+    t_on = _stats(walls_on)["p50"]
+    t_off = _stats(walls_off)["p50"]
+    hidden = max(t_off - t_on, 0.0)
+    out = {"t_on_s": t_on, "t_off_s": t_off, "hidden_s": hidden}
+    if exchange_s is not None and exchange_s > 0:
+        out["exchange_s"] = float(exchange_s)
+        out["exposed_s"] = max(float(exchange_s) - hidden, 0.0)
+        out["hidden_frac"] = min(hidden / float(exchange_s), 1.0)
+    return out
+
+
 class StepProfiler:
     """Collects one profiled window of a training run.
 
@@ -213,4 +245,5 @@ __all__ = [
     "NullStepProfiler",
     "StepProfiler",
     "make_profiler",
+    "overlap_ratio",
 ]

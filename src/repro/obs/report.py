@@ -24,6 +24,12 @@ Sections (each skipped cleanly when its events are absent):
   (run_meta + timing/profile + comm_summary), the report runs
   `repro.obs.calibrate` on its own events and prints the fitted
   constants plus per-run drift (DESIGN.md §12.3).
+* **overlap** — when the file holds paired runs whose strategies differ
+  only in ``exchange.overlap`` (the split-phase A/B, DESIGN.md §13),
+  each pair is reduced by `obs.profile.overlap_ratio`: the step wall
+  the overlap lowering hid, and — when the calibration fit supplied a
+  compute floor — what fraction of the off-run's exposed exchange wall
+  that is.
 """
 from __future__ import annotations
 
@@ -31,7 +37,7 @@ import argparse
 import json
 from typing import Dict, List, Optional
 
-from repro.obs.sink import read_events
+from repro.obs import cli
 
 
 def _series(events: List[dict], kind: str) -> List[dict]:
@@ -120,7 +126,56 @@ def summarize(events: List[dict]) -> dict:
             out["calibration"] = _cal.calibrate(runs)
         except (ValueError, KeyError):
             pass  # e.g. delayed-only input: no linear run to fit
+        overlap = _overlap_rows(runs, out.get("calibration"))
+        if overlap:
+            out["overlap"] = overlap
     return out
+
+
+# --------------------------------------------------------------------------- #
+def _sans_overlap(strategy_json: dict) -> str:
+    """Pairing key: the strategy JSON with exchange.overlap removed."""
+    sj = json.loads(json.dumps(strategy_json))
+    if isinstance(sj.get("exchange"), dict):
+        sj["exchange"].pop("overlap", None)
+    return json.dumps(sj, sort_keys=True)
+
+
+def _overlap_rows(runs, calibration: Optional[dict]) -> List[dict]:
+    """Measured overlap rows (DESIGN.md §13): match recorded runs whose
+    strategies differ ONLY in ``exchange.overlap`` and reduce each
+    on/off pair with `obs.profile.overlap_ratio`. The exposed exchange
+    wall of the off run is estimated as ``t_off - t_compute`` when a
+    calibration fit is available; without one the row still reports the
+    hidden seconds, just not the fraction."""
+    from repro.obs.profile import overlap_ratio
+    groups: Dict[tuple, list] = {}
+    for r in runs:
+        groups.setdefault(
+            (_sans_overlap(r.strategy_json), r.n_workers), []).append(r)
+    t_c = (calibration or {}).get("t_compute_s")
+    rows: List[dict] = []
+    for (_, W), grp in sorted(groups.items()):
+        def _is_on(r):
+            ex = r.strategy_json.get("exchange")
+            return bool(isinstance(ex, dict) and ex.get("overlap"))
+        on = [r for r in grp if _is_on(r)]
+        off = [r for r in grp if not _is_on(r)]
+        if not on or not off:
+            continue
+        a, b = on[-1], off[-1]
+        exchange_s = None
+        if t_c is not None:
+            exchange_s = max(b.measured_step_s - t_c, 0.0) or None
+        ratio = overlap_ratio(a.measured_step_s, b.measured_step_s,
+                              exchange_s)
+        try:
+            schedule = a.cost_inputs()[0].describe()
+        except Exception:
+            schedule = "?"
+        rows.append({"schedule": schedule, "n_workers": W,
+                     **{k: round(v, 6) for k, v in ratio.items()}})
+    return rows
 
 
 # --------------------------------------------------------------------------- #
@@ -229,6 +284,21 @@ def render(summary: dict) -> str:
             lines.append(f"message moments (aggregate): mean "
                          f"{obs['msg_mean']:.3e}  var {obs['msg_var']:.3e}")
 
+    ov = summary.get("overlap")
+    if ov:
+        lines.append("")
+        lines.append("overlap (paired exchange.overlap on/off runs):")
+        for r in ov:
+            row = (f"  {r['schedule']:<18} W={r['n_workers']:<3} "
+                   f"step on {r['t_on_s'] * 1e3:8.2f}ms / "
+                   f"off {r['t_off_s'] * 1e3:8.2f}ms  "
+                   f"hidden {r['hidden_s'] * 1e3:.2f}ms")
+            if "hidden_frac" in r:
+                row += (f" of {r['exchange_s'] * 1e3:.2f}ms exchange "
+                        f"({r['hidden_frac'] * 100:.0f}% hidden, "
+                        f"{r['exposed_s'] * 1e3:.2f}ms exposed)")
+            lines.append(row)
+
     cal = summary.get("calibration")
     if cal:
         from repro.obs import calibrate as _cal
@@ -240,24 +310,27 @@ def render(summary: dict) -> str:
     return "\n".join(lines)
 
 
-def main(argv: Optional[List[str]] = None) -> int:
-    ap = argparse.ArgumentParser(
-        prog="python -m repro.obs report",
-        description="render a repro.obs run-sink JSONL file")
+DESCRIPTION = "render a repro.obs run-sink JSONL file"
+
+
+def add_args(ap: argparse.ArgumentParser) -> None:
+    """Mount the report arguments (shared IO contract: repro.obs.cli)."""
     ap.add_argument("path", help="sink file written by --obs-sink PATH")
-    ap.add_argument("--json", action="store_true",
-                    help="dump the computed summary as JSON instead of "
-                         "the text rendering")
-    ap.add_argument("--no-validate", action="store_true",
-                    help="skip schema validation when reading")
-    args = ap.parse_args(argv)
-    events = read_events(args.path, validate=not args.no_validate)
+    cli.add_io_args(ap, out_help="write the summary JSON here")
+
+
+def run(args: argparse.Namespace) -> int:
+    events = cli.read_paths([args.path], validate=not args.no_validate)
     summary = summarize(events)
-    if args.json:
-        print(json.dumps(summary, indent=2))
-    else:
-        print(render(summary))
+    cli.emit(args, summary, render(summary))
     return 0
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.obs report",
+                                 description=DESCRIPTION)
+    add_args(ap)
+    return run(ap.parse_args(argv))
 
 
 if __name__ == "__main__":  # pragma: no cover - exercised via __main__

@@ -20,9 +20,14 @@ local_k    : exchange every K steps. Between rounds the per-worker message
 delayed    : bounded-staleness exchange with pipeline depth τ (>= 1).
              Step t compresses and averages the message produced at step
              t-τ — the oldest slot of the `DQState.sched["pending"]` ring
-             buffer — while step t's field evaluation proceeds; on
-             hardware τ collectives are in flight at once, each with τ
-             steps of compute to hide under. The OMD extrapolation
+             buffer — while step t's field evaluation proceeds. With
+             `exchange.overlap=True` this is a *real* split-phase
+             lowering (DESIGN.md §13): the round's collectives are
+             started before the field evaluation is traced and finished
+             at the stale consume, so XLA's async/latency-hiding
+             scheduler can put wire time under compute; on hardware τ
+             collectives are in flight at once, each with τ steps of
+             compute to hide under. The OMD extrapolation
              subtracts the SUM of the worker's pending (not-yet-applied)
              messages as the staleness correction (the τ-step recursion,
              DESIGN.md §8). τ=1 is PR 2's one-step-stale `delayed`,

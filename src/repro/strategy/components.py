@@ -198,13 +198,19 @@ class Compression:
 @dataclass(frozen=True)
 class ExchangePlan:
     """HOW the message moves: the collective strategy, the SPMD style
-    implementing it, and the mesh axes acting as the paper's M workers."""
+    implementing it, the mesh axes acting as the paper's M workers, and
+    whether `delayed(τ)` lowers onto *overlapped* (split-phase)
+    collectives — started before the round's field compute, finished at
+    consumption (DESIGN.md §13)."""
 
     kind: str = field(default="sim", metadata=_cli(
         "exchange", "collective strategy", _exchange_kinds))
     spmd: str = field(default="shard_map", metadata=_cli(
         "spmd", "worker SPMD style (DESIGN.md §2)", lambda: SPMD_STYLES))
     worker_axes: Tuple[str, ...] = ("data",)
+    overlap: bool = field(default=False, metadata=_cli(
+        "overlap", "start delayed(τ) collectives before the round's "
+                   "compute (split-phase lowering, DESIGN.md §13)"))
 
     def __post_init__(self):
         if self.kind not in _exchange_kinds():
@@ -224,6 +230,21 @@ class ExchangePlan:
             raise StrategyError(
                 f"exchange.worker_axes: need a tuple of mesh-axis names, "
                 f"got {self.worker_axes!r}")
+        if not isinstance(self.overlap, bool):
+            raise StrategyError(
+                f"exchange.overlap: must be a bool, got {self.overlap!r}")
+        if self.overlap and self.spmd == "vmap":
+            raise StrategyError(
+                "exchange.overlap: overlap=True needs real per-device "
+                "collectives; spmd='vmap' simulates workers on one "
+                "device and has nothing to overlap — use "
+                "spmd='shard_map'")
+        if self.overlap and self.kind == "exact":
+            raise StrategyError(
+                "exchange.overlap: overlap=True with exchange='exact' "
+                "would hide an *uncompressed* pmean, defeating the "
+                "measured-overlap comparison the flag exists for — use "
+                "kind='sim'/'allgather'/'two_phase'")
 
     # ------------------------------------------------------------------ #
     def leaf_plans(self, shapes_tree, specs_tree, n_workers: int):
@@ -236,6 +257,34 @@ class ExchangePlan:
     def bucket_plan(self, size: int, n_workers: int) -> dict:
         from repro.core import exchange as X
         return X.plan_bucket(self.kind, size, max(n_workers, 1))
+
+    # ---- split-phase surface (DESIGN.md §13) -------------------------- #
+    @property
+    def owner_ef(self) -> bool:
+        """True when the strategy carries owner-side (e2) error feedback —
+        i.e. the EF tree has a second, chunk-sharded residual. The typed
+        replacement for string-matching on ``kind == 'two_phase'``."""
+        from repro.core import exchange as X
+        return X.plan_has_owner_ef({"strategy": self.kind})
+
+    def start(self, compressor, plan: dict, p, ef_state: dict, key,
+              n_workers: int, use_ef: bool, widx=None):
+        """Issue the wire collectives for one tensor under this plan's
+        worker axes; returns a `core.exchange.ExchangeHandle`."""
+        from repro.core import exchange as X
+        return X.start_exchange(compressor, plan, p, ef_state, key,
+                                self.worker_axes, n_workers, use_ef,
+                                widx=widx)
+
+    def finish(self, handle):
+        """(q̂, new_ef_state) from a handle returned by `start`."""
+        from repro.core import exchange as X
+        return X.finish_exchange(handle)
+
+    def transport_factor(self, n_workers: int) -> float:
+        """Ring-transport multiplier 2·(W−1)/W (core.exchange)."""
+        from repro.core import exchange as X
+        return X.transport_factor(n_workers)
 
     def modeled_wire_bytes(self, compressor: str, n_elems: int,
                            n_workers: int) -> int:
@@ -345,6 +394,15 @@ class Schedule:
     @property
     def staleness(self) -> int:
         return self.tau if self.kind == "delayed" else 0
+
+    @property
+    def overlappable(self) -> bool:
+        """True when the wire message is already known at round start
+        (pure carried state — the delayed(τ) pending ring), so
+        `exchange.overlap` can issue the collectives before the field
+        compute. every_step/local_k messages depend on the round's own
+        gradients, so they stay start+immediate-finish."""
+        return self.kind == "delayed"
 
     def describe(self) -> str:
         return self.runtime().describe()

@@ -50,12 +50,17 @@ PRESETS: Dict[str, Strategy] = {
                                 adaptive=True),
         exchange=ExchangePlan(kind="two_phase"),
         participation=Participation(fraction=0.5)),
-    # One-step-stale exchange overlapping compute (PR 2's delayed).
-    "overlap": Strategy(schedule=Schedule.delayed(1)),
+    # One-step-stale exchange overlapping compute (PR 2's delayed),
+    # lowered split-phase: the round's collective starts before the
+    # field evaluation and finishes at the τ-stale consume (DESIGN.md
+    # §13), so XLA's async scheduler can hide the wire time.
+    "overlap": Strategy(
+        exchange=ExchangePlan(overlap=True),
+        schedule=Schedule.delayed(1)),
     # Bounded-staleness parameter server: τ=4 push/pull pipeline under a
-    # mild straggler profile (DESIGN.md §8).
+    # mild straggler profile (DESIGN.md §8), split-phase overlapped.
     "ssp_server": Strategy(
-        exchange=ExchangePlan(kind="two_phase"),
+        exchange=ExchangePlan(kind="two_phase", overlap=True),
         schedule=Schedule.delayed(4),
         participation=Participation(straggler_profile="mild")),
     # Half the workers report per round; the rest fold into EF.
@@ -77,8 +82,9 @@ PRESET_DOCS: Dict[str, str] = {
     "byte_budget": "static per-bucket bit-width descent to 1 MiB/step",
     "adaptive_budget": "round-adaptive PlanFamily: absent workers' byte "
                        "budget re-spent on finer bits (participation 0.5)",
-    "overlap": "one-step-stale exchange overlapping compute",
-    "ssp_server": "bounded-staleness τ=4 server under mild stragglers",
+    "overlap": "one-step-stale split-phase exchange overlapping compute",
+    "ssp_server": "bounded-staleness τ=4 server under mild stragglers, "
+                  "split-phase overlapped",
     "partial_participation": "half the workers report per round",
     "fsdp_vmap": "100B-scale FSDP layout, workers as a vmapped axis",
 }

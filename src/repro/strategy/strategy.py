@@ -56,6 +56,7 @@ LEGACY_FIELDS: Dict[str, Tuple[str, str]] = {
     "exchange": ("exchange", "kind"),
     "spmd": ("exchange", "spmd"),
     "worker_axes": ("exchange", "worker_axes"),
+    "overlap": ("exchange", "overlap"),
     "schedule": ("schedule", "kind"),
     "local_k": ("schedule", "k"),
     "staleness_tau": ("schedule", "tau"),

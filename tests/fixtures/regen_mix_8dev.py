@@ -7,9 +7,11 @@ Run after a deliberate change to the compiled step graph::
 
 Writes the gzipped optimized (post-SPMD, per-device) HLO of the mix
 trainer's jitted step — exchange variants for every_step / local_k(4) /
-delayed(τ=4) plus the local_k mid-round variant — and the
+delayed(τ=4) plus the local_k mid-round variant and the split-phase
+delayed(τ=4) ``exchange.overlap=True`` lowering — and the
 mix_8dev_expected.json expectations the tests pin (collective
-summaries, scope-phase op counts, ring-parameter count, ledger bytes).
+summaries, scope-phase op counts, ring-parameter count, ledger bytes,
+and the overlap variant's schedule-structure verdict).
 """
 import gzip
 import json
@@ -35,11 +37,11 @@ from repro.strategy import (
 FIX = os.path.dirname(os.path.abspath(__file__))
 
 
-def build(schedule, mesh, cfg):
+def build(schedule, mesh, cfg, overlap=False):
     strat = Strategy(
         compression=Compression(plan="uniform", bucket_mb=0.03),
         exchange=ExchangePlan(kind="two_phase", spmd="shard_map",
-                              worker_axes=("data",)),
+                              worker_axes=("data",), overlap=overlap),
         schedule=schedule,
         observability=Observability(spans=True))
     dq = DQConfig.from_strategy(strat, optimizer="omd", lr=1e-2)
@@ -68,10 +70,12 @@ def main():
                              for k, v in scope_costs(txt).items()},
         }
 
-    for name, schedule in [("every_step", Schedule()),
-                           ("local_k4", Schedule.local_k(4)),
-                           ("delayed_tau4", Schedule.delayed(tau=4))]:
-        tr = build(schedule, mesh, cfg)
+    for name, schedule, overlap in [
+            ("every_step", Schedule(), False),
+            ("local_k4", Schedule.local_k(4), False),
+            ("delayed_tau4", Schedule.delayed(tau=4), False),
+            ("delayed_tau4_overlap", Schedule.delayed(tau=4), True)]:
+        tr = build(schedule, mesh, cfg, overlap=overlap)
         with set_mesh(mesh):
             st = tr.init(params)
             step = jax.jit(tr.step, static_argnums=(3,))
@@ -82,9 +86,19 @@ def main():
                 mid = ohlo.compiled_text(step, st, batch,
                                          jax.random.key(7), False)
                 dump("mix_local_k4_mid_8dev.hlo.txt.gz", mid)
-        if name == "delayed_tau4":
+        if name.startswith("delayed_tau4"):
             expected[f"mix_{name}_8dev.hlo.txt.gz"]["ring_params"] = \
                 len(ohlo.ring_parameters(ex, 4))
+        if overlap:
+            # the split-phase lowering's structural invariant, pinned:
+            # every exchange-scoped collective is dataflow-independent
+            # of the field phase (async -start/-done pairs only appear
+            # on GPU/TPU backends, so they are reported, not required)
+            indep = ohlo.exchange_field_independence(ex)
+            expected[f"mix_{name}_8dev.hlo.txt.gz"]["independence"] = {
+                "exchange_collectives": indep["exchange_collectives"],
+                "tainted": indep["tainted"], "ok": indep["ok"],
+            }
 
     expected["n_param_leaves"] = len(jax.tree.leaves(params))
     led = build(Schedule(), mesh, cfg).comm_ledger(params)

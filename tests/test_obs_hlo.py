@@ -55,6 +55,7 @@ class _StubLedger:
     "mix_local_k4_8dev.hlo.txt.gz",
     "mix_local_k4_mid_8dev.hlo.txt.gz",
     "mix_delayed_tau4_8dev.hlo.txt.gz",
+    "mix_delayed_tau4_overlap_8dev.hlo.txt.gz",
 ])
 def test_collective_summary_matches_recorded(name):
     txt = _fixture(name)
