@@ -24,6 +24,12 @@ Sections:
                 under a straggler profile, plus the bounded-staleness
                 τ∈{1,2,4,8} convergence-vs-staleness-vs-wall-clock
                 frontier on the mixture benchmark (experiments/sched.json)
+  serve       : repro.serve — continuous-batching engine vs sequential
+                tokens/s (the engine must win at batch >= 4), a seeded
+                offered-QPS sweep (latency p50/p99, tokens/s, KV-block
+                occupancy) on a virtual clock, and the deterministic
+                serve model rows the regression gate checks
+                (experiments/serve.json)
   roofline    : benchmarks.roofline over the experiments/dryrun/*.json
                 records — one row per (arch × shape × mesh) with the
                 three roofline terms and the dominant bottleneck, plus
@@ -465,7 +471,10 @@ def bench_sched(quick: bool, model_inputs=None, convergence: bool = True,
            "tau_frontier": frontier,
            # deterministic PlanFamily wire model (no training) — gated by
            # --check-against alongside the schedule rows
-           "comm_adaptive": comm_adaptive_model_rows()}
+           "comm_adaptive": comm_adaptive_model_rows(),
+           # deterministic serving-engine model (benchmarks.serve_load) —
+           # gated the same way
+           "serve": _serve_model_rows()}
     if convergence:
         # real benchmark run (not the replayed-constants gate): attach the
         # measured split-phase overlap rows when `--only overlap` has
@@ -823,6 +832,122 @@ def bench_comm_adaptive(quick: bool):
 
 
 # --------------------------------------------------------------------------- #
+# continuous-batching serving (repro.serve)
+# --------------------------------------------------------------------------- #
+def _serve_model_rows():
+    """Lazy import shim so bench_sched can embed the serve model rows
+    without paying the repro.serve import on non-serve sections."""
+    from benchmarks.serve_load import serve_model_rows
+    return serve_model_rows()
+
+
+def bench_serve(quick: bool):
+    """Measured serving benchmark on the reduced gemma-2b:
+
+    1. closed loop — the continuous-batching engine vs the sequential
+       batch-1 baseline on the same warm request set; the engine's
+       tokens/s must strictly win (the whole point of batching decode),
+       and its decode step must have compiled exactly once across all
+       request churn.
+    2. open loop — seeded Poisson arrivals swept over offered QPS on a
+       virtual clock (measured step walls, exact arrival times):
+       latency p50/p99, tokens/s, KV-block occupancy per QPS.
+
+    Writes experiments/serve.json with the measured rows plus the
+    deterministic `serve_model_rows()` the --check-against gate compares
+    (the same rows bench_sched embeds under "serve")."""
+    import repro.configs as cfgs
+    from benchmarks.serve_load import (gen_requests, run_open_loop,
+                                       serve_model_rows)
+
+    from repro.models import model as lm
+    from repro.serve import Engine, Request, SequentialGenerator, ServeConfig
+
+    cfg = cfgs.get("gemma-2b").reduced()
+    params = lm.init(jax.random.key(0), cfg, 0)
+    scfg = ServeConfig(max_batch=4 if quick else 8, block_size=8,
+                       num_blocks=64 if quick else 128,
+                       max_blocks_per_seq=8,
+                       prompt_buckets=(8, 16, 32))
+    n_req, gen = (8, 6) if quick else (24, 12)
+    max_prompt = 24
+
+    import numpy as np
+    rng = np.random.default_rng(0)
+    prompts = [list(rng.integers(1, cfg.vocab_size,
+                                 int(rng.integers(3, max_prompt))))
+               for _ in range(n_req)]
+
+    # -- closed loop: engine vs sequential on identical requests ----------- #
+    eng = Engine(cfg, scfg, params)
+    warm = [Request(rid=10_000 + i, prompt=list(p), max_new=gen)
+            for i, p in enumerate(prompts)]
+    eng.run(warm)                                     # compile + correctness
+    reqs = [Request(rid=i, prompt=list(p), max_new=gen)
+            for i, p in enumerate(prompts)]
+    t0 = time.perf_counter()
+    out = eng.run(reqs)
+    dt_eng = time.perf_counter() - t0
+    toks = sum(len(out[r.rid]) for r in reqs)
+    tps_eng = toks / dt_eng
+
+    seq = SequentialGenerator(cfg, scfg, params)
+    seq.generate(list(prompts[0]), gen, rid=20_000)   # compile
+    t0 = time.perf_counter()
+    seq_out = {i: seq.generate(list(p), gen, rid=i)
+               for i, p in enumerate(prompts)}
+    dt_seq = time.perf_counter() - t0
+    tps_seq = sum(len(v) for v in seq_out.values()) / dt_seq
+
+    assert seq_out == {r.rid: out[r.rid] for r in reqs}, \
+        "engine and sequential baseline disagree on greedy tokens"
+    assert len(eng.decode_traces) == 1, \
+        f"decode step retraced: {len(eng.decode_traces)} compiles"
+    assert tps_eng > tps_seq, \
+        (f"continuous batching must beat sequential decode at batch "
+         f">= 4: engine {tps_eng:.1f} tok/s vs sequential {tps_seq:.1f}")
+    row("serve/closed_loop/engine", dt_eng / max(eng.scfg.max_batch, 1) * 1e6,
+        f"tokens_per_s={tps_eng:.1f} batch={scfg.max_batch} "
+        f"traces={len(eng.decode_traces)}")
+    row("serve/closed_loop/sequential", dt_seq / n_req * 1e6,
+        f"tokens_per_s={tps_seq:.1f}")
+
+    # -- open loop: offered-QPS sweep on the warm engine -------------------- #
+    sweep = []
+    for j, qps in enumerate((4.0, 16.0) if quick else (2.0, 8.0, 32.0)):
+        load = gen_requests(n_req, qps, seed=j + 1,
+                            vocab=cfg.vocab_size, max_prompt=max_prompt,
+                            max_new=gen)
+        r = run_open_loop(eng, load, rid_base=1000 * (j + 1))
+        r["qps"] = qps
+        sweep.append(r)
+        row(f"serve/qps={qps}", r["mean_step_s"] * 1e6,
+            f"p50={r['latency_p50_s']}s p99={r['latency_p99_s']}s "
+            f"tok/s={r['tokens_per_s']} "
+            f"kv_peak={r['kv_occupancy_peak']}")
+    assert len(eng.decode_traces) == 1, \
+        f"decode step retraced during QPS sweep: {len(eng.decode_traces)}"
+
+    out_doc = {
+        "arch": cfg.name,
+        "serve_config": {"max_batch": scfg.max_batch,
+                         "block_size": scfg.block_size,
+                         "num_blocks": scfg.num_blocks,
+                         "max_blocks_per_seq": scfg.max_blocks_per_seq,
+                         "prompt_buckets": list(scfg.prompt_buckets)},
+        "closed_loop": {"tokens_per_s_engine": round(tps_eng, 1),
+                        "tokens_per_s_sequential": round(tps_seq, 1),
+                        "speedup": round(tps_eng / tps_seq, 2),
+                        "decode_traces": len(eng.decode_traces)},
+        "qps_sweep": sweep,
+        "model": serve_model_rows(),
+    }
+    with open("experiments/serve.json", "w") as f:
+        json.dump(out_doc, f, indent=1)
+    return out_doc
+
+
+# --------------------------------------------------------------------------- #
 # benchmark-regression gate (CI)
 # --------------------------------------------------------------------------- #
 _GATED_FIELDS = ("mean_step_s", "wire_mb")   # wall-clock model + wire bytes
@@ -881,6 +1006,8 @@ def check_sched_regression(current: dict, baseline: dict,
     gate(current.get("comm_adaptive", []),
          baseline.get("comm_adaptive", []),
          ("strategy",), ("mode", "participation"), "comm_adaptive")
+    gate(current.get("serve", []), baseline.get("serve", []),
+         ("strategy",), ("qps",), "serve")
     return fails
 
 
@@ -892,7 +1019,7 @@ def main(argv=None):
     ap.add_argument("--only", default="",
                     help="comma list: convergence,speedup,compression,"
                          "kernels,comm,comm_adaptive,overlap,sched,"
-                         "roofline")
+                         "serve,roofline")
     ap.add_argument("--check-against", default="",
                     help="baseline JSON (a committed experiments/sched.json) "
                          "to gate the sched section against: >10% regression "
@@ -960,6 +1087,8 @@ def main(argv=None):
             if fails:
                 sys.exit(1)
             print("# sched: regression gate passed", flush=True)
+    if not only or "serve" in only:
+        bench_serve(args.quick)
     if not only or "roofline" in only:
         bench_roofline(args.quick)
     if not only or "speedup" in only:

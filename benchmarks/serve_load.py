@@ -1,0 +1,218 @@
+"""Serving load generator + open-loop driver for `benchmarks.run --only
+serve`.
+
+Two layers, mirroring the sched section's measured/modeled split:
+
+* `gen_requests` / `run_open_loop` — a seeded Poisson arrival stream
+  driven against a real `repro.serve.Engine` on a *virtual clock*: the
+  clock advances by each decode step's measured wall time and jumps to
+  the next arrival when the engine idles, so offered QPS is exact and
+  reproducible regardless of host speed. Per-request latency is
+  (virtual finish − virtual arrival).
+
+* `serve_model_rows` — a pure-python discrete-event model of the same
+  engine semantics (floor-bucket prefill + tail decode, FIFO head-of-line
+  admission, block-granular KV) under a fixed cost model. No jax, no
+  timers: bit-identical on every host, which is what the benchmark
+  regression gate keys on (rows carry a config hash under "strategy",
+  matching check_sched_regression's row identity).
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import random
+import time
+from typing import Dict, List
+
+from repro.serve import Request, ServeConfig, floor_bucket, plan_request
+
+
+def percentile(xs: List[float], p: float) -> float:
+    """Nearest-rank percentile (no numpy needed for the model rows)."""
+    if not xs:
+        return 0.0
+    s = sorted(xs)
+    i = min(len(s) - 1, max(0, int(round(p / 100.0 * (len(s) - 1)))))
+    return s[i]
+
+
+def gen_requests(n: int, qps: float, *, seed: int, vocab: int,
+                 max_prompt: int, max_new: int,
+                 min_prompt: int = 2) -> List[Request]:
+    """Seeded open-loop workload: exponential interarrivals at `qps`,
+    uniform prompt lengths in [min_prompt, max_prompt], fixed max_new."""
+    rng = random.Random(seed)
+    t = 0.0
+    out = []
+    for i in range(n):
+        t += rng.expovariate(qps)
+        plen = rng.randint(min_prompt, max_prompt)
+        prompt = [rng.randrange(1, vocab) for _ in range(plen)]
+        out.append(Request(rid=i, prompt=prompt, max_new=max_new,
+                           arrival=t))
+    return out
+
+
+def run_open_loop(engine, requests, *, rid_base: int = 0,
+                  time_fn=time.perf_counter) -> Dict:
+    """Drive `engine` with arrival-timed requests on a virtual clock.
+
+    Steps run for real (measured wall feeds the clock); arrivals are
+    virtual. `rid_base` offsets request ids so one warm engine can serve
+    several sweeps without rid collisions. Returns latency percentiles,
+    throughput, and KV-block occupancy stats."""
+    pending = sorted(requests, key=lambda r: r.arrival)
+    arrivals = {}
+    for r in pending:
+        r.rid += rid_base
+        arrivals[r.rid] = r.arrival
+    i = 0
+    clock = 0.0
+    seen = set(engine.completed)
+    finish: Dict[int, float] = {}
+    step_walls: List[float] = []
+    occupancy: List[float] = []
+    while i < len(pending) or not engine.idle:
+        while i < len(pending) and pending[i].arrival <= clock + 1e-12:
+            engine.submit(pending[i])
+            i += 1
+        if engine.idle and i < len(pending):
+            clock = max(clock, pending[i].arrival)
+            continue
+        t0 = time_fn()
+        engine.step()
+        step_walls.append(time_fn() - t0)
+        clock += step_walls[-1]
+        occupancy.append(engine.alloc.occupancy())
+        for rid in engine.completed - seen:
+            finish[rid] = clock
+            seen.add(rid)
+    lats = [finish[rid] - arrivals[rid] for rid in finish]
+    toks = sum(len(engine.outputs[rid]) for rid in finish)
+    return {
+        "n_requests": len(pending),
+        "generated_tokens": toks,
+        "clock_s": round(clock, 4),
+        "tokens_per_s": round(toks / max(clock, 1e-9), 2),
+        "latency_p50_s": round(percentile(lats, 50), 4),
+        "latency_p99_s": round(percentile(lats, 99), 4),
+        "mean_step_s": round(sum(step_walls) / max(len(step_walls), 1), 6),
+        "steps": len(step_walls),
+        "kv_occupancy_mean": round(
+            sum(occupancy) / max(len(occupancy), 1), 4),
+        "kv_occupancy_peak": round(max(occupancy, default=0.0), 4),
+    }
+
+
+# --------------------------------------------------------------------------- #
+# deterministic engine model (the gated rows)
+# --------------------------------------------------------------------------- #
+SERVE_MODEL = {
+    # engine shapes (mirrors a small-production ServeConfig)
+    "max_batch": 8, "block_size": 16, "num_blocks": 96,
+    "max_blocks_per_seq": 8, "prompt_buckets": (16, 32, 64),
+    # cost model: step wall = t_step + t_token * live_slots; prefill wall
+    # amortized into the admitting step
+    "t_step_s": 2e-3, "t_token_s": 1e-4, "t_prefill_s": 4e-3,
+    # workload
+    "n_requests": 64, "max_prompt": 56, "max_new": 24, "seed": 0,
+}
+SERVE_MODEL_QPS = (5.0, 20.0, 80.0)
+
+
+def _model_hash(qps: float) -> str:
+    blob = json.dumps({"model": {k: list(v) if isinstance(v, tuple) else v
+                                 for k, v in SERVE_MODEL.items()},
+                       "qps": qps}, sort_keys=True)
+    return hashlib.sha1(blob.encode()).hexdigest()[:12]
+
+
+def serve_model_rows() -> List[Dict]:
+    """Simulate the engine's admission/decode schedule under the fixed
+    cost model at each offered QPS. Pure python + seeded random: the
+    regression gate compares these rows across hosts (gated field:
+    mean_step_s; latency/throughput ride along for the artifact)."""
+    m = SERVE_MODEL
+    scfg = ServeConfig(max_batch=m["max_batch"], block_size=m["block_size"],
+                       num_blocks=m["num_blocks"],
+                       max_blocks_per_seq=m["max_blocks_per_seq"],
+                       prompt_buckets=tuple(m["prompt_buckets"]))
+    rows = []
+    for qps in SERVE_MODEL_QPS:
+        rng = random.Random(m["seed"])
+        t = 0.0
+        reqs = []
+        for i in range(m["n_requests"]):
+            t += rng.expovariate(qps)
+            plen = rng.randint(2, m["max_prompt"])
+            reqs.append((i, t, plen))
+        # each request costs (P - F) + (max_new - 1) decode steps and
+        # ceil((P + max_new - 1)/bs) blocks — exactly plan_request
+        queue = list(reqs)
+        slots = [None] * scfg.max_batch          # (rid, steps_left)
+        free_blocks = scfg.num_blocks - 1
+        held: Dict[int, int] = {}
+        clock = 0.0
+        finish: Dict[int, float] = {}
+        step_walls: List[float] = []
+        occ: List[float] = []
+        qi = 0
+        while qi < len(queue) or any(s is not None for s in slots):
+            # admit FIFO head-of-line among arrived requests
+            admitted_prefill = 0
+            while qi < len(queue) and queue[qi][1] <= clock + 1e-12:
+                rid, _, plen = queue[qi]
+                bucket, n_blocks = plan_request(plen, m["max_new"], scfg)
+                idx = next((k for k, s in enumerate(slots) if s is None),
+                           None)
+                if idx is None or n_blocks > free_blocks:
+                    break
+                free_blocks -= n_blocks
+                held[rid] = n_blocks
+                steps = (plen - bucket) + (m["max_new"] - 1)
+                slots[idx] = (rid, steps)
+                if bucket:
+                    admitted_prefill += 1
+                qi += 1
+            live = sum(1 for s in slots if s is not None)
+            if live == 0:
+                if qi < len(queue):
+                    clock = max(clock, queue[qi][1])
+                    continue
+                break
+            dt = (m["t_step_s"] + m["t_token_s"] * live
+                  + m["t_prefill_s"] * admitted_prefill)
+            clock += dt
+            step_walls.append(dt)
+            used = scfg.num_blocks - 1 - free_blocks
+            occ.append(used / (scfg.num_blocks - 1))
+            for k, s in enumerate(slots):
+                if s is None:
+                    continue
+                rid, left = s
+                left -= 1
+                if left <= 0:
+                    finish[rid] = clock
+                    free_blocks += held.pop(rid)
+                    slots[k] = None
+                else:
+                    slots[k] = (rid, left)
+        lats = [finish[rid] - arr for rid, arr, _ in reqs]
+        toks = m["max_new"] * len(reqs)
+        rows.append({
+            "qps": qps,
+            "strategy": _model_hash(qps),
+            "mean_step_s": round(
+                sum(step_walls) / max(len(step_walls), 1), 8),
+            "tokens_per_s": round(toks / max(clock, 1e-9), 2),
+            "latency_p50_s": round(percentile(lats, 50), 6),
+            "latency_p99_s": round(percentile(lats, 99), 6),
+            "kv_occupancy_peak": round(max(occ, default=0.0), 4),
+            "steps": len(step_walls),
+        })
+    return rows
+
+
+__all__ = ["gen_requests", "run_open_loop", "serve_model_rows",
+           "percentile", "floor_bucket", "SERVE_MODEL", "SERVE_MODEL_QPS"]

@@ -1,6 +1,6 @@
-"""Serve a small model with batched requests: batched prefill +
-autoregressive decode through the KV/state caches (exercises the same
-serve_step the decode_32k / long_500k dry-run shapes lower).
+"""Serve a small model through the continuous-batching engine: floor-
+bucket prefill + one fixed-shape decode step over a paged KV cache
+(thin wrapper over repro.launch.serve / repro.serve.Engine).
 
     PYTHONPATH=src python examples/serve_lm.py --arch mamba2-1.3b
 """
@@ -17,10 +17,15 @@ def main():
     ap.add_argument("--arch", default="mamba2-1.3b")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--gen", type=int, default=24)
+    ap.add_argument("--quantize-weights", default=None,
+                    help="e.g. qsgd8_linf")
     args = ap.parse_args()
-    serve.main(["--arch", args.arch, "--smoke", "--batch", str(args.batch),
-                "--prompt-len", "32", "--gen", str(args.gen),
-                "--temperature", "0.8"])
+    argv = ["--arch", args.arch, "--smoke", "--batch", str(args.batch),
+            "--prompt-len", "32", "--gen", str(args.gen),
+            "--temperature", "0.8", "--assert-single-trace"]
+    if args.quantize_weights:
+        argv += ["--quantize-weights", args.quantize_weights]
+    serve.main(argv)
 
 
 if __name__ == "__main__":

@@ -27,6 +27,29 @@ def quantize_ef_ref(g, e, rand, levels: int = 127):
     return codes, scale, m - deq
 
 
+def paged_attention_ref(q, pool_k, pool_v, table, lengths):
+    """Oracle for kernels.flash_attention.paged_flash_attention: gather the
+    block pool through the table into a dense per-row view, mask by length,
+    plain softmax.
+
+    q: (B, K, G, D); pool_k/v: (NB, bs, K, D); table: (B, MAXB) int32;
+    lengths: (B,). Returns (B, K, G, D)."""
+    B, Kh, G, D = q.shape
+    bs = pool_k.shape[1]
+    S = table.shape[1] * bs
+    ck = pool_k[table].reshape(B, S, Kh, D).astype(jnp.float32)
+    cv = pool_v[table].reshape(B, S, Kh, D).astype(jnp.float32)
+    s = jnp.einsum("bkgd,bskd->bkgs", q.astype(jnp.float32), ck)
+    s = s / math.sqrt(D)
+    valid = jnp.arange(S)[None, :] < lengths[:, None]
+    s = jnp.where(valid[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    # rows with length 0 have an all-masked softmax (uniform probs); zero
+    # them explicitly to match the kernel's empty-loop output
+    p = jnp.where(lengths[:, None, None, None] > 0, p, 0.0)
+    return jnp.einsum("bkgs,bskd->bkgd", p, cv).astype(q.dtype)
+
+
 def flash_attention_ref(q, k, v, causal: bool = True):
     """Plain softmax attention. q,k,v: (B, S, H, D) (same H for k/v)."""
     scale = 1.0 / math.sqrt(q.shape[-1])

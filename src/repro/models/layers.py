@@ -110,6 +110,26 @@ def mlp(p, x, activation: str):
 # ------------------------------------------------------------------------- #
 # attention
 # ------------------------------------------------------------------------- #
+# Paged-decode attention implementation, switchable at trace time:
+#   "gather" — gather the block pool through the table into a dense
+#              (B, S, K, hd) view and run the exact grouped-einsum decode
+#              math below (bit-identical to the dense cache path, which the
+#              serving engine's equivalence tests pin).
+#   "pallas" — repro.kernels.flash_attention.paged_flash_attention, an
+#              online-softmax kernel that reads only the live blocks.
+# A module global (not a cfg field) so repro.serve can flip it without a
+# config/schema change and without layers importing serve (cycle).
+_PAGED_ATTN_IMPL = ["gather"]
+
+
+def set_paged_attn_impl(impl: str) -> str:
+    """Set the paged decode attention impl; returns the previous value."""
+    assert impl in ("gather", "pallas"), impl
+    prev = _PAGED_ATTN_IMPL[0]
+    _PAGED_ATTN_IMPL[0] = impl
+    return prev
+
+
 def _constrain_batch_only(x, batch_size):
     """with_sharding_constraint: batch dim over the data axes (when they
     divide it), everything else replicated. Used to stop XLA from sharding
@@ -267,6 +287,11 @@ def attn_apply(p, x, cfg, positions, cache=None, cross_kv=None, causal=True,
         return linear(p["o"], out), new_cache
 
     # ---- decode with KV cache ------------------------------------------- #
+    if "table" in cache:
+        # paged cache (repro.serve): {"k": (NB, bs, K, hd) pool, "v": pool,
+        # "table": (B, max_blocks) int32}. Per-row write positions arrive
+        # via `positions` (B, 1) — the paged layout carries no "pos" leaf.
+        return _paged_attn_decode(p, cfg, q, k, v, cache, positions)
     # cache: {"k": (B, S_cache, K, hd), "v": ..., "pos": ()} — rolling when
     # cfg.attention_window > 0 (cache length == window).
     ck, cv = cache["k"], cache["v"]
@@ -299,6 +324,56 @@ def attn_apply(p, x, cfg, positions, cache=None, cross_kv=None, causal=True,
     out = jnp.einsum("bkgqs,bskd->bqkgd", probs.astype(cv.dtype), cv)
     out = out.reshape(B, S, H * hd)
     new_cache = {"k": ck, "v": cv, "pos": t + S}
+    return linear(p["o"], out), new_cache
+
+
+def _paged_attn_decode(p, cfg, q, k, v, cache, positions):
+    """Single-token decode against a paged KV cache.
+
+    q: (B, 1, H, hd) post-RoPE; k, v: (B, 1, K, hd) post-RoPE. The incoming
+    token's K/V are scattered into the pool block the row's table maps its
+    write position to, then attention reads the row's blocks. Rows whose
+    table is parked on the scratch block (inactive serving slots) write
+    there harmlessly; their reads are fully masked.
+
+    The default "gather" impl keeps the einsum strings, op order and
+    reduction shapes of the dense-cache branch above, so an engine decode
+    step is bit-identical to a dense sequential decode at the same context
+    length (tests/test_serve.py pins this).
+    """
+    pool_k, pool_v, table = cache["k"], cache["v"], cache["table"]
+    B = q.shape[0]
+    H, Kh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    bs = pool_k.shape[1]
+    max_blocks = table.shape[1]
+    S = bs * max_blocks                                  # gathered view length
+    t = positions[:, -1]                                 # (B,) write position
+    rows = jnp.arange(B)
+    bidx = table[rows, t // bs]                          # (B,) pool block id
+    pool_k = pool_k.at[bidx, t % bs].set(k[:, 0])
+    pool_v = pool_v.at[bidx, t % bs].set(v[:, 0])
+    new_cache = {"k": pool_k, "v": pool_v, "table": table}
+
+    if _PAGED_ATTN_IMPL[0] == "pallas":
+        from repro.kernels.flash_attention import paged_flash_attention
+        out = paged_flash_attention(
+            q[:, 0].reshape(B, Kh, H // Kh, hd), pool_k, pool_v, table, t + 1)
+        return linear(p["o"], out.reshape(B, 1, H * hd)), new_cache
+
+    ck = pool_k[table].reshape(B, S, Kh, hd)
+    cv = pool_v[table].reshape(B, S, Kh, hd)
+    k_pos = jnp.arange(S)
+    valid = k_pos[None, :] <= t[:, None]                 # (B, S) per-row mask
+    G = H // Kh
+    qg = q.reshape(B, 1, Kh, G, hd)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg, ck,
+                        preferred_element_type=jnp.float32)
+    scores = _constrain_batch_only(scores, B)
+    scores = scores / math.sqrt(hd)
+    scores = jnp.where(valid[:, None, None, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs.astype(cv.dtype), cv)
+    out = out.reshape(B, 1, H * hd)
     return linear(p["o"], out), new_cache
 
 

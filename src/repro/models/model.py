@@ -404,6 +404,20 @@ def decode_step(params, cfg, tokens, caches):
     return logits, new_caches
 
 
+def decode_step_paged(params, cfg, tokens, caches, lengths):
+    """Decode one token per row against a paged KV cache (repro.serve).
+
+    tokens: (B, 1) int32; lengths: (B,) int32 — each row's current context
+    length, which is simultaneously its RoPE position, its KV write
+    position, and its attention mask bound (the paged cache carries no
+    "pos" leaf; per-row positions flow through here). Returns
+    (logits (B, V), new_caches)."""
+    positions = lengths[:, None]
+    hidden, new_caches, _ = forward(params, cfg, tokens, positions,
+                                    caches=caches)
+    return logits_fn(params, cfg, hidden[:, -1]), new_caches
+
+
 def prefill(params, cfg, tokens, enc_embeds=None, max_len: int = 0):
     """Run the full prompt in one pass; return (last_logits, decode-ready
     caches). Attention K/V land directly in cache layout; recurrent mixers

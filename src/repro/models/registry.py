@@ -22,6 +22,9 @@ class ModelBundle:
     prefill: Optional[Callable]     # (params, tokens[, enc]) -> (logits, cache)
     decode_step: Optional[Callable]
     init_cache: Optional[Callable]
+    # (params, tokens (B,1), paged_caches, lengths (B,)) -> (logits, caches);
+    # the repro.serve engine's per-row-position decode (None for GANs).
+    decode_paged: Optional[Callable] = None
 
 
 def build(cfg) -> ModelBundle:
@@ -58,4 +61,6 @@ def build(cfg) -> ModelBundle:
             params, cfg, tokens, caches),
         init_cache=lambda batch, seq, dtype=None: lm.init_cache(
             cfg, batch, seq, dtype),
+        decode_paged=lambda params, tokens, caches, lengths: lm.decode_step_paged(
+            params, cfg, tokens, caches, lengths),
     )

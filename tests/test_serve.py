@@ -1,0 +1,273 @@
+"""repro.serve: paged KV cache, continuous-batching engine, weight quant.
+
+The load-bearing equivalences:
+  * paged flash attention == dense reference over ragged block tables;
+  * the batching engine == N sequential generates, token for token
+    (greedy, fixed seed), including requests joining and leaving
+    mid-stream — with the decode step compiled exactly once;
+  * quantized-weight decode within tolerance of f32 and bit-exact
+    across engine restarts.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.configs as cfgs
+from repro.kernels.flash_attention import paged_flash_attention
+from repro.kernels.ref import paged_attention_ref
+from repro.models import model as lm
+from repro.serve import (
+    BlockAllocator,
+    Engine,
+    Request,
+    SequentialGenerator,
+    ServeConfig,
+    ServeError,
+    floor_bucket,
+    plan_request,
+    required_tokens,
+)
+from repro.strategy.components import Compression
+
+SCFG = ServeConfig(max_batch=4, block_size=8, num_blocks=64,
+                   max_blocks_per_seq=8, prompt_buckets=(8, 16, 32))
+
+
+def _params(arch="gemma-2b", seed=0):
+    cfg = cfgs.get(arch).reduced()
+    return cfg, lm.init(jax.random.key(seed), cfg, 0)
+
+
+def _requests(cfg, n, rng, max_new=None):
+    return [Request(rid=i,
+                    prompt=list(rng.integers(1, cfg.vocab_size,
+                                             int(rng.integers(3, 40)))),
+                    max_new=int(max_new or rng.integers(1, 8)))
+            for i in range(n)]
+
+
+# --------------------------------------------------------------------------- #
+# allocator + sizing
+# --------------------------------------------------------------------------- #
+def test_allocator_reuse_oom_double_free():
+    a = BlockAllocator(8)                       # blocks 1..7 allocatable
+    assert a.capacity == 7
+    xs = a.alloc(7)
+    assert sorted(xs) == list(range(1, 8)) and a.free_blocks == 0
+    with pytest.raises(ServeError, match="out of KV blocks"):
+        a.alloc(1)
+    a.free(xs[:3])
+    assert a.free_blocks == 3 and a.occupancy() == pytest.approx(4 / 7)
+    ys = a.alloc(3)                             # recycled ids, no growth
+    assert set(ys) <= set(xs[:3])
+    a.free([xs[3]])
+    with pytest.raises(ServeError, match="double free"):
+        a.free([xs[3]])
+
+
+def test_sizing_floor_bucket_and_validation():
+    assert floor_bucket(5, SCFG) == 0           # shorter than every bucket
+    assert floor_bucket(8, SCFG) == 8
+    assert floor_bucket(31, SCFG) == 16
+    assert floor_bucket(200, SCFG) == 32
+    assert required_tokens(10, 1, SCFG) == 10   # token 0 is free
+    assert required_tokens(10, 5, SCFG) == 14
+    bucket, blocks = plan_request(20, 5, SCFG)
+    assert (bucket, blocks) == (16, 3)          # 24 tokens / bs=8
+    with pytest.raises(ServeError, match="max_context"):
+        plan_request(32, 64, SCFG)              # 95 > 64 = 8*8
+    with pytest.raises(ServeError, match="gen_steps"):
+        required_tokens(10, 0, SCFG)
+    with pytest.raises(ServeError, match="not a multiple"):
+        ServeConfig(block_size=8, prompt_buckets=(12,))
+
+
+# --------------------------------------------------------------------------- #
+# paged attention kernel vs dense reference
+# --------------------------------------------------------------------------- #
+def test_paged_flash_matches_ref_on_ragged_tables():
+    key = jax.random.key(0)
+    B, Kh, G, D, NB, bs, MAXB = 3, 2, 2, 16, 12, 4, 5
+    rng = np.random.default_rng(0)
+    lengths = jnp.asarray([1, 7, 20], jnp.int32)   # ragged, incl. 1 block
+    # random non-overlapping block assignment per row
+    perm = rng.permutation(np.arange(1, NB))
+    table = np.zeros((B, MAXB), np.int32)
+    off = 0
+    for b in range(B):
+        nb = -(-int(lengths[b]) // bs)
+        table[b, :nb] = perm[off:off + nb]
+        off += nb
+    q = jax.random.normal(key, (B, Kh, G, D))
+    pool_k = jax.random.normal(jax.random.fold_in(key, 1), (NB, bs, Kh, D))
+    pool_v = jax.random.normal(jax.random.fold_in(key, 2), (NB, bs, Kh, D))
+    out = paged_flash_attention(q, pool_k, pool_v, jnp.asarray(table),
+                                lengths)
+    ref = paged_attention_ref(q, pool_k, pool_v, jnp.asarray(table), lengths)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+    # a row with length 0 (empty decode-from-scratch slot) returns zeros
+    out0 = paged_flash_attention(q, pool_k, pool_v, jnp.asarray(table),
+                                 jnp.zeros((B,), jnp.int32))
+    assert float(jnp.abs(out0).max()) == 0.0
+
+
+# --------------------------------------------------------------------------- #
+# engine == sequential, token for token
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("arch", ["gemma-2b", "mamba2-1.3b"])
+def test_engine_matches_sequential_with_midstream_churn(arch):
+    cfg, params = _params(arch)
+    rng = np.random.default_rng(3)
+    reqs = _requests(cfg, 7, rng)
+    eng = Engine(cfg, SCFG, params)
+    # staggered submits: a few up front, the rest joining mid-stream while
+    # earlier requests are still decoding (and some have already left)
+    for r in reqs[:3]:
+        eng.submit(r)
+    steps = 0
+    for r in reqs[3:]:
+        eng.step()
+        steps += 1
+        eng.submit(r)
+    while not eng.idle:
+        assert eng.step()
+    out = eng.outputs
+
+    seq = SequentialGenerator(cfg, SCFG, params)
+    for r in reqs:
+        assert seq.generate(list(r.prompt), r.max_new, rid=r.rid) \
+            == out[r.rid], f"rid={r.rid} P={len(r.prompt)} G={r.max_new}"
+    # the no-retrace contract: one decode compile across all churn
+    assert len(eng.decode_traces) == 1
+    assert len(seq.decode_traces) == 1
+    # all blocks returned once everyone left
+    assert eng.alloc.used_blocks == 0
+
+
+def test_engine_slot_recycling_under_pressure():
+    cfg, params = _params()
+    scfg = ServeConfig(max_batch=2, block_size=8, num_blocks=10,
+                       max_blocks_per_seq=4, prompt_buckets=(8, 16))
+    rng = np.random.default_rng(4)
+    reqs = [Request(rid=i,
+                    prompt=list(rng.integers(1, cfg.vocab_size,
+                                             int(rng.integers(3, 20)))),
+                    max_new=4)
+            for i in range(8)]                   # 8 requests through 2 slots
+    eng = Engine(cfg, scfg, params)
+    out = eng.run(reqs)
+    assert all(len(out[r.rid]) == 4 for r in reqs)
+    assert len(eng.decode_traces) == 1
+    assert eng.alloc.used_blocks == 0 and eng.peak_occupancy > 0
+    seq = SequentialGenerator(cfg, scfg, params)
+    for r in reqs[:3]:
+        assert seq.generate(list(r.prompt), r.max_new, rid=r.rid) \
+            == out[r.rid]
+
+
+def test_engine_stop_token_and_sampled_equivalence():
+    cfg, params = _params()
+    rng = np.random.default_rng(5)
+    reqs = [Request(rid=i,
+                    prompt=list(rng.integers(1, cfg.vocab_size, 12)),
+                    max_new=6, temperature=0.8,
+                    stop_token=int(rng.integers(1, cfg.vocab_size)))
+            for i in range(4)]
+    eng = Engine(cfg, SCFG, params, seed=11)
+    out = eng.run(reqs)
+    seq = SequentialGenerator(cfg, SCFG, params, seed=11)
+    for r in reqs:
+        ref = seq.generate(list(r.prompt), r.max_new, rid=r.rid,
+                           temperature=r.temperature,
+                           stop_token=r.stop_token)
+        assert ref == out[r.rid]
+        assert len(ref) <= r.max_new
+        if len(ref) < r.max_new:
+            assert ref[-1] == r.stop_token
+
+
+def test_engine_request_validation():
+    cfg, params = _params()
+    eng = Engine(cfg, SCFG, params)
+    with pytest.raises(ServeError, match="max_context"):
+        eng.submit(Request(rid=0, prompt=list(range(1, 40)), max_new=60))
+    with pytest.raises(ServeError, match="empty prompt"):
+        eng.submit(Request(rid=1, prompt=[], max_new=4))
+    eng.submit(Request(rid=2, prompt=[5, 6, 7], max_new=2))
+    with pytest.raises(ServeError, match="duplicate"):
+        eng.submit(Request(rid=2, prompt=[5], max_new=1))
+
+
+# --------------------------------------------------------------------------- #
+# quantized weights
+# --------------------------------------------------------------------------- #
+def test_quantized_weights_restart_bit_exact_and_close_to_f32():
+    cfg, params = _params()
+    comp = Compression(compressor="qsgd8_linf", bucket_mb=0.25)
+    rng = np.random.default_rng(6)
+    reqs = _requests(cfg, 3, rng, max_new=5)
+
+    e1 = Engine(cfg, SCFG, params, compression=comp, seed=9)
+    o1 = e1.run(reqs)
+    e2 = Engine(cfg, SCFG, params, compression=comp, seed=9)
+    o2 = e2.run(reqs)
+    assert o1 == o2, "restart with same seed must decode bit-identically"
+    # payloads themselves are bit-identical
+    for a, b in zip(jax.tree.leaves(e1._weights), jax.tree.leaves(e2._weights)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert "8b" in e1.stats()["weights"]
+    assert e1.weight_meta.payload_bytes < e1.weight_meta.f32_bytes / 3
+
+    # 8-bit logits stay close to f32 logits on a prefill
+    from repro.serve import dequantize_weights
+    deq = dequantize_weights(e1.weight_meta, e1._weights)
+    toks = np.asarray([reqs[0].prompt[:8]], np.int32)
+    lg_q, _ = lm.prefill(deq, cfg, jnp.asarray(toks))
+    lg_f, _ = lm.prefill(params, cfg, jnp.asarray(toks))
+    err = float(jnp.abs(lg_q - lg_f).max() / (jnp.abs(lg_f).max() + 1e-9))
+    assert err < 0.15, f"8-bit weight logits drifted {err:.3f} from f32"
+
+
+def test_quantized_weights_delta_budget_mixes_bitwidths():
+    cfg, params = _params()
+    from repro.serve import quantize_weights
+    # budget between the all-2-bit floor (~0.5 MiB) and the all-8-bit
+    # payload (~2.1 MiB) so the descent must stop partway: a real mix
+    comp = Compression(compressor="qsgd8_linf", plan="delta_budget",
+                       bucket_mb=0.0625, budget_mb=1.0)
+    meta, _ = quantize_weights(params, comp)
+    assert len(set(meta.bits)) >= 2, \
+        f"budget plan should mix bit-widths, got {meta.bits}"
+    with pytest.raises(ServeError, match="linf"):
+        quantize_weights(params, Compression(compressor="qsgd8_l2"))
+
+
+# --------------------------------------------------------------------------- #
+# engine internals: pallas attention path + serve model determinism
+# --------------------------------------------------------------------------- #
+def test_engine_pallas_attn_path_matches_gather():
+    cfg, params = _params()
+    rng = np.random.default_rng(7)
+    reqs = _requests(cfg, 3, rng, max_new=5)
+    o_g = Engine(cfg, SCFG, params, attn_impl="gather").run(reqs)
+    o_p = Engine(cfg, SCFG, params, attn_impl="pallas").run(reqs)
+    assert o_g == o_p
+
+
+def test_serve_model_rows_deterministic_and_gated():
+    from benchmarks.run import check_sched_regression
+    from benchmarks.serve_load import serve_model_rows
+
+    a, b = serve_model_rows(), serve_model_rows()
+    assert a == b, "model rows must be bit-identical across calls"
+    assert all(r["latency_p99_s"] >= r["latency_p50_s"] for r in a)
+    # higher offered load never lowers occupancy pressure in the model
+    assert a[-1]["tokens_per_s"] > a[0]["tokens_per_s"]
+    # the gate catches a modeled regression on the serve rows
+    cur = {"serve": [dict(r) for r in a]}
+    cur["serve"][0]["mean_step_s"] *= 1.5
+    fails = check_sched_regression(cur, {"serve": a})
+    assert fails and "serve" in fails[0]
+    assert not check_sched_regression({"serve": a}, {"serve": b})
