@@ -24,6 +24,12 @@ Sections:
                 under a straggler profile, plus the bounded-staleness
                 τ∈{1,2,4,8} convergence-vs-staleness-vs-wall-clock
                 frontier on the mixture benchmark (experiments/sched.json)
+  fsdp        : ZeRO memory/wire frontier (opt-in) — modeled per-device
+                peak bytes and per-round wire bytes for replicated
+                two_phase vs compressed fsdp_zero2/zero3 on the dcgan32
+                parameter count; asserts zero-3 peak < replicated at
+                M=8 (experiments/fsdp.json, gated via
+                experiments/baselines/fsdp_quick.json)
   serve       : repro.serve — continuous-batching engine vs sequential
                 tokens/s (the engine must win at batch >= 4), a seeded
                 offered-QPS sweep (latency p50/p99, tokens/s, KV-block
@@ -485,6 +491,136 @@ def bench_sched(quick: bool, model_inputs=None, convergence: bool = True,
     with open(out_path, "w") as f:
         json.dump(out, f, indent=1)
     return out
+
+
+# --------------------------------------------------------------------------- #
+def _fsdp_strategies():
+    from repro.strategy import (Compression, ExchangePlan, MomentCompression,
+                                Strategy)
+
+    def fsdp(zs, mom):
+        return Strategy(
+            compression=Compression(plan="uniform"),
+            exchange=ExchangePlan(kind="two_phase", parallelism="fsdp",
+                                  zero_stage=zs, worker_axes=("data",)),
+            moments=MomentCompression(compressor=mom,
+                                      error_feedback=mom != "identity"))
+
+    repl = Strategy(compression=Compression(plan="uniform"),
+                    exchange=ExchangePlan(kind="two_phase",
+                                          worker_axes=("data",)))
+    # the f32-moment variants isolate the all-gather leg's cost: same
+    # memory frontier, 4 bytes/elem instead of ~1 on the return wire
+    return (("replicated", repl),
+            ("fsdp_zero2", fsdp(2, "qsgd8_linf")),
+            ("fsdp_zero3", fsdp(3, "qsgd8_linf")),
+            ("fsdp_zero2_f32mom", fsdp(2, "identity")),
+            ("fsdp_zero3_f32mom", fsdp(3, "identity")))
+
+
+def fsdp_model_rows(d, Ms):
+    """Deterministic per-device memory + wire rows, keyed by
+    strategy.short_hash() for the regression gate.
+
+    Memory model (f32 Adam, message='grad'): the transient gradient
+    buckets are 4d bytes on every path. Replicated DDP persists params
+    + m + v (12d). fsdp shards the Adam moments and the all-gather EF
+    residual down to 12d/W and (zero-3) adds the owner's parameter
+    shard, 4d/W; the replicated parameter copy (4d) stays in the
+    carried state on BOTH stages — the savings are the optimizer
+    state, not the weights (DESIGN.md §15.6)."""
+    rows = []
+    for name, strat in _fsdp_strategies():
+        for M in Ms:
+            W = max(M, 1)
+            if strat.exchange.fsdp:
+                persistent = 4 * d + 12 * d / W + (
+                    4 * d / W if strat.exchange.zero_stage == 3 else 0)
+            else:
+                persistent = 12 * d
+            rows.append({
+                "name": name, "M": M, "strategy": strat.short_hash(),
+                "persistent_mb": round(persistent / 1e6, 4),
+                "peak_mb": round((persistent + 4 * d) / 1e6, 4),
+                "wire_mb": round(strat.modeled_wire_bytes(d, M) / 1e6, 4),
+            })
+    return rows
+
+
+def bench_fsdp(quick: bool):
+    """ZeRO memory/wire frontier on the dcgan32 parameter count
+    (experiments/fsdp.json): modeled per-device peak bytes and
+    per-round wire bytes for replicated two_phase vs compressed
+    fsdp_zero2/zero3. The headline inequality — zero-3 peak strictly
+    below replicated at M=8 — is asserted, not just reported."""
+    from repro.models import gan
+
+    cfg = gan.GANConfig().reduced() if quick else gan.GANConfig()
+    params = gan.init(jax.random.key(0), cfg)
+    d = sum(int(l.size) for l in jax.tree.leaves(params))
+    Ms = (2, 4, 8) if quick else (2, 4, 8, 16, 32)
+    rows = fsdp_model_rows(d, Ms)
+    by = {(r["name"], r["M"]): r for r in rows}
+    for r in rows:
+        row(f"fsdp/{r['name']}/M={r['M']}", 0.0,
+            f"peak={r['peak_mb']}MB wire={r['wire_mb']}MB")
+    for M in Ms:
+        repl, z2, z3 = (by[(n, M)] for n in
+                        ("replicated", "fsdp_zero2", "fsdp_zero3"))
+        # zero-3 ties replicated exactly at M=2 (4d + 12d/2 + 4d/2 = 12d)
+        # and wins strictly from M=4 on
+        assert z3["peak_mb"] <= repl["peak_mb"], (M, z3, repl)
+        if M >= 4:
+            assert z3["peak_mb"] < repl["peak_mb"], (M, z3, repl)
+        assert z2["peak_mb"] <= z3["peak_mb"], (M, z2, z3)
+        # quantizing the moments leg shrinks the wire, never the memory
+        for name in ("fsdp_zero2", "fsdp_zero3"):
+            q, f32 = by[(name, M)], by[(name + "_f32mom", M)]
+            assert q["wire_mb"] < f32["wire_mb"], (M, q, f32)
+            assert q["peak_mb"] == f32["peak_mb"], (M, q, f32)
+    assert by[("fsdp_zero3", 8)]["peak_mb"] < by[("replicated", 8)]["peak_mb"]
+    # sharding more workers only shrinks the per-device footprint
+    for name in ("fsdp_zero2", "fsdp_zero3"):
+        peaks = [by[(name, M)]["peak_mb"] for M in Ms]
+        assert peaks == sorted(peaks, reverse=True), (name, peaks)
+    out = {"quick": quick, "d": d, "Ms": list(Ms), "rows": rows}
+    with open("experiments/fsdp.json", "w") as f:
+        json.dump(out, f, indent=1)
+    return out
+
+
+def check_fsdp_regression(current: dict, baseline: dict,
+                          tol: float = 0.10) -> list:
+    """Gate experiments/fsdp.json rows against a committed baseline:
+    rows matched by (strategy hash, M); >tol growth in modeled peak
+    memory or wire bytes fails. Same stale-baseline refusal as the
+    sched gate: zero hash matches means the schema/sweep moved."""
+    fails = []
+    base_rows = baseline.get("rows", [])
+    cur_rows = current.get("rows", [])
+    if base_rows and not all("strategy" in r for r in base_rows):
+        return [
+            "fsdp: baseline rows carry no strategy hash — regenerate "
+            "with `python -m benchmarks.run --quick --only fsdp`"]
+    base_by = {(r["strategy"], r["M"]): r for r in base_rows}
+    matched = 0
+    for r in cur_rows:
+        b = base_by.get((r["strategy"], r["M"]))
+        if b is None:
+            continue
+        matched += 1
+        for f in ("peak_mb", "wire_mb"):
+            if b.get(f) and r[f] > b[f] * (1 + tol):
+                fails.append(
+                    f"fsdp[{r['name']} M={r['M']} @{r['strategy']}] "
+                    f"{f}: {r[f]:.6g} vs baseline {b[f]:.6g} "
+                    f"(+{(r[f] / b[f] - 1) * 100:.1f}% > {tol * 100:.0f}%)")
+    if base_rows and cur_rows and matched == 0:
+        fails.append(
+            "fsdp: no current row matches any baseline row by strategy "
+            "hash — the sweep or strategy schema changed; regenerate "
+            "the baseline")
+    return fails
 
 
 # --------------------------------------------------------------------------- #
@@ -1019,18 +1155,23 @@ def main(argv=None):
     ap.add_argument("--only", default="",
                     help="comma list: convergence,speedup,compression,"
                          "kernels,comm,comm_adaptive,overlap,sched,"
-                         "serve,roofline")
+                         "serve,roofline,fsdp")
     ap.add_argument("--check-against", default="",
-                    help="baseline JSON (a committed experiments/sched.json) "
-                         "to gate the sched section against: >10% regression "
-                         "in modeled step time or wire bytes fails the run")
+                    help="baseline JSON to gate against: the sched section "
+                         "(committed experiments/baselines/sched_quick.json) "
+                         "or the fsdp section (fsdp_quick.json) — >10% "
+                         "regression in the modeled numbers fails the run")
     ap.add_argument("--obs-sink", default="", metavar="PATH",
                     help="also write every row as a repro.obs bench_row "
                          "event (JSONL) for `python -m repro.obs report`")
     args = ap.parse_args(argv)
     only = set(args.only.split(",")) if args.only else None
-    if args.check_against and (only is None or "sched" not in only):
-        ap.error("--check-against gates the sched section; add --only sched")
+    if args.check_against and (only is None or not only & {"sched", "fsdp"}):
+        ap.error("--check-against gates the sched or fsdp section; "
+                 "add --only sched or --only fsdp")
+    if args.check_against and only and {"sched", "fsdp"} <= only:
+        ap.error("--check-against takes one baseline file; gate sched and "
+                 "fsdp in separate runs")
     global _SINK
     if args.obs_sink:
         from repro import obs as obs_api
@@ -1087,6 +1228,17 @@ def main(argv=None):
             if fails:
                 sys.exit(1)
             print("# sched: regression gate passed", flush=True)
+    if only and "fsdp" in only:
+        current = bench_fsdp(args.quick)
+        if args.check_against:
+            with open(args.check_against) as f:
+                baseline = json.load(f)
+            fails = check_fsdp_regression(current, baseline)
+            for f_msg in fails:
+                print(f"REGRESSION: {f_msg}", flush=True)
+            if fails:
+                sys.exit(1)
+            print("# fsdp: regression gate passed", flush=True)
     if not only or "serve" in only:
         bench_serve(args.quick)
     if not only or "roofline" in only:

@@ -98,6 +98,8 @@ def restore(path: str, like: Any, shardings: Any = None) -> Any:
 
 def read_meta(path: str) -> dict:
     """The checkpoint's __meta__ record (step, names, embedded extras)."""
+    if is_sharded(path):
+        return read_manifest(path)
     with np.load(path, allow_pickle=False) as z:
         if "__meta__" not in z.files:
             raise ValueError(
@@ -110,6 +112,183 @@ def latest_step(path: str) -> Optional[int]:
     if not os.path.exists(path):
         return None
     return read_meta(path).get("step")
+
+
+# --------------------------------------------------------------------------- #
+# per-host sharded format (DESIGN.md §15.5): a DIRECTORY holding one
+# .npz per host plus a manifest. Leaves whose leading axis divides by the
+# shard count are split along axis 0 (the worker axis of fsdp's per-shard
+# optimizer state, so each host writes ≈ its own bytes); everything else
+# is round-robined whole. Assembly on restore is device-count agnostic —
+# chunks concatenate to the full array, then device_put to the target
+# shardings — so save-on-8 / restore-on-{1,4} resharding is the default
+# behavior, not a special case.
+# --------------------------------------------------------------------------- #
+_MANIFEST = "manifest.json"
+_SHARDED_FORMAT = "repro-sharded-v1"
+
+
+def _shard_file(i: int, n: int) -> str:
+    return f"shard-{i:05d}-of-{n:05d}.npz"
+
+
+def is_sharded(path: str) -> bool:
+    """True when `path` is a sharded-checkpoint directory."""
+    return os.path.isdir(path) and os.path.exists(
+        os.path.join(path, _MANIFEST))
+
+
+def save_sharded(path: str, tree: Any, step: Optional[int] = None,
+                 meta: Optional[dict] = None, mesh: Any = None,
+                 n_shards: Optional[int] = None) -> None:
+    """Save a pytree as a sharded-checkpoint directory. `n_shards`
+    defaults to the process (host) count; `mesh` (when given) is
+    recorded in the manifest for provenance/diagnostics — restoring onto
+    a different mesh is allowed (resharding)."""
+    reserved = {"step", "names", "format", "n_shards", "leaves",
+                "mesh"} & set(meta or {})
+    if reserved:
+        raise ValueError(
+            f"checkpoint meta keys {sorted(reserved)} are reserved for "
+            f"the manifest")
+    H = int(n_shards or max(jax.process_count(), 1))
+    os.makedirs(path, exist_ok=True)
+    named = _paths(tree)
+    leaves_rec = {}
+    shard_data = [dict() for _ in range(H)]
+    rr = 0  # round-robin cursor for unsplit leaves
+    for name, leaf in named:
+        if leaf is None:
+            continue
+        arr = np.asarray(jax.device_get(leaf))
+        split = arr.ndim >= 1 and arr.shape[0] >= H and arr.shape[0] % H == 0
+        rec = {"shape": list(arr.shape), "dtype": str(arr.dtype),
+               "split": bool(split), "chunks": []}
+        if arr.dtype == jnp.bfloat16:
+            arr = arr.view(np.uint16)
+        if split:
+            c = arr.shape[0] // H
+            for i in range(H):
+                rec["chunks"].append([i, i * c, c])
+                shard_data[i][f"{name}@{i * c}"] = arr[i * c:(i + 1) * c]
+        else:
+            owner = rr % H
+            rr += 1
+            rec["chunks"].append([owner, 0,
+                                  int(arr.shape[0]) if arr.ndim else 0])
+            shard_data[owner][f"{name}@0"] = arr
+        leaves_rec[name] = rec
+    for i in range(H):
+        with open(os.path.join(path, _shard_file(i, H)), "wb") as f:
+            np.savez(f, **shard_data[i])
+    manifest = {
+        "format": _SHARDED_FORMAT,
+        "step": step,
+        "n_shards": H,
+        "names": [n for n, _ in named],
+        "leaves": leaves_rec,
+        "mesh": (None if mesh is None else {
+            "axis_names": [str(a) for a in mesh.axis_names],
+            "shape": [int(mesh.shape[a]) for a in mesh.axis_names],
+        }),
+        **(meta or {}),
+    }
+    tmp = os.path.join(path, _MANIFEST + ".tmp")
+    with open(tmp, "w") as f:
+        json.dump(manifest, f)
+    os.replace(tmp, os.path.join(path, _MANIFEST))
+
+
+def read_manifest(path: str) -> dict:
+    mf = os.path.join(path, _MANIFEST)
+    if not os.path.exists(mf):
+        raise ValueError(
+            f"{path!r} is not a sharded repro checkpoint: no {_MANIFEST}")
+    with open(mf) as f:
+        manifest = json.load(f)
+    if manifest.get("format") != _SHARDED_FORMAT:
+        raise ValueError(
+            f"{path!r}: unknown sharded checkpoint format "
+            f"{manifest.get('format')!r} (want {_SHARDED_FORMAT!r})")
+    return manifest
+
+
+def restore_sharded(path: str, like: Any, shardings: Any = None) -> Any:
+    """Restore a sharded-checkpoint directory into the structure of
+    `like`, re-placing onto `shardings` when given. The saving and
+    restoring meshes/device counts need not match."""
+    manifest = read_manifest(path)
+    H = manifest["n_shards"]
+    missing_files = [f for f in (_shard_file(i, H) for i in range(H))
+                     if not os.path.exists(os.path.join(path, f))]
+    if missing_files:
+        raise ValueError(
+            f"sharded checkpoint {path!r} is incomplete: missing shard "
+            f"file(s) {missing_files[:4]}"
+            f"{'...' if len(missing_files) > 4 else ''}")
+    named = _paths(like)
+    shard_leaves = None
+    if shardings is not None:
+        shard_leaves = [s for _, s in _paths(shardings)]
+    recs = manifest["leaves"]
+    want = {n for n, leaf in named if leaf is not None}
+    missing = sorted(want - set(recs))
+    if missing:
+        extra = sorted(set(recs) - want)
+        raise ValueError(
+            f"sharded checkpoint {path!r} does not match the requested "
+            f"state structure: missing {missing[:5]}"
+            f"{'...' if len(missing) > 5 else ''}"
+            + (f", checkpoint-only {extra[:5]}"
+               f"{'...' if len(extra) > 5 else ''}" if extra else "")
+            + " — restore with the same config the checkpoint was saved "
+            "under")
+    files = {}
+
+    def shard(i):
+        if i not in files:
+            files[i] = np.load(os.path.join(path, _shard_file(i, H)),
+                               allow_pickle=False)
+        return files[i]
+
+    bad_shapes = [
+        f"{name}: saved {tuple(recs[name]['shape'])} != "
+        f"expected {tuple(leaf.shape)}"
+        for name, leaf in named
+        if leaf is not None and hasattr(leaf, "shape")
+        and tuple(recs[name]["shape"]) != tuple(leaf.shape)]
+    if bad_shapes:
+        raise ValueError(
+            f"sharded checkpoint {path!r} leaf shapes do not match the "
+            "requested state:\n  " + "\n  ".join(bad_shapes[:6])
+            + ("\n  ..." if len(bad_shapes) > 6 else "")
+            + "\n— per-worker state (EF residuals, fsdp shard slots) is "
+            "laid out by worker count and cannot reshard across a "
+            "different mesh; resume on the saved worker count, or "
+            "restore the params subtree only")
+    out = []
+    try:
+        for i, (name, leaf) in enumerate(named):
+            if leaf is None:
+                out.append(None)
+                continue
+            rec = recs[name]
+            parts = [shard(fi)[f"{name}@{start}"]
+                     for fi, start, _ in sorted(rec["chunks"],
+                                                key=lambda c: c[1])]
+            arr = np.concatenate(parts, axis=0) if rec["split"] else parts[0]
+            if rec["dtype"] == "bfloat16":
+                arr = arr.view(jnp.bfloat16)
+            arr = arr.reshape(rec["shape"])
+            if shard_leaves is not None and shard_leaves[i] is not None:
+                out.append(jax.device_put(arr, shard_leaves[i]))
+            else:
+                out.append(jnp.asarray(arr))
+    finally:
+        for z in files.values():
+            z.close()
+    treedef = jax.tree_util.tree_structure(like)
+    return jax.tree_util.tree_unflatten(treedef, out)
 
 
 # strategy fields that affect neither the DQState layout nor the

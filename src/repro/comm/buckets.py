@@ -16,8 +16,17 @@ padded length is divisible by ``n_workers * LANE * SUBLANE``, so
 The layout is computed once from static shapes (+ PartitionSpecs) and is a
 frozen, hashable dataclass — safe to close over in a jitted step. Leaves
 whose spec shards a dimension over a mesh axis cannot be flattened locally
-(their ravel would gather across devices); they stay on the per-tensor
-exchange path and are recorded in ``BucketLayout.skipped``.
+(their ravel would gather across devices); by default they stay on the
+per-tensor exchange path and are recorded in ``BucketLayout.skipped``.
+
+Shard-aware mode (DESIGN.md §15.1): passing ``shard_axes`` (+ the mesh
+``axis_sizes``) buckets leaves that are sharded ONLY over those axes at
+their *local* shard shape — each owner's tile enters a flat bucket,
+lane-aligned within the shard, so the fused Pallas quantize+EF kernel
+runs over shard tiles instead of the leaf bypassing buckets entirely.
+Such slots carry ``local=True``; pack/unpack then consume/produce the
+local (per-shard) arrays. Leaves sharded over any *other* axis (e.g. a
+tensor-model axis) still skip.
 """
 from __future__ import annotations
 
@@ -40,10 +49,11 @@ class LeafSlot:
     skipped (sharded) and stays on the per-tensor exchange path."""
     index: int                  # position in jax.tree.flatten order
     path: str                   # pretty key path, for planner tiers + logs
-    shape: Tuple[int, ...]
+    shape: Tuple[int, ...]      # LOCAL shape when ``local`` (shard-aware)
     size: int
     bucket: int
     offset: int                 # element offset inside the bucket's flat array
+    local: bool = False         # True: shape/size are the per-owner shard
 
 
 @dataclass(frozen=True)
@@ -92,15 +102,50 @@ def _is_shape(x) -> bool:
     return isinstance(x, tuple) and all(isinstance(i, int) for i in x)
 
 
-def _spec_shards_locally(spec, shape) -> bool:
+def _spec_shards_locally(spec, shape, axis_sizes=None) -> bool:
     """True if any tensor dim is partitioned over a mesh axis (its local
-    ravel would not be the global ravel)."""
+    ravel would not be the global ravel). With ``axis_sizes`` known,
+    'sharding' over size-1 axes (a degenerate model-parallel mesh) is
+    replication and does not count."""
     if spec is None:
         return False
     for ax in range(min(len(spec), len(shape))):
-        if spec[ax] is not None:
-            return True
+        axes = _spec_entry_axes(spec[ax])
+        if not axes:
+            continue
+        if axis_sizes and all(axis_sizes.get(a) == 1 for a in axes):
+            continue
+        return True
     return False
+
+
+def _spec_entry_axes(entry) -> Tuple[str, ...]:
+    if entry is None:
+        return ()
+    if isinstance(entry, (tuple, list)):
+        return tuple(entry)
+    return (entry,)
+
+
+def _local_shape(spec, shape, shard_axes, axis_sizes):
+    """The per-owner local shape of a sharded leaf, or None when it is
+    sharded over an axis outside ``shard_axes`` (or not evenly) and must
+    keep the per-tensor path."""
+    local = list(shape)
+    for ax in range(min(len(spec), len(shape))):
+        axes = _spec_entry_axes(spec[ax])
+        if not axes:
+            continue
+        if not all(a in shard_axes for a in axes):
+            return None
+        try:
+            div = math.prod(axis_sizes[a] for a in axes)
+        except KeyError:
+            return None
+        if div <= 0 or local[ax] % div:
+            return None
+        local[ax] //= div
+    return tuple(local)
 
 
 def _leaf_paths(shapes_tree):
@@ -114,11 +159,15 @@ def build_layout(
     specs_tree=None,
     n_workers: int = 1,
     bucket_bytes: int = DEFAULT_BUCKET_BYTES,
+    shard_axes: Tuple[str, ...] = (),
+    axis_sizes=None,
 ) -> BucketLayout:
     """Greedy first-fit bucketing in flatten order (locality-preserving, so
     a bucket usually holds adjacent layers — what the size_tiered planner
     leans on). Shapes must be tuples of ints (use jax.tree.map(lambda x:
-    tuple(x.shape), params))."""
+    tuple(x.shape), params)). With ``shard_axes`` (+ ``axis_sizes``,
+    {axis name: size}), leaves sharded only over those axes are bucketed
+    at their local shard shape instead of skipped (shard-aware mode)."""
     shapes = jax.tree.leaves(shapes_tree, is_leaf=_is_shape)
     paths = _leaf_paths(shapes_tree)
     if specs_tree is None:
@@ -141,18 +190,26 @@ def build_layout(
         buckets.append(Bucket(bid=bid, size=size, used=cur_used,
                               slots=tuple(
                                   LeafSlot(s.index, s.path, s.shape,
-                                           s.size, bid, s.offset)
+                                           s.size, bid, s.offset, s.local)
                                   for s in cur_slots)))
         cur_slots, cur_used = [], 0
 
     for idx, (shape, path, spec) in enumerate(zip(shapes, paths, specs)):
+        shape = tuple(shape)
+        is_local = False
+        if _spec_shards_locally(spec, shape, axis_sizes):
+            local = (_local_shape(spec, shape, shard_axes, axis_sizes or {})
+                     if shard_axes else None)
+            if local is None:
+                skipped.append(LeafSlot(idx, path, shape,
+                                        math.prod(shape), -1, 0))
+                continue
+            shape, is_local = local, True
         size = math.prod(shape)
-        if _spec_shards_locally(spec, shape):
-            skipped.append(LeafSlot(idx, path, tuple(shape), size, -1, 0))
-            continue
         if cur_used and cur_used + size > cap:
             close()
-        cur_slots.append(LeafSlot(idx, path, tuple(shape), size, -1, cur_used))
+        cur_slots.append(LeafSlot(idx, path, shape, size, -1, cur_used,
+                                  is_local))
         cur_used += size
     close()
 
@@ -161,9 +218,12 @@ def build_layout(
 
 
 def layout_for_params(params, specs_tree=None, n_workers: int = 1,
-                      bucket_bytes: int = DEFAULT_BUCKET_BYTES) -> BucketLayout:
+                      bucket_bytes: int = DEFAULT_BUCKET_BYTES,
+                      shard_axes: Tuple[str, ...] = (),
+                      axis_sizes=None) -> BucketLayout:
     shapes = jax.tree.map(lambda x: tuple(x.shape), params)
-    return build_layout(shapes, specs_tree, n_workers, bucket_bytes)
+    return build_layout(shapes, specs_tree, n_workers, bucket_bytes,
+                        shard_axes=shard_axes, axis_sizes=axis_sizes)
 
 
 # --------------------------------------------------------------------------- #
@@ -171,7 +231,8 @@ def layout_for_params(params, specs_tree=None, n_workers: int = 1,
 # --------------------------------------------------------------------------- #
 def pack(layout: BucketLayout, leaves, dtype=jnp.float32):
     """Gather the bucketed leaves (a flat list in tree-flatten order) into
-    one 1-D array per bucket, zero-padded to the aligned size."""
+    one 1-D array per bucket, zero-padded to the aligned size. Slots with
+    ``local=True`` expect the caller to pass the LOCAL shard array."""
     flats = []
     for b in layout.buckets:
         parts = [jnp.ravel(leaves[s.index]).astype(dtype) for s in b.slots]

@@ -22,7 +22,7 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass, field
-from typing import List, Optional
+from typing import List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -79,6 +79,7 @@ class LedgerEntry:
     carried_bytes: float
     fallback: bool = False
     bucket: int = -1         # comm-bucket id; -1 for per-tensor leaves
+    skipped: bool = False    # sharded leaf bypassing buckets (per-tensor)
 
 
 @dataclass
@@ -112,21 +113,29 @@ class CommLedger:
 
     # -- registration ------------------------------------------------------- #
     def register(self, tag, strategy, comp: C.Compressor, shape,
-                 n_workers: int, fallback: bool = False, bucket: int = -1):
+                 n_workers: int, fallback: bool = False, bucket: int = -1,
+                 skipped: bool = False, wire_bytes: Optional[float] = None,
+                 carried_bytes: Optional[float] = None):
+        """Record one per-step exchange entry; explicit wire/carried byte
+        overrides let composite exchanges (fsdp RS+AG) bill their real
+        two-leg cost instead of the single-collective model."""
         self.entries.append(LedgerEntry(
             tag=tag, strategy=strategy, compressor=comp.name,
             elems=math.prod(shape), n_workers=n_workers,
-            wire_bytes=strategy_wire_bytes(strategy, comp, shape, n_workers),
-            carried_bytes=strategy_wire_bytes(strategy, comp, shape,
-                                              n_workers, carried=True),
-            fallback=fallback, bucket=bucket,
+            wire_bytes=(strategy_wire_bytes(strategy, comp, shape, n_workers)
+                        if wire_bytes is None else wire_bytes),
+            carried_bytes=(strategy_wire_bytes(strategy, comp, shape,
+                                               n_workers, carried=True)
+                           if carried_bytes is None else carried_bytes),
+            fallback=fallback, bucket=bucket, skipped=skipped,
         ))
 
     @classmethod
     def from_plan(cls, layout: BucketLayout, plan: CommPlan, strategy: str,
                   n_workers: int, base_compressor: str,
                   leaf_plans: Optional[list] = None,
-                  family=None, budget_bytes: float = 0.0) -> "CommLedger":
+                  family=None, budget_bytes: float = 0.0,
+                  moment_compressor: Optional[str] = None) -> "CommLedger":
         """Ledger for the bucketed path: one entry per bucket (its assigned
         compressor) + one per skipped leaf on the per-tensor path.
         ``leaf_plans`` are the exchange.plan_leaf dicts for skipped leaves
@@ -137,15 +146,30 @@ class CommLedger:
         ``family`` attaches the round-adaptive PlanFamily so ticks billed
         at participants=n re-price the buckets under the selected plan;
         ``budget_bytes`` the delta_budget payload target so per-bucket
-        rows can report utilization against the effective budget."""
+        rows can report utilization against the effective budget.
+        ``moment_compressor`` marks the fsdp layout: each bucket is
+        billed for both legs (gradient reduce-scatter + moments/param
+        all-gather, exchange.modeled_fsdp_wire_bytes) instead of one
+        replicated collective."""
         if not budget_bytes and family is not None:
             budget_bytes = float(getattr(family, "budget_bytes", 0) or 0)
         led = cls(n_workers=max(n_workers, 1), family=family,
                   budget_bytes=float(budget_bytes))
         W = max(n_workers, 2)  # collective multipliers degenerate at W=1
+        mom = C.get(moment_compressor) if moment_compressor else None
         for b, a in zip(layout.buckets, plan.assignments):
-            led.register(f"bucket/{b.bid}", strategy, C.get(a.compressor),
-                         (b.size,), W, bucket=b.bid)
+            comp = C.get(a.compressor)
+            wire = carried = None
+            if mom is not None:
+                wire = X.modeled_fsdp_wire_bytes(
+                    strategy, comp, mom, (b.size,), W)
+                f = (W - 1) / W
+                carried = f * ((4 * b.size if strategy == "exact"
+                                else payload_nbytes(comp, (b.size,)))
+                               + payload_nbytes(mom, (b.size,)))
+            led.register(f"bucket/{b.bid}", strategy, comp,
+                         (b.size,), W, bucket=b.bid,
+                         wire_bytes=wire, carried_bytes=carried)
         base = C.get(base_compressor)
         for i, s in enumerate(layout.skipped):
             if leaf_plans:
@@ -155,7 +179,7 @@ class CommLedger:
                       else strategy,
                       "fallback": strategy == "two_phase"}
             led.register(f"leaf{s.path}", lp["strategy"], base, s.shape, W,
-                         fallback=lp.get("fallback", False))
+                         fallback=lp.get("fallback", False), skipped=True)
         return led
 
     @classmethod
@@ -257,6 +281,14 @@ class CommLedger:
     def n_fallbacks(self) -> int:
         return sum(1 for e in self.entries if e.fallback)
 
+    def skipped_leaves(self) -> Tuple[int, float]:
+        """(count, wire bytes/step) of sharded leaves that bypassed the
+        bucket pipeline onto the per-tensor path — the silent cost the
+        train-log warning surfaces (conservatively full-precision unless
+        leaf_plans said otherwise)."""
+        hits = [e for e in self.entries if e.skipped]
+        return len(hits), sum(e.wire_bytes for e in hits)
+
     def effective_budget(self, participants: Optional[int] = None) -> float:
         """The per-participant payload budget of a round: B at full
         participation, B·M/n when only n of M workers report (the
@@ -317,6 +349,10 @@ class CommLedger:
             "n_entries": len(self.entries),
             "n_fallbacks": self.n_fallbacks(),
         }
+        n_skip, skip_bytes = self.skipped_leaves()
+        if n_skip:
+            out["skipped_leaves"] = n_skip
+            out["skipped_leaf_bytes_per_step"] = round(skip_bytes)
         if self.last_participants is not None:
             out["participants"] = self.last_participants
         rows = self.per_bucket(self.last_participants)

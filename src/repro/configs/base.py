@@ -352,6 +352,19 @@ class DQConfig:
     # straggler profile name (sched.straggler) — consumed only by the
     # host-side wall-clock model, never by the jitted step.
     straggler_profile: str = "none"
+    # ---- parameter/optimizer-state layout (DESIGN.md §15) ---------------- #
+    # "replicated" (every worker holds params + moments, DDP) or "fsdp"
+    # (moments — and, at zero_stage=3, the authoritative params — shard
+    # across the worker axes; gradient exchange lowers onto a compressed
+    # reduce-scatter and the update returns via a compressed all-gather).
+    parallelism: str = "replicated"
+    fsdp_axis: str = "data"          # mesh axis owning the shards
+    zero_stage: int = 3              # 2 = moments sharded, 3 = params too
+    # compressor + owner-side EF for the fsdp all-gather leg (the
+    # optimizer-state exchange of arXiv 2004.14180); "identity" keeps the
+    # gather exact.
+    moment_compressor: str = "identity"
+    moment_ef: bool = True
     # repro.obs telemetry level ("off" | "wire" | "full") and phase-span
     # toggle — jit-static, contractually trajectory-invariant (excluded
     # from Strategy.short_hash(); DESIGN.md §11).

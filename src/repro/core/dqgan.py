@@ -66,6 +66,15 @@ class DQState(NamedTuple):
     #       this worker had applied at the server (the parameter-server
     #       push/pull version vector; staleness at step t = t − version).
     sched: Any = None
+    # fsdp (exchange.parallelism='fsdp', DESIGN.md §15) per-bucket shard
+    # state, {str(bid): {...}} with every leaf (W, bucket_size/W) f32
+    # sharded over the worker axes — worker m's row is its owned flat
+    # shard. Slots: "m"/"v" Adam moments (adam/oadam), "dir" previous
+    # Adam direction (oadam), "w" the authoritative parameter shard
+    # (zero_stage=3), "age" the owner-side all-gather EF residual
+    # (arXiv 2004.14180). None outside fsdp mode; replaces the
+    # replicated m/v/prev_update slots, which stay None.
+    fsdp: Any = None
 
 
 class StepOutput(NamedTuple):
@@ -139,6 +148,13 @@ class DQGAN:
         return self.strategy.compression.bucketing
 
     @property
+    def fsdp(self) -> bool:
+        """True when exchange.parallelism='fsdp': optimizer state shards
+        across the workers, gradients ride a (compressed) reduce-scatter
+        and updates/params a quantized all-gather (DESIGN.md §15)."""
+        return self.strategy.exchange.fsdp
+
+    @property
     def adaptive(self) -> bool:
         """True when a round-adaptive PlanFamily drives the bucket
         compressors (DESIGN.md §10)."""
@@ -156,13 +172,19 @@ class DQGAN:
         hit = self._comm_cache.get(cache_key)
         if hit is not None:
             return hit
+        # mesh axis sizes let the layout see degenerate (size-1) mesh
+        # axes as replication instead of sharding, so e.g. a model_n=1
+        # mesh doesn't push 'model'-spec'd leaves off the bucket path
+        axis_sizes = (dict(self.mesh.shape) if self.mesh is not None
+                      else None)
         if self.adaptive:
             layout, family = self.strategy.compression.build_family(
                 shapes, self.param_specs, self.n_workers)
             entry = (layout, family.full, family)
         else:
             layout, plan = self.strategy.compression.build(
-                shapes, self.param_specs, self.n_workers)
+                shapes, self.param_specs, self.n_workers,
+                axis_sizes=axis_sizes)
             entry = (layout, plan, None)
         self._comm_cache[cache_key] = entry
         return entry
@@ -222,7 +244,9 @@ class DQGAN:
             return CommLedger.from_plan(
                 layout, cplan, strat.exchange.kind, self.n_workers,
                 strat.compression.compressor, leaf_plans=leaf_plans,
-                family=family, budget_bytes=budget)
+                family=family, budget_bytes=budget,
+                moment_compressor=(strat.moments.compressor
+                                   if self.fsdp else None))
         return CommLedger.from_tree(
             strat.exchange.kind, strat.compression.compressor, shapes,
             self.param_specs, self.n_workers)
@@ -280,6 +304,21 @@ class DQGAN:
                 "versions": jnp.full((max(self.n_workers, 1),),
                                      -sched_c.tau, jnp.int32),
             })
+        if self.fsdp and self.strategy.exchange.zero_stage == 3:
+            # zero-3: the shard owner's parameter copy is authoritative —
+            # seed it from the packed initial params so round 0's
+            # all-gather reconstructs exactly w_0 under an exact
+            # compressor (and EF-corrects otherwise).
+            from repro.comm import buckets as B
+
+            layout, _ = self._comm(params)
+            flats = B.pack(layout, [l.astype(jnp.float32)
+                                    for l in jax.tree.leaves(params)])
+            W = max(self.n_workers, 1)
+            fb = {k: dict(v) for k, v in st.fsdp.items()}
+            for b in layout.buckets:
+                fb[str(b.bid)]["w"] = flats[b.bid].reshape(W, b.size // W)
+            st = st._replace(fsdp=fb)
         return st
 
     def _validate_lr_mults(self, params):
@@ -346,9 +385,11 @@ class DQGAN:
             prev_grad = jax.tree.map(per_worker_like, params)
 
         prev_update = None
-        if (dq.optimizer == "omd" and dq.extrapolation == "global") or (
-            dq.optimizer == "oadam"
-        ):
+        if ((dq.optimizer == "omd" and dq.extrapolation == "global")
+                or dq.optimizer == "oadam") and not self.fsdp:
+            # fsdp: oadam's previous direction shards into the per-bucket
+            # "dir" slot; omd 'global' extrapolation is rejected below
+            # (the applied-update tree never materializes at any worker).
             prev_update = jax.tree.map(param_like, params)
 
         def ef_leaf(x, plan):
@@ -371,7 +412,9 @@ class DQGAN:
             # views of it), phase-2 owner error is per-bucket.
             layout, _ = self._comm(params)
             bucket_ef = {}
-            if strat.exchange.owner_ef:
+            # fsdp has no phase-2 owner requantization — the return leg's
+            # owner residual is the per-bucket "age" slot instead of e2.
+            if strat.exchange.owner_ef and not self.fsdp:
                 for b in layout.buckets:
                     bucket_ef[str(b.bid)] = {
                         "e2": sds((W, b.size // max(W, 1)), ef_dtype,
@@ -379,8 +422,48 @@ class DQGAN:
                     }
             ef = {"leaf": ef, "bucket": bucket_ef}
 
+        fsdp = None
+        if self.fsdp:
+            layout, _ = self._comm(params)
+            if layout.skipped:
+                skipped_ix = sorted(s.index for s in layout.skipped)
+                raise ValueError(
+                    "exchange.parallelism='fsdp' needs every leaf in a "
+                    "flat bucket, but the comm planner skipped leaf "
+                    f"index(es) {skipped_ix} (sharded over axes outside "
+                    "the fsdp worker axes). Shard those leaves over the "
+                    "fsdp axis (shard-aware bucketing, DESIGN.md §15.1), "
+                    "unshard them, or use parallelism='replicated'.")
+            if dq.lr_mults:
+                raise ValueError(
+                    "lr_mults groups params by top-level key, which is "
+                    "undefined on fsdp's flat shard buckets — drop "
+                    "lr_mults or use parallelism='replicated'")
+            if dq.optimizer == "omd" and dq.extrapolation == "global":
+                raise ValueError(
+                    "extrapolation='global' needs the full applied-update "
+                    "tree, which fsdp never materializes at a single "
+                    "worker — use extrapolation='local' or "
+                    "parallelism='replicated'")
+            fsdp = {}
+            for b in layout.buckets:
+                c = b.size // max(W, 1)
+
+                def shard_like():
+                    return sds((W, c), jnp.float32, worker_spec(P()))
+
+                ent = {"age": shard_like()}
+                if self.uses_adam:
+                    ent["m"] = shard_like()
+                    ent["v"] = shard_like()
+                if dq.optimizer == "oadam":
+                    ent["dir"] = shard_like()
+                if strat.exchange.zero_stage == 3:
+                    ent["w"] = shard_like()
+                fsdp[str(b.bid)] = ent
+
         m = v = None
-        if self.uses_adam:
+        if self.uses_adam and not self.fsdp:
             m = jax.tree.map(param_like, params)
             v = jax.tree.map(param_like, params)
 
@@ -409,6 +492,7 @@ class DQGAN:
             m=m,
             v=v,
             sched=sched,
+            fsdp=fsdp,
         )
 
     def state_specs(self, params) -> DQState:
@@ -474,7 +558,8 @@ class DQGAN:
             sub = getattr(state, name)
             if sub is None:
                 return None
-            lead = wlead if name in ("prev_grad", "ef", "sched") else rep
+            lead = (wlead if name in ("prev_grad", "ef", "sched", "fsdp")
+                    else rep)
             return jax.tree.map(lambda _: lead, sub)
 
         state_specs = DQState(
@@ -486,6 +571,7 @@ class DQGAN:
             m=st_spec("m"),
             v=st_spec("v"),
             sched=st_spec("sched"),
+            fsdp=st_spec("fsdp"),
         )
         bspec = self.batch_spec
         if bspec is None:
@@ -744,6 +830,7 @@ class DQGAN:
         prev_grad = takew(state.prev_grad)
         ef = takew(state.ef)
         sched_st = takew(state.sched)
+        fsdp_st = takew(state.fsdp)
         # pending_buf: the raw delayed-schedule buffer (ring for τ>1);
         # pending: the message on the wire THIS step (its oldest slot, or
         # this worker's τ_m pull slot under a heterogeneous tau_vector)
@@ -774,9 +861,17 @@ class DQGAN:
         if (self.strategy.exchange.overlap and sched_c.overlappable
                 and pending is not None):
             with OBS.device_span("exchange", self._obs_spans):
-                finish_xchg = self._start_exchange_tree(
-                    pending, ef, plans, kq, axes, widx=widx, part=part,
-                    plan_sel=plan_sel, col=col, eager=False)
+                if self.fsdp:
+                    # fsdp overlap: only the gradient reduce-scatter is
+                    # issued here — the optimizer + all-gather + unpack
+                    # depend on the reduced shard and wait in the thunk.
+                    finish_xchg = self._start_fsdp(
+                        pending, ef, fsdp_st, params, state.step, kq,
+                        axes, widx=widx, col=col)
+                else:
+                    finish_xchg = self._start_exchange_tree(
+                        pending, ef, plans, kq, axes, widx=widx, part=part,
+                        plan_sel=plan_sel, col=col, eager=False)
 
         # ---------- extrapolation to w_{t-1/2} ---------------------------- #
         # delayed schedule: w_{t-1} is τ applied updates stale, so the OMD
@@ -837,7 +932,19 @@ class DQGAN:
             part[0] if part is not None else None, _tree_zeros, widx)
 
         # ---------- exchange + server-side update ------------------------- #
-        if exch_msg is not None:
+        new_fsdp = fsdp_st
+        if exch_msg is not None and self.fsdp:
+            # fsdp fuses exchange and apply: reduce-scatter → shard-owner
+            # optimizer → all-gather, one pass per bucket (DESIGN.md §15)
+            with OBS.device_span("exchange", self._obs_spans):
+                fin = (finish_xchg if finish_xchg is not None
+                       else self._start_fsdp(exch_msg, ef, fsdp_st, params,
+                                             state.step, kq, axes,
+                                             widx=widx, col=col))
+            with OBS.device_span("apply", self._obs_spans):
+                new_params, new_ef, new_fsdp = fin()
+            new_m, new_v, new_prev_update = state.m, state.v, state.prev_update
+        elif exch_msg is not None:
             with OBS.device_span("exchange", self._obs_spans):
                 if finish_xchg is not None:
                     # overlap: for delayed, fold returns the wire head the
@@ -900,6 +1007,7 @@ class DQGAN:
             m=new_m,
             v=new_v,
             sched=putw(new_sched),
+            fsdp=putw(new_fsdp),
         )
         out_metrics = {"loss": loss, "grad_norm": gn, "error_norm": en,
                        "staleness_max": st_max, "staleness_mean": st_mean}
@@ -1288,6 +1396,153 @@ class DQGAN:
                           "bucket": new_bucket_ef}
 
         return finish
+
+    # ------------------------------------------------------------------ #
+    # compressed-gradient FSDP (DESIGN.md §15)
+    # ------------------------------------------------------------------ #
+    def _start_fsdp(self, message, ef, fb, params, step, key, axes,
+                    widx=None, col=None):
+        """One fsdp round over the flat buckets: pack → per-bucket
+        (compressed) reduce-scatter of the gradient message (worker-side
+        e1 EF, per-bucket compressor from the comm planner) → shard-owner
+        optimizer update on its (size/W,) flat shard (`_shard_update`) →
+        quantized all-gather of the update shard (zero-2) or the updated
+        parameter shard (zero-3) under `strategy.moments`' compressor
+        with the owner-side "age" residual → unpack into the parameter
+        tree.
+
+        Split phase: this call issues the reduce-scatter wire
+        collectives; everything downstream of the optimizer (which needs
+        the reduced shard) waits in the returned thunk, so under
+        exchange.overlap only the gradient leg hides behind compute —
+        the return leg is sequential by data dependency. Returns a thunk
+        yielding (new_params, new_ef, new_fsdp_state)."""
+        from repro.comm import buckets as B
+
+        if col is None:
+            col = OBS.NullCollector()
+        dq = self.dq
+        W = self.n_workers
+        exch_c = self.strategy.exchange
+        mom_c = self.strategy.moments
+        mom_comp = mom_c.get()
+        ef_dtype = jnp.dtype(dq.ef_dtype)
+        layout, cplan = self._comm(message)
+        leaves, treedef = jax.tree.flatten(message)
+        param_leaves = treedef.flatten_up_to(params)
+
+        leaf_ef = ef["leaf"] if ef is not None else None
+        if leaf_ef is None:
+            ef_leaves = [{}] * len(leaves)
+        else:
+            ef_leaves = [e if e is not None else {}
+                         for e in treedef.flatten_up_to(leaf_ef)]
+
+        flats = B.pack(layout, leaves)
+        e1_flats = None
+        e1_leaves = None
+        if dq.error_feedback:
+            e1_leaves = [e.get("e1", jnp.zeros(l.shape, ef_dtype))
+                         for l, e in zip(leaves, ef_leaves)]
+            e1_flats = B.pack(layout, e1_leaves)
+        w_flats = B.pack(layout, [p.astype(jnp.float32)
+                                  for p in param_leaves])
+
+        started = []
+        for b, assign in zip(layout.buckets, cplan.assignments):
+            comp_b = C.get(assign.compressor)
+            est = {}
+            if dq.error_feedback:
+                est["e1"] = e1_flats[b.bid]
+            k = jax.random.fold_in(key, 100_000 + b.bid)
+            h = exch_c.start_reduce_scatter(
+                comp_b, flats[b.bid], est, k, W, dq.error_feedback,
+                widx=widx)
+            started.append((b, est, h, jax.random.fold_in(k, 1)))
+
+        def finish():
+            new_w_flats, new_e1_flats, new_fb = [], [], {}
+            for b, est, h, kag in started:
+                q_shard, ne = exch_c.finish(h)
+                if col.enabled:
+                    col.bucket(b.bid, flats[b.bid],
+                               *_obs_op_err(flats[b.bid], est, ne))
+                if dq.error_feedback:
+                    new_e1_flats.append(ne.get("e1", est.get("e1")))
+                fb_b = fb[str(b.bid)] if fb is not None else {}
+                ent, ag_in = self._shard_update(q_shard.astype(jnp.float32),
+                                                fb_b, step)
+                age = fb_b.get("age")
+                if age is None:
+                    age = jnp.zeros_like(ag_in)
+                h_ag = exch_c.start_all_gather_shard(
+                    mom_comp, ag_in, age.astype(jnp.float32), kag, W,
+                    mom_c.error_feedback, widx=widx)
+                full, new_age = exch_c.finish(h_ag)
+                ent["age"] = new_age.astype(jnp.float32)
+                new_fb[str(b.bid)] = ent
+                if exch_c.zero_stage == 3:
+                    new_w_flats.append(full)
+                else:
+                    new_w_flats.append(w_flats[b.bid] - full)
+            out_w = B.unpack_into(layout, new_w_flats, param_leaves)
+            new_params = jax.tree.unflatten(treedef, out_w)
+
+            in_bucket = {s.index for b in layout.buckets for s in b.slots}
+            new_leaf_ef = []
+            if dq.error_feedback:
+                new_e1_leaves = B.unpack_into(layout, new_e1_flats,
+                                              e1_leaves)
+            for i in range(len(leaves)):
+                if i in in_bucket and dq.error_feedback:
+                    new_leaf_ef.append({"e1": new_e1_leaves[i]})
+                else:
+                    new_leaf_ef.append(None)
+            new_ef = ef
+            if ef is not None:
+                new_ef = {"leaf": jax.tree.unflatten(treedef, new_leaf_ef),
+                          "bucket": {}}
+            return new_params, new_ef, new_fb
+
+        return finish
+
+    def _shard_update(self, q_shard, fb_b, step):
+        """The optimizer update on this worker's owned flat shard — the
+        same elementwise math as `_server_update`, applied by the shard
+        owner on its (size/W,) chunk of the reduce-scattered mean
+        message. Returns (new shard state dict, the all-gather operand:
+        the update shard for zero-2, the updated parameter shard for
+        zero-3). Bucket padding stays at zero under every optimizer
+        (zero gradient, zero moments ⇒ zero update)."""
+        dq = self.dq
+        eta = dq.lr
+        ent = {}
+        if dq.optimizer == "omd":
+            update = q_shard if dq.message == "update" else eta * q_shard
+        elif dq.optimizer in ("adam", "oadam"):
+            t = ((step + 1)
+                 // self.strategy.schedule.period).astype(jnp.float32)
+            b1, b2 = dq.beta1, dq.beta2
+            m = b1 * fb_b["m"] + (1 - b1) * q_shard
+            v = b2 * fb_b["v"] + (1 - b2) * jnp.square(q_shard)
+            bc1 = 1.0 - b1 ** t
+            bc2 = 1.0 - b2 ** t
+            direction = (m / bc1) / (jnp.sqrt(v / bc2) + dq.eps)
+            ent["m"], ent["v"] = m, v
+            if dq.optimizer == "oadam":
+                update = eta * (2.0 * direction - fb_b["dir"])
+                ent["dir"] = direction
+            else:
+                update = eta * direction
+        elif dq.optimizer == "sgd":
+            update = eta * q_shard
+        else:
+            raise ValueError(dq.optimizer)
+        if self.strategy.exchange.zero_stage == 3:
+            w = fb_b["w"] - update
+            ent["w"] = w
+            return ent, w
+        return ent, update
 
 
 def _is_ef_leaf(x):

@@ -331,6 +331,128 @@ def _rest(shape, ax):
 
 
 # --------------------------------------------------------------------------- #
+# fsdp split-phase primitives (DESIGN.md §15)
+# --------------------------------------------------------------------------- #
+def _psum_scatter(x, axes, W, widx):
+    """True reduce-scatter over the worker axes: (d,) -> (d/W,), worker w
+    receiving sum_m x_m[w·d/W:(w+1)·d/W]. Legacy-jax emulation: full psum
+    + slice at the worker's own chunk (W× the traffic, correctness-only —
+    the same CI/CPU regime as `_all_gather`'s emulation)."""
+    if _HAS_MODERN_SHARD_MAP or widx is None:
+        return jax.lax.psum_scatter(x, axes, scatter_dimension=0,
+                                    tiled=True)
+    s = jax.lax.psum(x, axes)
+    chunk = x.shape[0] // W
+    return jax.lax.dynamic_slice_in_dim(s, widx * chunk, chunk)
+
+
+def start_reduce_scatter(
+    compressor: C.Compressor,
+    kind: str,
+    p,
+    ef_state: dict,
+    key,
+    axes: Tuple[str, ...],
+    n_workers: int,
+    use_ef: bool,
+    widx=None,
+) -> ExchangeHandle:
+    """The fsdp gradient leg: (compressed) reduce-scatter of one flat,
+    worker-divisible bucket (DESIGN.md §15.2). ``p`` is (d,) with
+    d % W == 0; the handle finishes to (q_shard, new_ef_state), q_shard
+    being this worker's (d/W,) chunk of the mean message.
+
+    Split points (start | finish):
+      exact     : psum_scatter(p)/W                        | identity
+      two_phase : compress+EF per chunk, all_to_all(int8)  | dequant+mean
+
+    The compressed form is exactly phase 1 of `two_phase` — worker-side
+    e1 error feedback, int8 on the wire — without phase 2's owner
+    requantization: the shard owner consumes q_shard directly (optimizer
+    update), and what returns to the replicas is the separately
+    compressed moments leg (`start_all_gather_shard`)."""
+    W = max(n_workers, 1)
+    new_state = dict(ef_state)
+    if W <= 1 or not axes:
+        # single-worker degenerate: the shard IS the bucket; keep the
+        # compressor roundtrip so W=1 matches the W>1 math per worker
+        if kind == "exact":
+            return _resolved(kind, p, new_state)
+        e1 = ef_state.get("e1", jnp.zeros_like(p))
+        payload, p_hat, e_new = compress_with_ef(
+            compressor, p, e1, key, use_ef=use_ef)
+        del payload
+        if use_ef:
+            new_state["e1"] = e_new.astype(e1.dtype)
+        return _resolved(kind, p_hat.astype(p.dtype), new_state)
+    if kind == "exact":
+        q = _psum_scatter(p, axes, W, widx) / W
+        return _resolved(kind, q.astype(p.dtype), new_state)
+    if kind != "two_phase":
+        raise ValueError(
+            f"fsdp reduce-scatter: kind must be 'exact' or 'two_phase', "
+            f"got {kind!r}")
+    chunk = p.shape[0] // W
+    e1 = ef_state.get("e1", jnp.zeros_like(p))
+    m = p + e1.astype(p.dtype) if use_ef else p
+    x = m.reshape(W, chunk)
+    keys = jax.random.split(key, W)
+    payload = jax.vmap(compressor.compress)(x, keys)
+    if use_ef:
+        x_hat = jax.vmap(
+            lambda pl: compressor.decompress(pl, (chunk,), x.dtype)
+        )(payload)
+        new_state["e1"] = (x - x_hat).reshape(-1).astype(e1.dtype)
+    # int8 codes on the wire; leading dim becomes the source-worker index
+    moved = jax.tree.map(lambda c: _all_to_all(c, axes, W, widx), payload)
+
+    def _finish_rs():
+        contrib = jax.vmap(
+            lambda pl: compressor.decompress(pl, (chunk,), jnp.float32)
+        )(moved)
+        return jnp.mean(contrib, axis=0).astype(p.dtype), new_state
+
+    return ExchangeHandle(kind, _finish_rs)
+
+
+def start_all_gather_shard(
+    compressor: C.Compressor,
+    shard,
+    ag_ef,
+    key,
+    axes: Tuple[str, ...],
+    n_workers: int,
+    use_ef: bool,
+    widx=None,
+) -> ExchangeHandle:
+    """The fsdp return leg: (compressed) all-gather of one owner shard —
+    the quantized optimizer-state/parameter exchange of arXiv 2004.14180
+    (DESIGN.md §15.3). The owner quantizes (shard + residual) and keeps
+    e_new = (shard + e) − Q(shard + e); every worker decompresses the same
+    W payloads, so the gathered flat bucket is identical on all replicas.
+    Finishes to (full (W·chunk,) flat bucket, new owner residual)."""
+    W = max(n_workers, 1)
+    payload, c_hat, e_new = compress_with_ef(
+        compressor, shard, ag_ef, key, use_ef=use_ef)
+    new_ef = e_new if use_ef else ag_ef
+    if W <= 1 or not axes:
+        def _finish_local():
+            return c_hat.astype(shard.dtype), new_ef
+        return ExchangeHandle("allgather_shard", _finish_local)
+    del c_hat
+    gathered = jax.tree.map(lambda c: _all_gather(c, axes, W, widx),
+                            payload)
+
+    def _finish_ag():
+        chunks = jax.vmap(
+            lambda pl: compressor.decompress(pl, shard.shape, jnp.float32)
+        )(gathered)
+        return chunks.reshape(-1).astype(shard.dtype), new_ef
+
+    return ExchangeHandle("allgather_shard", _finish_ag)
+
+
+# --------------------------------------------------------------------------- #
 # modeled wire bytes (for the speedup benchmark + roofline cross-check)
 # --------------------------------------------------------------------------- #
 def transport_factor(n_workers: int) -> float:
@@ -355,3 +477,18 @@ def modeled_wire_bytes(strategy, compressor, shape, n_workers):
     if strategy == "two_phase":
         return transport_factor(n_workers) * cb  # A2A + AG, compressed
     raise ValueError(strategy)
+
+
+def modeled_fsdp_wire_bytes(kind, compressor, moment_compressor, shape,
+                            n_workers):
+    """Per-worker bytes of one fsdp round for one bucket: the gradient
+    reduce-scatter ((W−1)/W · payload sent) plus the moments/param
+    all-gather ((W−1)/W · payload). With kind='exact' and identity
+    moments this equals `modeled_wire_bytes('exact', ...)` — fsdp's
+    RS+AG *is* the ring all-reduce, split around the optimizer."""
+    d = math.prod(shape)
+    W = max(n_workers, 1)
+    f = (W - 1) / W
+    rs = 4 * d if kind == "exact" else compressor.wire_bytes(shape, W)
+    ag = moment_compressor.wire_bytes(shape, W)
+    return f * (rs + ag)

@@ -113,11 +113,19 @@ def main(argv=None):
     strategy_api.add_strategy_args(ap)
     ap.add_argument("--checkpoint", default="",
                     help="save the full DQState here (end of run + "
-                         "--checkpoint-every)")
+                         "--checkpoint-every). A path ending in .npz "
+                         "uses the single-archive format; anything else "
+                         "is a per-host sharded directory (manifest + "
+                         "one shard file per host, DESIGN.md §15.5)")
     ap.add_argument("--checkpoint-every", type=int, default=0,
                     help="also save every N steps (0 = only at the end)")
+    ap.add_argument("--checkpoint-shards", type=int, default=0,
+                    help="shard-file count for the sharded checkpoint "
+                         "format (0 = one per host)")
     ap.add_argument("--resume", default="",
-                    help="restore a full DQState checkpoint and continue")
+                    help="restore a full DQState checkpoint (either "
+                         "format; sharded checkpoints reshard onto this "
+                         "run's device count) and continue")
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--obs-sink", default="", metavar="PATH",
                     help="run-sink backend: '' (quiet stdout, the "
@@ -146,13 +154,7 @@ def main(argv=None):
     pspecs = None
     bspec = None
     if n_dev > 1:
-        from jax.sharding import PartitionSpec as P
-
-        from repro.parallel.compat import make_mesh
-        model_n = 2 if n_dev % 2 == 0 and n_dev > 2 else 1
-        mesh = make_mesh((n_dev // model_n, model_n), ("data", "model"))
         worker_axes = ("data",)
-        bspec = P(("data",))
 
     try:
         strat = strategy_api.strategy_from_args(args,
@@ -160,6 +162,19 @@ def main(argv=None):
     except strategy_api.StrategyError as e:
         ap.error(str(e))
     sched = strat.schedule.runtime()
+
+    if n_dev > 1:
+        from jax.sharding import PartitionSpec as P
+
+        from repro.parallel.compat import make_mesh
+        # fsdp shards optimizer state over the data axis and needs every
+        # leaf in a flat bucket — tensor ('model') parallelism would
+        # leave sharded leaves outside the bucketing, so it keeps a pure
+        # data mesh (DESIGN.md §15.1)
+        model_n = (2 if n_dev % 2 == 0 and n_dev > 2
+                   and not strat.exchange.fsdp else 1)
+        mesh = make_mesh((n_dev // model_n, model_n), ("data", "model"))
+        bspec = P(("data",))
 
     dq = DQConfig.from_strategy(
         strat, optimizer=args.optimizer, lr=args.lr,
@@ -182,21 +197,51 @@ def main(argv=None):
         return jax.tree.map(lambda s: NamedSharding(mesh, s),
                             trainer.state_specs(params))
 
+    def save_ckpt(path, st, step):
+        meta = {"strategy": strat.to_json()}
+        if path.endswith(".npz"):
+            checkpoint.save(path, st, step=step, meta=meta)
+        else:
+            checkpoint.save_sharded(path, st, step=step, meta=meta,
+                                    mesh=mesh,
+                                    n_shards=args.checkpoint_shards or None)
+
     start = 0
     state = trainer.init(params)
     if args.resume:
         try:
             checkpoint.verify_strategy(args.resume, strat)
+            if checkpoint.is_sharded(args.resume):
+                saved_mesh = checkpoint.read_manifest(
+                    args.resume).get("mesh")
+                cur = (None if mesh is None else
+                       {"axis_names": [str(a) for a in mesh.axis_names],
+                        "shape": [int(mesh.shape[a])
+                                  for a in mesh.axis_names]})
+                if saved_mesh != cur:
+                    print(f"# resume: resharding {saved_mesh} -> {cur}",
+                          flush=True)
+                state = checkpoint.restore_sharded(args.resume, state,
+                                                   state_shardings())
+            else:
+                state = checkpoint.restore(args.resume, state,
+                                           state_shardings())
         except (ValueError, OSError, zipfile.BadZipFile) as e:
-            # strategy mismatch, missing file, or corrupt archive — all
-            # refuse cleanly instead of a restore-time traceback
+            # strategy/shape mismatch, missing file, or corrupt archive —
+            # all refuse cleanly instead of a restore-time traceback
             raise SystemExit(f"--resume refused:\n{e}") from None
-        state = checkpoint.restore(args.resume, state, state_shardings())
         start = int(jax.device_get(state.step))
         print(f"# resumed from {args.resume} at step {start}", flush=True)
     step = jax.jit(trainer.step, static_argnums=(3,), donate_argnums=(0,))
 
     ledger = trainer.comm_ledger(params)
+    sk_n, sk_bytes = ledger.skipped_leaves()
+    if sk_n:
+        # sharded leaves that bypassed the flat-bucket pipeline ride the
+        # (slower, per-tensor) path — surface it once, loudly
+        print(f"# comm: WARNING {sk_n} sharded leaf(s) bypass bucketing "
+              f"({sk_bytes / 1e6:.2f} MB/step on the per-tensor path)",
+              flush=True)
     if strat.compression.bucketing:
         layout, cplan = trainer._comm(params)
         print(f"# comm: {layout.describe()}", flush=True)
@@ -327,8 +372,7 @@ def main(argv=None):
             if (args.checkpoint and args.checkpoint_every
                     and (i + 1) % args.checkpoint_every == 0
                     and i != args.steps - 1):
-                checkpoint.save(args.checkpoint, state, step=i + 1,
-                                meta={"strategy": strat.to_json()})
+                save_ckpt(args.checkpoint, state, i + 1)
         if profiler.step_walls:
             # close the profiled window (still under the mesh context —
             # the re-lowering below needs it). With spans on, the
@@ -342,9 +386,8 @@ def main(argv=None):
     sink.emit("comm_summary", **ledger.summary())
     sink.close()
     if args.checkpoint:
-        checkpoint.save(args.checkpoint, state,
-                        step=int(jax.device_get(state.step)),
-                        meta={"strategy": strat.to_json()})
+        save_ckpt(args.checkpoint, state,
+                  int(jax.device_get(state.step)))
         print(f"saved DQState to {args.checkpoint}")
     return history
 

@@ -24,6 +24,12 @@ pure text analysis — runnable on host CI devices, no hardware profiler:
   parameters visible in the entry signature); with ``overlap=True`` the
   exchange collectives are additionally DAG-independent of the field
   compute ("collective N overlaps compute region R", DESIGN.md §13).
+* `check_fsdp_structure(...)` — ZeRO-shaped assertions: the exchange
+  step lowers reduce-scatter/all-to-all + all-gather (not whole-payload
+  all-reduce); with ``compressed=True`` the wire payload is int8.
+  Modern shard_map lowerings only — the legacy psum_scatter emulation
+  lowers everything to all-reduce (guard on
+  ``core.exchange._HAS_MODERN_SHARD_MAP``).
 * `exchange_field_independence(txt)` — the overlap invariant on any
   backend: no exchange-scoped collective transitively consumes a
   field-scoped op, so the scheduler is FREE to run wire and compute
@@ -407,4 +413,78 @@ def assert_schedule_structure(schedule, exchange_txt: str,
         raise AssertionError(
             f"schedule structure violated for {report['schedule']}: "
             + "; ".join(report["violations"]))
+    return report
+
+
+# --------------------------------------------------------------------------- #
+def check_fsdp_structure(exchange_txt: str,
+                         compressed: bool = False) -> dict:
+    """FSDP-shaped assertions over the compiled exchange step's HLO
+    (DESIGN.md §15.4).
+
+    A ZeRO-style step must lower a *scatter* collective (reduce-scatter
+    for the exact path, all-to-all for the quantized two_phase path) to
+    move each worker's shard in, and an all-gather to broadcast the
+    shard update (zero-2) or the updated shard params (zero-3) back
+    out. It must NOT fall back to whole-payload all-reduce: the
+    all-reduce bytes that remain should be scalar metrics (loss,
+    grad_norm psums), small next to the scatter/gather payload. With
+    ``compressed=True`` the wire payload must additionally be int8.
+
+    Only meaningful on a modern shard_map lowering — the legacy
+    emulation expands psum_scatter to all-reduce + dynamic-slice, so
+    callers must guard on ``core.exchange._HAS_MODERN_SHARD_MAP``.
+    Returns {"ok": bool, "violations": [...], ...evidence};
+    `assert_fsdp_structure` raises on violations."""
+    violations: List[str] = []
+    colls = collective_summary(exchange_txt)
+
+    def cat(name):
+        return colls.get(name, {"count": 0, "bytes": 0, "int8_bytes": 0})
+
+    scatter_ops = cat("reduce-scatter")["count"] + cat("all-to-all")["count"]
+    scatter_bytes = cat("reduce-scatter")["bytes"] + cat("all-to-all")["bytes"]
+    gather = cat("all-gather")
+    ar = cat("all-reduce")
+    payload_bytes = scatter_bytes + gather["bytes"]
+    report: Dict[str, object] = {
+        "collectives": colls,
+        "scatter_ops": scatter_ops,
+        "scatter_bytes": scatter_bytes,
+        "all_gather_ops": gather["count"],
+        "all_gather_bytes": gather["bytes"],
+        "all_reduce_bytes": ar["bytes"],
+    }
+
+    if scatter_ops < 1:
+        violations.append(
+            f"fsdp exchange step lowers no scatter collective "
+            f"(reduce-scatter or all-to-all); got {sorted(colls)}")
+    if gather["count"] < 1:
+        violations.append(
+            "fsdp exchange step lowers no all-gather (the shard "
+            "update/params never return to the other workers)")
+    # whole-payload all-reduce means the sharded path silently degraded
+    # to replicated DDP; scalar metric psums are a few bytes each.
+    if payload_bytes and ar["bytes"] >= 0.5 * payload_bytes:
+        violations.append(
+            f"all-reduce bytes ({ar['bytes']:.0f}) not < half the "
+            f"scatter+gather payload ({payload_bytes:.0f}) — the fsdp "
+            f"step is moving whole-payload all-reduces")
+    if compressed:
+        i8 = sum(v["int8_bytes"] for v in colls.values())
+        report["int8_bytes"] = i8
+        if i8 <= 0:
+            violations.append(
+                "compressed fsdp step moves no int8 payload on the wire")
+    report["ok"] = not violations
+    report["violations"] = violations
+    return report
+
+
+def assert_fsdp_structure(exchange_txt: str, compressed: bool = False) -> dict:
+    report = check_fsdp_structure(exchange_txt, compressed=compressed)
+    if not report["ok"]:
+        raise AssertionError("fsdp structure violated: "
+                             + "; ".join(report["violations"]))
     return report

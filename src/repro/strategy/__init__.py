@@ -20,6 +20,7 @@ from .components import (  # noqa: F401
     SPMD_STYLES,
     Compression,
     ExchangePlan,
+    MomentCompression,
     Observability,
     Participation,
     Schedule,

@@ -23,6 +23,7 @@ from typing import Optional, Tuple
 from .components import (
     Compression,
     ExchangePlan,
+    MomentCompression,
     Observability,
     Participation,
     Schedule,
@@ -31,7 +32,7 @@ from .presets import PRESETS, get_preset
 from .strategy import Strategy
 
 _COMPONENTS = (Compression, ExchangePlan, Schedule, Participation,
-               Observability)
+               MomentCompression, Observability)
 
 
 def _cli_fields():

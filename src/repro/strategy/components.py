@@ -76,6 +76,10 @@ def _straggler_profiles():
 
 SPMD_STYLES = ("shard_map", "vmap")
 
+PARALLELISM_MODES = ("replicated", "fsdp")
+
+ZERO_STAGES = (2, 3)
+
 
 # --------------------------------------------------------------------------- #
 @dataclass(frozen=True)
@@ -164,13 +168,18 @@ class Compression:
         semantics cannot bucket)."""
         return self.plan != "none"
 
-    def build(self, shapes_tree, param_specs, n_workers: int):
+    def build(self, shapes_tree, param_specs, n_workers: int,
+              shard_axes: Tuple[str, ...] = (), axis_sizes=None):
         """(BucketLayout, CommPlan): the planner+compressor pipeline,
-        statically derived from leaf shapes (DESIGN.md §3)."""
+        statically derived from leaf shapes (DESIGN.md §3). With
+        ``shard_axes`` the layout is shard-aware: leaves sharded only
+        over those axes bucket at their local shard shape (DESIGN.md
+        §15.1) instead of bypassing buckets."""
         from repro import comm as RC
         layout = RC.build_layout(
             shapes_tree, param_specs, max(n_workers, 1),
-            bucket_bytes=int(self.bucket_mb * (1 << 20)))
+            bucket_bytes=int(self.bucket_mb * (1 << 20)),
+            shard_axes=shard_axes, axis_sizes=axis_sizes)
         plan = RC.plan_comm(
             layout, self.compressor, self.plan,
             budget_bytes=int(self.budget_mb * (1 << 20)))
@@ -211,6 +220,18 @@ class ExchangePlan:
     overlap: bool = field(default=False, metadata=_cli(
         "overlap", "start delayed(τ) collectives before the round's "
                    "compute (split-phase lowering, DESIGN.md §13)"))
+    parallelism: str = field(default="replicated", metadata=_cli(
+        "parallelism", "parameter/optimizer-state layout: every worker "
+                       "replicates (DDP) or shards ZeRO-style (fsdp, "
+                       "DESIGN.md §15)", lambda: PARALLELISM_MODES))
+    fsdp_axis: str = field(default="data", metadata=_cli(
+        "fsdp_axis", "mesh axis that owns the parameter/moment shards "
+                     "under parallelism='fsdp' (must be a worker axis)"))
+    zero_stage: int = field(default=3, metadata=_cli(
+        "zero_stage", "fsdp sharding stage: 2 shards moments (all-gather "
+                      "moves the update), 3 also keeps the authoritative "
+                      "params on the shard owner (all-gather moves the "
+                      "updated params)"))
 
     def __post_init__(self):
         if self.kind not in _exchange_kinds():
@@ -245,6 +266,37 @@ class ExchangePlan:
                 "would hide an *uncompressed* pmean, defeating the "
                 "measured-overlap comparison the flag exists for — use "
                 "kind='sim'/'allgather'/'two_phase'")
+        if self.parallelism not in PARALLELISM_MODES:
+            raise StrategyError(
+                f"exchange.parallelism: unknown mode "
+                f"{self.parallelism!r}; have {PARALLELISM_MODES}")
+        if not isinstance(self.zero_stage, int) or \
+                self.zero_stage not in ZERO_STAGES:
+            raise StrategyError(
+                f"exchange.zero_stage: must be one of {ZERO_STAGES}, "
+                f"got {self.zero_stage!r}")
+        if not isinstance(self.fsdp_axis, str) or not self.fsdp_axis:
+            raise StrategyError(
+                f"exchange.fsdp_axis: need a mesh-axis name, got "
+                f"{self.fsdp_axis!r}")
+        if self.fsdp:
+            if self.spmd == "vmap":
+                raise StrategyError(
+                    "exchange.parallelism: fsdp shards optimizer state "
+                    "across devices; spmd='vmap' simulates every worker "
+                    "on one device and has nothing to shard — use "
+                    "spmd='shard_map'")
+            if self.kind not in ("exact", "two_phase"):
+                raise StrategyError(
+                    f"exchange.kind: parallelism='fsdp' lowers the "
+                    f"gradient exchange onto a (compressed) "
+                    f"reduce-scatter, which only 'exact' and 'two_phase' "
+                    f"define — got {self.kind!r}")
+            if self.worker_axes and self.fsdp_axis not in self.worker_axes:
+                raise StrategyError(
+                    f"exchange.fsdp_axis: {self.fsdp_axis!r} is not one "
+                    f"of the worker axes {self.worker_axes!r}; the shard "
+                    f"owners are laid out along the worker axes")
 
     # ------------------------------------------------------------------ #
     def leaf_plans(self, shapes_tree, specs_tree, n_workers: int):
@@ -257,6 +309,32 @@ class ExchangePlan:
     def bucket_plan(self, size: int, n_workers: int) -> dict:
         from repro.core import exchange as X
         return X.plan_bucket(self.kind, size, max(n_workers, 1))
+
+    # ---- fsdp surface (DESIGN.md §15) --------------------------------- #
+    @property
+    def fsdp(self) -> bool:
+        """True when params/moments shard across the worker axes (the
+        typed replacement for string-matching on ``parallelism``)."""
+        return self.parallelism == "fsdp"
+
+    def start_reduce_scatter(self, compressor, p, ef_state: dict, key,
+                             n_workers: int, use_ef: bool, widx=None):
+        """Issue the (compressed) reduce-scatter of one flat bucket over
+        this plan's worker axes; the handle finishes to this worker's
+        mean shard (DESIGN.md §15.2)."""
+        from repro.core import exchange as X
+        return X.start_reduce_scatter(
+            compressor, self.kind, p, ef_state, key, self.worker_axes,
+            n_workers, use_ef, widx=widx)
+
+    def start_all_gather_shard(self, compressor, shard, ag_ef, key,
+                               n_workers: int, use_ef: bool, widx=None):
+        """Issue the (compressed) all-gather of one owner shard; the
+        handle finishes to (full flat bucket, new owner EF)."""
+        from repro.core import exchange as X
+        return X.start_all_gather_shard(
+            compressor, shard, ag_ef, key, self.worker_axes, n_workers,
+            use_ef, widx=widx)
 
     # ---- split-phase surface (DESIGN.md §13) -------------------------- #
     @property
@@ -293,6 +371,46 @@ class ExchangePlan:
         from repro.core import exchange as X
         return X.modeled_wire_bytes(self.kind, C.get(compressor),
                                     (n_elems,), n_workers)
+
+
+# --------------------------------------------------------------------------- #
+@dataclass(frozen=True)
+class MomentCompression:
+    """WHAT the fsdp all-gather moves: the compressor applied to the
+    optimizer-state exchange — the update shard (zero-2) or the updated
+    parameter shard (zero-3) each owner broadcasts after applying Adam on
+    its shard. *Quantized Adam with Error Feedback* (arXiv 2004.14180)
+    shows this leg tolerates the same δ-approximate compressor + error
+    feedback stack as the gradient; the residual lives with the shard
+    owner (one flat EF slot per bucket shard). Only consumed under
+    ``exchange.parallelism='fsdp'`` — Strategy construction refuses a
+    non-default moments slot on a replicated plan."""
+
+    compressor: str = field(default="identity", metadata=_cli(
+        "moment_compressor", "compressor for the fsdp optimizer-state / "
+        "parameter all-gather (arXiv 2004.14180)", _compressor_names))
+    error_feedback: bool = field(default=True, metadata=_cli(
+        "moment_ef", "owner-side error feedback on the quantized "
+        "all-gather shard"))
+
+    def __post_init__(self):
+        if self.compressor not in _compressor_names():
+            raise StrategyError(
+                f"moments.compressor: unknown compressor "
+                f"{self.compressor!r}; have {_compressor_names()}")
+        if not isinstance(self.error_feedback, bool):
+            raise StrategyError(
+                f"moments.error_feedback: must be a bool, got "
+                f"{self.error_feedback!r}")
+
+    @property
+    def lossless(self) -> bool:
+        return self.compressor == "identity"
+
+    def get(self):
+        """The core.compressors instance."""
+        from repro.core import compressors as C
+        return C.get(self.compressor)
 
 
 # --------------------------------------------------------------------------- #

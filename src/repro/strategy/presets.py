@@ -13,6 +13,7 @@ from typing import Dict
 from .components import (
     Compression,
     ExchangePlan,
+    MomentCompression,
     Participation,
     Schedule,
     StrategyError,
@@ -70,6 +71,21 @@ PRESETS: Dict[str, Strategy] = {
     "fsdp_vmap": Strategy(
         exchange=ExchangePlan(kind="sim", spmd="vmap",
                               worker_axes=("pod",))),
+    # ZeRO-2: Adam moments shard across the workers; gradients ride a
+    # compressed reduce-scatter, the *update* shard rides a quantized
+    # all-gather with owner-side EF (arXiv 2004.14180; DESIGN.md §15).
+    "fsdp_zero2": Strategy(
+        compression=Compression(plan="uniform"),
+        exchange=ExchangePlan(kind="two_phase", parallelism="fsdp",
+                              zero_stage=2),
+        moments=MomentCompression(compressor="qsgd8_linf")),
+    # ZeRO-3: the shard owner also keeps the authoritative params; the
+    # all-gather moves the *updated parameter* shard instead.
+    "fsdp_zero3": Strategy(
+        compression=Compression(plan="uniform"),
+        exchange=ExchangePlan(kind="two_phase", parallelism="fsdp",
+                              zero_stage=3),
+        moments=MomentCompression(compressor="qsgd8_linf")),
 }
 
 
@@ -87,6 +103,10 @@ PRESET_DOCS: Dict[str, str] = {
                   "split-phase overlapped",
     "partial_participation": "half the workers report per round",
     "fsdp_vmap": "100B-scale FSDP layout, workers as a vmapped axis",
+    "fsdp_zero2": "ZeRO-2: sharded moments, compressed reduce-scatter + "
+                  "quantized update all-gather (2004.14180)",
+    "fsdp_zero3": "ZeRO-3: sharded moments + params, quantized updated-"
+                  "param all-gather with owner EF",
 }
 
 

@@ -21,6 +21,7 @@ from typing import Any, Dict, List, Tuple
 from .components import (
     Compression,
     ExchangePlan,
+    MomentCompression,
     Observability,
     Participation,
     Schedule,
@@ -32,6 +33,7 @@ _COMPONENTS: Tuple[Tuple[str, type], ...] = (
     ("exchange", ExchangePlan),
     ("schedule", Schedule),
     ("participation", Participation),
+    ("moments", MomentCompression),
     ("observability", Observability),
 )
 
@@ -63,6 +65,11 @@ LEGACY_FIELDS: Dict[str, Tuple[str, str]] = {
     "tau_vector": ("schedule", "tau_vector"),
     "participation": ("participation", "fraction"),
     "straggler_profile": ("participation", "straggler_profile"),
+    "parallelism": ("exchange", "parallelism"),
+    "fsdp_axis": ("exchange", "fsdp_axis"),
+    "zero_stage": ("exchange", "zero_stage"),
+    "moment_compressor": ("moments", "compressor"),
+    "moment_ef": ("moments", "error_feedback"),
     "obs_metrics": ("observability", "metrics"),
     "obs_spans": ("observability", "spans"),
     "obs_profile": ("observability", "profile"),
@@ -79,6 +86,7 @@ class Strategy:
     exchange: ExchangePlan = ExchangePlan()
     schedule: Schedule = Schedule()
     participation: Participation = Participation()
+    moments: MomentCompression = MomentCompression()
     observability: Observability = Observability()
 
     def __post_init__(self):
@@ -114,6 +122,33 @@ class Strategy:
                 "observability.metrics: empirical-δ telemetry reads the "
                 "materialized EF residual (e_new = m − Q(m)); it needs "
                 "compression.error_feedback=True")
+        if self.exchange.fsdp:
+            if self.participation.partial:
+                raise StrategyError(
+                    "participation.fraction: partial participation with "
+                    "exchange.parallelism='fsdp' is undefined — a "
+                    "participation mask composes with *replicated* "
+                    "exchange only; masked reduce-scatter would average "
+                    "with silently wrong denominators on every shard. "
+                    "Use participation.fraction=1.0 with fsdp")
+            if not self.compression.bucketing:
+                raise StrategyError(
+                    "compression.plan: exchange.parallelism='fsdp' shards "
+                    "flat buckets (one lane-aligned chunk per worker); it "
+                    "needs the bucketing pipeline — set a comm plan "
+                    "(e.g. plan='uniform')")
+            if self.compression.adaptive:
+                raise StrategyError(
+                    "compression.adaptive: round-adaptive plan selection "
+                    "keys on the participant count, which fsdp pins to "
+                    "the full worker set — the combination is untested; "
+                    "use a static plan with parallelism='fsdp'")
+        elif self.moments != MomentCompression():
+            raise StrategyError(
+                "moments.compressor: the optimizer-state compression "
+                "slot is only consumed by exchange.parallelism='fsdp' "
+                "(replicated DDP never puts moments on the wire) — a "
+                "non-default moments component would be silently ignored")
 
     # ------------------------------------------------------------------ #
     # serialization: canonical, exact JSON round-trip
@@ -200,6 +235,11 @@ class Strategy:
             bits.append(f"part={p.fraction}")
         if p.straggler_profile != "none":
             bits.append(f"stragglers={p.straggler_profile}")
+        if e.fsdp:
+            bits.append(f"fsdp(zero{e.zero_stage}"
+                        + ("" if self.moments.lossless
+                           else f",moments={self.moments.compressor}")
+                        + ")")
         if e.spmd != "shard_map":
             bits.append(e.spmd)
         if self.observability.on:
@@ -239,6 +279,14 @@ class Strategy:
     # ------------------------------------------------------------------ #
     def modeled_wire_bytes(self, n_elems: int, n_workers: int) -> int:
         """Analytic per-worker bytes of one exchange of `n_elems` floats
-        under this strategy (benchmarks' wire model)."""
+        under this strategy (benchmarks' wire model). Under fsdp this is
+        the split round: gradient reduce-scatter + moments/param
+        all-gather, each leg under its own compressor."""
+        if self.exchange.fsdp:
+            from repro.core import compressors as C
+            from repro.core import exchange as X
+            return X.modeled_fsdp_wire_bytes(
+                self.exchange.kind, C.get(self.compression.compressor),
+                C.get(self.moments.compressor), (n_elems,), n_workers)
         return self.exchange.modeled_wire_bytes(
             self.compression.compressor, n_elems, n_workers)
